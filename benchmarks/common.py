@@ -1,0 +1,31 @@
+"""Shared benchmark helpers: CSV emission + default sweep settings."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+# keep benchmark wall time sane on 1 CPU core; override for precision runs
+N_SIM_REQUESTS = int(os.environ.get("REPRO_BENCH_SIM_REQUESTS", 16_000))
+P_GRID = np.array([0.4, 0.55, 0.7, 0.8, 0.9, 0.95, 0.99])
+DISKS = (500.0, 100.0, 5.0)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The scaffold's CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def row(*cols) -> None:
+    print(",".join(str(c) for c in cols))
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.time() - self.t0

@@ -1,0 +1,26 @@
+"""Paper Fig. 10: CLOCK — monotone increasing (bit-set on hits)."""
+
+import numpy as np
+
+from benchmarks.common import DISKS, N_SIM_REQUESTS, P_GRID, row
+from repro.core import clock_network
+from repro.core.simulator import simulate_network
+
+
+def main() -> dict:
+    print("# fig10_clock: X in Mreq/s")
+    row("disk_us", "p_hit", "x_theory", "x_sim")
+    out = {}
+    for disk in DISKS:
+        net = clock_network(disk_us=disk)
+        sim = simulate_network(net, P_GRID, n_requests=N_SIM_REQUESTS, seeds=(0,))
+        for i, p in enumerate(P_GRID):
+            row(disk, f"{p:.2f}", f"{net.throughput_upper(p):.4f}",
+                f"{sim.throughput[i]:.4f}")
+        assert sim.throughput[-1] >= 0.9 * max(sim.throughput)
+        out[disk] = sim.throughput
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Fig. 12: Segmented LRU across disk latency {500,100,5}us and
+MPL {72,144}: p* moves earlier with faster disks and more cores."""
+
+import numpy as np
+
+from benchmarks.common import DISKS, N_SIM_REQUESTS, P_GRID, row
+from repro.core import slru_network
+from repro.core.simulator import simulate_network
+
+
+def main() -> dict:
+    print("# fig12_slru: X in Mreq/s")
+    row("mpl", "disk_us", "p_hit", "x_theory", "x_sim", "p_star")
+    stars = {}
+    for mpl in (72, 144):
+        for disk in DISKS:
+            net = slru_network(disk_us=disk, mpl=mpl)
+            p_star = net.p_star()
+            stars[(mpl, disk)] = p_star
+            sim = simulate_network(net, P_GRID, n_requests=N_SIM_REQUESTS,
+                                   seeds=(0,))
+            for i, p in enumerate(P_GRID):
+                row(mpl, disk, f"{p:.2f}", f"{net.throughput_upper(p):.4f}",
+                    f"{sim.throughput[i]:.4f}",
+                    f"{p_star:.3f}" if i == 0 else "")
+    # trends
+    for disk in DISKS:
+        assert stars[(144, disk)] <= stars[(72, disk)] + 1e-9
+    for mpl in (72, 144):
+        assert stars[(mpl, 5.0)] <= stars[(mpl, 500.0)] + 1e-9
+    return stars
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig. 5: FIFO — throughput strictly increases with hit ratio."""
+
+import numpy as np
+
+from benchmarks.common import DISKS, N_SIM_REQUESTS, P_GRID, row
+from repro.core import fifo_network
+from repro.core.harness import measure_cache
+from repro.core.simulator import simulate_network
+
+
+def main() -> dict:
+    print("# fig5_fifo: policy=fifo, X in Mreq/s")
+    row("disk_us", "p_hit", "x_theory", "x_sim")
+    out = {}
+    for disk in DISKS:
+        net = fifo_network(disk_us=disk)
+        sim = simulate_network(net, P_GRID, n_requests=N_SIM_REQUESTS, seeds=(0,))
+        for i, p in enumerate(P_GRID):
+            row(disk, f"{p:.2f}", f"{net.throughput_upper(p):.4f}",
+                f"{sim.throughput[i]:.4f}")
+        assert np.all(np.diff(sim.throughput) > -0.02 * sim.throughput[:-1]), \
+            f"FIFO not monotone at disk={disk}"
+        out[disk] = sim.throughput
+    return out
+
+
+if __name__ == "__main__":
+    main()

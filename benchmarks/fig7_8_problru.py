@@ -1,0 +1,29 @@
+"""Paper Figs. 7-8: Probabilistic LRU at q=0.5 (LRU-like) and
+q = 1 - 1/72 (FIFO-like)."""
+
+import numpy as np
+
+from benchmarks.common import N_SIM_REQUESTS, P_GRID, row
+from repro.core import prob_lru_network
+from repro.core.simulator import simulate_network
+
+
+def main() -> dict:
+    print("# fig7_8_problru: X in Mreq/s (disk=100us)")
+    row("q", "p_hit", "x_theory", "x_sim")
+    out = {}
+    for q in (0.5, 1.0 - 1.0 / 72.0):
+        net = prob_lru_network(q=q, disk_us=100.0)
+        sim = simulate_network(net, P_GRID, n_requests=N_SIM_REQUESTS, seeds=(0,))
+        for i, p in enumerate(P_GRID):
+            row(f"{q:.3f}", f"{p:.2f}", f"{net.throughput_upper(p):.4f}",
+                f"{sim.throughput[i]:.4f}")
+        out[q] = sim.throughput
+    lo, hi = out[0.5], out[1.0 - 1.0 / 72.0]
+    assert lo[-1] < max(lo), "q=0.5 must invert (LRU-like)"
+    assert hi[-1] >= 0.95 * max(hi), "q=1-1/72 must be ~monotone (FIFO-like)"
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Kernel microbenches (interpret mode on CPU: correctness + call overhead;
+real perf comes from the TPU lowering — the dry-run roofline covers that)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.time() - t0) / n * 1e6
+
+
+def main() -> dict:
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    out = {}
+
+    B, T, H, KV, dh = 1, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, KV, dh))
+    v = jax.random.normal(ks[2], (B, T, KV, dh))
+    us = _time(ops.flash_attention, q, k, v, causal=True, interpret=True)
+    err = np.max(np.abs(
+        np.asarray(ops.flash_attention(q, k, v, causal=True, interpret=True))
+        - np.asarray(ref.flash_attention_ref(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2)).swapaxes(1, 2))))
+    emit("flash_attention_256", us, f"max_err={err:.2e}")
+    out["flash"] = err
+
+    P, page, n_pages = 16, 16, 4
+    qd = jax.random.normal(ks[0], (2, H, dh))
+    pk = jax.random.normal(ks[1], (P, page, KV, dh))
+    pv = jax.random.normal(ks[2], (P, page, KV, dh))
+    bt = jnp.arange(2 * n_pages, dtype=jnp.int32).reshape(2, n_pages)
+    sl = jnp.array([60, 33], jnp.int32)
+    us = _time(ops.paged_attention, qd, pk, pv, bt, sl, interpret=True)
+    err = np.max(np.abs(
+        np.asarray(ops.paged_attention(qd, pk, pv, bt, sl, interpret=True))
+        - np.asarray(ref.paged_attention_ref(qd, pk, pv, bt, sl))))
+    emit("paged_attention_4pages", us, f"max_err={err:.2e}")
+    out["paged"] = err
+
+    r = jax.random.normal(ks[0], (1, 128, 2, 32))
+    kk = jax.random.normal(ks[1], (1, 128, 2, 32))
+    vv = jax.random.normal(ks[2], (1, 128, 2, 32))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (1, 128, 2, 32)))
+    u = jax.random.normal(ks[4], (2, 32))
+    us = _time(ops.wkv6_scan, r, kk, vv, w, u, chunk=64, interpret=True)
+    err = np.max(np.abs(
+        np.asarray(ops.wkv6_scan(r, kk, vv, w, u, chunk=64, interpret=True))
+        - np.asarray(ref.wkv6_scan_ref(r, kk, vv, w, u))))
+    emit("wkv6_scan_128", us, f"max_err={err:.2e}")
+    out["wkv"] = err
+
+    ts = jax.random.randint(ks[0], (2048,), 0, 10_000, dtype=jnp.int32)
+    acc = jax.random.choice(ks[1], 2048, (128,), replace=False).astype(jnp.int32)
+    us = _time(ops.lru_batch_update, ts, acc, jnp.int32(99_999), tile=512,
+               interpret=True)
+    new_ts, victim = ops.lru_batch_update(ts, acc, jnp.int32(99_999),
+                                          tile=512, interpret=True)
+    ref_ts, _ = ref.lru_batch_update_ref(ts, acc, jnp.int32(99_999))
+    emit("lru_batch_update_2048", us,
+         f"exact={bool(np.array_equal(np.asarray(new_ts), np.asarray(ref_ts)))}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

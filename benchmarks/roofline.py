@@ -1,0 +1,48 @@
+"""§Roofline report: read the dry-run JSONs and print the per-cell table."""
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+
+def load(mesh="single"):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        rec = json.load(open(path))
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def main() -> dict:
+    recs = load("single")
+    if not recs:
+        print("# roofline: no dry-run results yet "
+              "(run python -m repro.launch.dryrun --all)")
+        return {}
+    print("# roofline (single pod, 256 chips, per-device terms)")
+    row("arch", "shape", "compute_ms", "memory_ms", "collective_ms",
+        "dominant", "roofline_frac", "peak_GiB", "note")
+    for (arch, shape), rec in sorted(recs.items()):
+        if "error" in rec:
+            row(arch, shape, "ERROR", rec["error"][:60], "", "", "", "", "")
+            continue
+        if "skipped" in rec:
+            row(arch, shape, "skipped", rec["skipped"], "", "", "", "", "")
+            continue
+        r = rec["roofline"]
+        env = max(r["compute_s"], r["memory_s"])
+        frac = env / max(env, r["collective_s"]) if env else 0.0
+        row(arch, shape, f"{r['compute_s']*1e3:.2f}", f"{r['memory_s']*1e3:.2f}",
+            f"{r['collective_s']*1e3:.2f}", r["dominant"].replace("_s", ""),
+            f"{frac:.3f}",
+            f"{rec['memory'].get('peak_memory_in_bytes',0)/2**30:.2f}",
+            rec.get("note", ""))
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark suite entry point: one module per paper table/figure plus the
+beyond-paper serving integration, kernel microbenches, and the roofline
+report.  Each prints CSV; failures raise (the paper's qualitative claims
+are asserted inside each benchmark).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3_lru,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    "fig3_lru",  # Fig. 1/3 + Eq. (1)-(3)
+    "fig5_fifo",  # Fig. 5 + Eq. (4)-(6)
+    "fig7_8_problru",  # Figs. 7-8
+    "fig10_clock",  # Fig. 10
+    "fig12_slru",  # Fig. 12 (disk x MPL trends)
+    "fig14_s3fifo",  # Fig. 14
+    "table2_classify",  # Tables 1-2
+    "bypass_mitigation",  # Sec. 5.2
+    "serving_integration",  # beyond-paper: prefix-cache controller at pod scale
+    "kernel_bench",  # Pallas kernels (interpret mode)
+    "roofline",  # §Roofline report from the dry-run sweep
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+
+    failures = []
+    for name in BENCHES:
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"[{name}: ok in {time.time()-t0:.1f}s]", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

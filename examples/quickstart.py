@@ -1,0 +1,42 @@
+"""Quickstart: the paper's three-pronged study in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the LRU and S3-FIFO queueing models, derives the analytic throughput
+bound, simulates the exact network, drives the real cache implementation,
+and prints where LRU's throughput inverts (the paper's headline).
+"""
+
+import numpy as np
+
+from repro.core import build
+from repro.core.harness import measure_cache
+from repro.core.simulator import simulate_network
+
+P = np.array([0.5, 0.7, 0.85, 0.95, 0.99])
+
+for policy in ("lru", "s3fifo"):
+    net = build(policy, disk_us=100.0)  # 72-core closed loop, 100us disk
+
+    # Prong A: analytic upper bound (Thm 7.1) + critical hit ratio
+    bound = net.throughput_upper(P)
+    p_star = net.p_star()
+
+    # Prong B: event-driven simulation of the exact network
+    sim = simulate_network(net, P, n_requests=12_000, seeds=(0,))
+
+    # Prong C: the real (array-based) cache under a Zipf workload
+    meas = measure_cache(policy, capacity=512, key_space=4096,
+                         n_requests=30_000)
+
+    print(f"\n=== {policy.upper()}  (p* = {p_star:.3f})")
+    print("p_hit      " + "  ".join(f"{p:6.2f}" for p in P))
+    print("X theory   " + "  ".join(f"{x:6.3f}" for x in bound))
+    print("X sim      " + "  ".join(f"{x:6.3f}" for x in sim.throughput))
+    print(f"impl: measured hit ratio {meas.hit_ratio:.3f} at 512 pages, "
+          f"X bound {meas.throughput_bound():.3f} Mreq/s")
+    if p_star < 0.99:
+        print(f"  -> raising hit ratio past {p_star:.2f} HURTS throughput "
+              f"(hit-path delink becomes the bottleneck)")
+    else:
+        print("  -> throughput is monotone in hit ratio (no hit-path ops)")

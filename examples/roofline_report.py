@@ -1,0 +1,17 @@
+"""Render the §Roofline table (plus multi-pod deltas) from the dry-run JSONs.
+
+    PYTHONPATH=src:. python examples/roofline_report.py
+"""
+
+from benchmarks.roofline import load, main
+
+main()
+multi = load("multi")
+if multi:
+    print("\n# multi-pod (512 chips) spot-check: collective deltas")
+    single = load("single")
+    for key in sorted(multi):
+        if key in single and "roofline" in multi[key] and "roofline" in single[key]:
+            s, m = single[key]["roofline"], multi[key]["roofline"]
+            print(f"{key[0]:24s} {key[1]:12s} coll {s['collective_s']*1e3:8.2f}ms"
+                  f" -> {m['collective_s']*1e3:8.2f}ms")

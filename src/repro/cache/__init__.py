@@ -1,0 +1,18 @@
+"""repro.cache — array-based, jittable cache eviction policies (prong C).
+
+The policies of the paper's Table 1 (+ SIEVE), each available in two
+property-tested-equivalent forms:
+
+  * :mod:`repro.cache.policies` — pure-JAX, jit/scan-compatible, for
+    on-device use and the TPU-batched adaptation;
+  * :mod:`repro.cache.py_ref`  — Python references, used by the host-side
+    serving controller and as hypothesis oracles.
+
+The linked-list primitives in :mod:`repro.cache.dlist` map 1:1 to the
+paper's queue stations (delink / head update / tail update).
+"""
+
+from repro.cache.policies import POLICIES, AccessResult, OpCounts, run_trace
+from repro.cache.py_ref import PY_POLICIES
+
+__all__ = ["POLICIES", "PY_POLICIES", "AccessResult", "OpCounts", "run_trace"]

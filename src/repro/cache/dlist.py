@@ -1,0 +1,91 @@
+"""Array-based doubly-linked list over cache slots — jittable.
+
+This is the paper's "global linked list": the three primitive operations are
+exactly the paper's three queue stations:
+
+  * :func:`delink`    — the *delink* operation (S_delink), hit path of LRU
+  * :func:`push_head` — the *cache head update* (S_head)
+  * :func:`pop_tail`  — the *cache tail update* (S_tail), miss path
+
+On a CPU these serialize under a lock (the paper's bottleneck).  On TPU we
+keep them as pure array updates so a whole batch of them can be fused and
+vectorized (see kernels/cache_update.py) — the hardware adaptation discussed
+in DESIGN.md §3.
+
+Slots are int32 in [0, capacity); -1 is the nil sentinel.  An empty list has
+head == tail == -1.  All functions are total: delinking a slot that is not
+in the list is undefined behaviour (callers maintain membership).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+NIL = -1
+
+
+class DList(NamedTuple):
+    prv: jnp.ndarray  # (C,) int32
+    nxt: jnp.ndarray  # (C,) int32
+    head: jnp.ndarray  # () int32
+    tail: jnp.ndarray  # () int32
+
+
+def empty(capacity: int) -> DList:
+    return DList(
+        prv=jnp.full((capacity,), NIL, jnp.int32),
+        nxt=jnp.full((capacity,), NIL, jnp.int32),
+        head=jnp.int32(NIL),
+        tail=jnp.int32(NIL),
+    )
+
+
+def delink(dl: DList, s) -> DList:
+    """Remove slot ``s`` from the list (the paper's S_delink)."""
+    s = jnp.int32(s)
+    p, n = dl.prv[s], dl.nxt[s]
+    # fix neighbours (guard NIL with clamped writes that we then select away)
+    nxt = dl.nxt.at[jnp.maximum(p, 0)].set(jnp.where(p == NIL, dl.nxt[jnp.maximum(p, 0)], n))
+    prv = dl.prv.at[jnp.maximum(n, 0)].set(jnp.where(n == NIL, dl.prv[jnp.maximum(n, 0)], p))
+    head = jnp.where(dl.head == s, n, dl.head)
+    tail = jnp.where(dl.tail == s, p, dl.tail)
+    prv = prv.at[s].set(NIL)
+    nxt = nxt.at[s].set(NIL)
+    return DList(prv, nxt, head, tail)
+
+
+def push_head(dl: DList, s) -> DList:
+    """Attach slot ``s`` at the head (the paper's S_head, cache head update)."""
+    s = jnp.int32(s)
+    old = dl.head
+    nxt = dl.nxt.at[s].set(old)
+    prv = dl.prv.at[s].set(NIL)
+    prv = prv.at[jnp.maximum(old, 0)].set(jnp.where(old == NIL, prv[jnp.maximum(old, 0)], s))
+    tail = jnp.where(dl.tail == NIL, s, dl.tail)
+    return DList(prv, nxt, jnp.int32(s), tail)
+
+
+def pop_tail(dl: DList):
+    """Detach and return the tail slot (the paper's S_tail, cache tail update).
+
+    Returns (list, slot); slot == NIL when the list is empty.
+    """
+    s = dl.tail
+    dl2 = lax.cond(s == NIL, lambda d: d, lambda d: delink(d, s), dl)
+    return dl2, s
+
+
+def is_member(dl: DList, s) -> jnp.ndarray:
+    """Membership test (O(1) via link fields + head check)."""
+    s = jnp.int32(s)
+    return (dl.prv[s] != NIL) | (dl.nxt[s] != NIL) | (dl.head == s)
+
+
+def length(dl: DList, capacity: int) -> jnp.ndarray:
+    """O(C) membership count — debugging/tests only."""
+    idx = jnp.arange(capacity, dtype=jnp.int32)
+    member = (dl.prv[idx] != NIL) | (dl.nxt[idx] != NIL) | (dl.head == idx)
+    return member.sum()

@@ -1,0 +1,723 @@
+"""Jittable cache eviction policies over a bounded key space.
+
+Every policy in the paper's Table 1 (plus SIEVE from Table 2), implemented
+as pure functions over array state so they can run under ``jax.jit`` — on
+the host controller, inside a serving step, or on-device.
+
+Uniform interface::
+
+    state = <policy>.init(capacity, key_space, **params)
+    state, res = <policy>.access(state, key, u)   # u: uniform sample in [0,1)
+
+``res`` is an :class:`AccessResult` carrying the hit flag, the evicted key
+(or -1), and **op counts mapped to the paper's queue stations** (delink /
+head-update / tail-update / tail-scan).  The op counts are what couples this
+layer to the queueing model: a virtual-time closed-loop harness charges each
+op its calibrated service time (see repro.core.harness).
+
+Keys are ints in [0, key_space) — in the serving layer they are KV block
+ids, which are bounded by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.cache import dlist
+from repro.cache.dlist import NIL, DList
+
+
+class OpCounts(NamedTuple):
+    delink: jnp.ndarray  # promotions removed from the middle of a list
+    head: jnp.ndarray  # head updates
+    tail: jnp.ndarray  # tail updates (evictions/demotions)
+    scan: jnp.ndarray  # extra tail-scan steps (CLOCK/SIEVE/S3-FIFO)
+
+
+def _ops(delink=0, head=0, tail=0, scan=0) -> OpCounts:
+    return OpCounts(*(jnp.int32(v) for v in (delink, head, tail, scan)))
+
+
+def _ops_add(a: OpCounts, b: OpCounts) -> OpCounts:
+    return OpCounts(*(x + y for x, y in zip(a, b)))
+
+
+class AccessResult(NamedTuple):
+    hit: jnp.ndarray  # bool
+    evicted_key: jnp.ndarray  # int32, -1 if none
+    slot: jnp.ndarray  # slot the key now occupies
+    ops: OpCounts
+
+
+class Table(NamedTuple):
+    """key<->slot mapping over a bounded key space."""
+
+    key2slot: jnp.ndarray  # (K,) int32, NIL when absent
+    slot2key: jnp.ndarray  # (C,) int32
+    size: jnp.ndarray  # () int32
+
+
+def _table_init(capacity: int, key_space: int) -> Table:
+    return Table(
+        key2slot=jnp.full((key_space,), NIL, jnp.int32),
+        slot2key=jnp.full((capacity,), NIL, jnp.int32),
+        size=jnp.int32(0),
+    )
+
+
+def _table_assign(t: Table, key, slot) -> Table:
+    return Table(t.key2slot.at[key].set(slot), t.slot2key.at[slot].set(key), t.size)
+
+
+def _table_evict(t: Table, slot) -> tuple:
+    old_key = t.slot2key[slot]
+    k2s = jnp.where(
+        old_key == NIL, t.key2slot, t.key2slot.at[jnp.maximum(old_key, 0)].set(NIL)
+    )
+    return Table(k2s, t.slot2key.at[slot].set(NIL), t.size), old_key
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyDef:
+    """A policy as a pair of pure functions (init, access)."""
+
+    name: str
+    init: Callable[..., Any]
+    access: Callable[..., Any]  # (state, key, u) -> (state, AccessResult)
+    lru_like: bool  # paper Sec. 5.1 classification (ground truth for tests)
+
+
+# ---------------------------------------------------------------------------
+# LRU  (paper Sec. 3) — hit: delink + head update; miss: tail + head update.
+# ---------------------------------------------------------------------------
+
+
+class LRUState(NamedTuple):
+    table: Table
+    dl: DList
+    capacity: jnp.ndarray  # () int32
+
+
+def lru_init(capacity: int, key_space: int) -> LRUState:
+    return LRUState(_table_init(capacity, key_space), dlist.empty(capacity),
+                    jnp.int32(capacity))
+
+
+def _fresh_or_tail(table: Table, dl: DList, capacity):
+    """Allocate a slot: unused slot while warming, else evict the tail."""
+
+    def fresh(args):
+        table, dl = args
+        slot = table.size
+        return table, dl, slot, jnp.int32(NIL), _ops()
+
+    def evict(args):
+        table, dl = args
+        dl, victim = dlist.pop_tail(dl)
+        table, old_key = _table_evict(table, victim)
+        return table, dl, victim, old_key, _ops(tail=1)
+
+    return lax.cond(table.size < capacity, fresh, evict, (table, dl))
+
+
+def lru_access(state: LRUState, key, u=0.0):
+    del u
+    table, dl, cap = state
+    slot = table.key2slot[key]
+    hit = slot != NIL
+
+    def on_hit(args):
+        table, dl = args
+        d2 = dlist.push_head(dlist.delink(dl, slot), slot)
+        return table, d2, slot, jnp.int32(NIL), _ops(delink=1, head=1)
+
+    def on_miss(args):
+        table, dl = args
+        table, dl, new_slot, old_key, ops = _fresh_or_tail(table, dl, cap)
+        dl = dlist.push_head(dl, new_slot)
+        table = _table_assign(table, key, new_slot)
+        table = Table(table.key2slot, table.slot2key,
+                      jnp.minimum(table.size + 1, cap))
+        return table, dl, new_slot, old_key, _ops_add(ops, _ops(head=1))
+
+    table, dl, slot_out, evicted, ops = lax.cond(hit, on_hit, on_miss, (table, dl))
+    return LRUState(table, dl, cap), AccessResult(hit, evicted, slot_out, ops)
+
+
+# ---------------------------------------------------------------------------
+# FIFO  (paper Sec. 4.1) — hit: nothing; miss: tail + head update.
+# ---------------------------------------------------------------------------
+
+
+def fifo_access(state: LRUState, key, u=0.0):
+    del u
+    table, dl, cap = state
+    slot = table.key2slot[key]
+    hit = slot != NIL
+
+    def on_hit(args):
+        table, dl = args
+        return table, dl, slot, jnp.int32(NIL), _ops()
+
+    def on_miss(args):
+        table, dl = args
+        table, dl, new_slot, old_key, ops = _fresh_or_tail(table, dl, cap)
+        dl = dlist.push_head(dl, new_slot)
+        table = _table_assign(table, key, new_slot)
+        table = Table(table.key2slot, table.slot2key,
+                      jnp.minimum(table.size + 1, cap))
+        return table, dl, new_slot, old_key, _ops_add(ops, _ops(head=1))
+
+    table, dl, slot_out, evicted, ops = lax.cond(hit, on_hit, on_miss, (table, dl))
+    return LRUState(table, dl, cap), AccessResult(hit, evicted, slot_out, ops)
+
+
+# ---------------------------------------------------------------------------
+# Probabilistic LRU  (paper Sec. 4.2) — promote on hit only w.p. (1 - q).
+# ---------------------------------------------------------------------------
+
+
+class ProbLRUState(NamedTuple):
+    table: Table
+    dl: DList
+    capacity: jnp.ndarray
+    q: jnp.ndarray  # () f32
+
+
+def prob_lru_init(capacity: int, key_space: int, q: float = 0.5) -> ProbLRUState:
+    return ProbLRUState(_table_init(capacity, key_space), dlist.empty(capacity),
+                        jnp.int32(capacity), jnp.float32(q))
+
+
+def prob_lru_access(state: ProbLRUState, key, u):
+    table, dl, cap, q = state
+    inner = LRUState(table, dl, cap)
+    slot = table.key2slot[key]
+    hit = slot != NIL
+    promote = hit & (jnp.float32(u) >= q)
+
+    def do_lru(s):
+        return lru_access(s, key)
+
+    def do_fifo(s):
+        return fifo_access(s, key)
+
+    # hit+promote -> LRU behaviour; hit+skip -> no-op; miss -> same either way.
+    (table2, dl2, _), res = lax.cond(promote | ~hit, do_lru, do_fifo, inner)
+    return ProbLRUState(table2, dl2, cap, q), res
+
+
+# ---------------------------------------------------------------------------
+# CLOCK / FIFO-Reinsertion  (paper Sec. 4.3)
+# ---------------------------------------------------------------------------
+
+
+class ClockState(NamedTuple):
+    table: Table
+    dl: DList
+    bit: jnp.ndarray  # (C,) bool
+    capacity: jnp.ndarray
+    max_scan: jnp.ndarray  # () int32 — paper scans <= 3 before forced evict
+
+
+def clock_init(capacity: int, key_space: int, max_scan: int = 3) -> ClockState:
+    return ClockState(_table_init(capacity, key_space), dlist.empty(capacity),
+                      jnp.zeros((capacity,), bool), jnp.int32(capacity),
+                      jnp.int32(max_scan))
+
+
+def _clock_evict(dl: DList, bit, max_scan):
+    """Scan from the tail; reinsert 1-bit items (clearing), evict first 0-bit.
+
+    After ``max_scan`` reinserts, evict the current tail regardless (paper's
+    bounded scan, Sec. 4.3).  Returns (dl, bit, victim, ops).
+    """
+
+    def cond(carry):
+        dl, bit, scans, done, _ = carry
+        return (~done) & (scans <= max_scan)
+
+    def body(carry):
+        dl, bit, scans, done, victim = carry
+        s = dl.tail
+        give_chance = bit[s] & (scans < max_scan)
+
+        def reinsert(args):
+            dl, bit = args
+            d2, t = dlist.pop_tail(dl)
+            d2 = dlist.push_head(d2, t)
+            return d2, bit.at[t].set(False), jnp.int32(NIL), False
+
+        def evict(args):
+            dl, bit = args
+            d2, t = dlist.pop_tail(dl)
+            return d2, bit, t, True
+
+        dl, bit, v, now_done = lax.cond(give_chance, reinsert, evict, (dl, bit))
+        return dl, bit, scans + 1, now_done, jnp.where(now_done, v, victim)
+
+    dl, bit, scans, _, victim = lax.while_loop(
+        cond, body, (dl, bit, jnp.int32(0), False, jnp.int32(NIL))
+    )
+    # ops: one tail update for the eviction + (scans-1) reinsertion scans,
+    # each reinsertion also a head update.
+    n_reinsert = scans - 1
+    return dl, bit, victim, _ops(tail=1, scan=0) ._replace(
+        scan=n_reinsert, head=n_reinsert
+    )
+
+
+def clock_access(state: ClockState, key, u=0.0):
+    del u
+    table, dl, bit, cap, max_scan = state
+    slot = table.key2slot[key]
+    hit = slot != NIL
+
+    def on_hit(args):
+        table, dl, bit = args
+        return table, dl, bit.at[slot].set(True), slot, jnp.int32(NIL), _ops()
+
+    def on_miss(args):
+        table, dl, bit = args
+
+        def fresh(args):
+            table, dl, bit = args
+            return table, dl, bit, table.size, jnp.int32(NIL), _ops()
+
+        def evict(args):
+            table, dl, bit = args
+            dl, bit, victim, ops = _clock_evict(dl, bit, max_scan)
+            table, old_key = _table_evict(table, victim)
+            return table, dl, bit, victim, old_key, ops
+
+        table, dl, bit, new_slot, old_key, ops = lax.cond(
+            table.size < cap, fresh, evict, (table, dl, bit)
+        )
+        dl = dlist.push_head(dl, new_slot)
+        bit = bit.at[new_slot].set(False)
+        table = _table_assign(table, key, new_slot)
+        table = Table(table.key2slot, table.slot2key, jnp.minimum(table.size + 1, cap))
+        return table, dl, bit, new_slot, old_key, _ops_add(ops, _ops(head=1))
+
+    table, dl, bit, slot_out, evicted, ops = lax.cond(
+        hit, on_hit, on_miss, (table, dl, bit)
+    )
+    return ClockState(table, dl, bit, cap, max_scan), AccessResult(
+        hit, evicted, slot_out, ops
+    )
+
+
+# ---------------------------------------------------------------------------
+# Segmented LRU  (paper Sec. 4.4) — probationary B list + protected T list.
+# ---------------------------------------------------------------------------
+
+
+class SLRUState(NamedTuple):
+    table: Table
+    listB: DList
+    listT: DList
+    in_T: jnp.ndarray  # (C,) bool
+    sizeT: jnp.ndarray  # () int32
+    capacity: jnp.ndarray
+    protected_cap: jnp.ndarray  # () int32
+
+
+def slru_init(capacity: int, key_space: int, protected_frac: float = 0.5) -> SLRUState:
+    return SLRUState(
+        _table_init(capacity, key_space),
+        dlist.empty(capacity),
+        dlist.empty(capacity),
+        jnp.zeros((capacity,), bool),
+        jnp.int32(0),
+        jnp.int32(capacity),
+        jnp.int32(max(1, int(capacity * protected_frac))),
+    )
+
+
+def slru_access(state: SLRUState, key, u=0.0):
+    del u
+    table, listB, listT, in_T, sizeT, cap, prot_cap = state
+    slot = table.key2slot[key]
+    hit = slot != NIL
+    hit_T = hit & in_T[jnp.maximum(slot, 0)]
+
+    def on_hit_T(args):
+        table, listB, listT, in_T, sizeT = args
+        listT = dlist.push_head(dlist.delink(listT, slot), slot)
+        return (table, listB, listT, in_T, sizeT, slot, jnp.int32(NIL),
+                _ops(delink=1, head=1))
+
+    def on_hit_B(args):
+        table, listB, listT, in_T, sizeT = args
+        listB = dlist.delink(listB, slot)
+        listT = dlist.push_head(listT, slot)
+        in_T = in_T.at[slot].set(True)
+        sizeT = sizeT + 1
+        ops = _ops(delink=1, head=1)
+
+        def demote(args):
+            listB, listT, in_T, sizeT, ops = args
+            listT, victim = dlist.pop_tail(listT)
+            listB = dlist.push_head(listB, victim)
+            in_T = in_T.at[victim].set(False)
+            return listB, listT, in_T, sizeT - 1, _ops_add(ops, _ops(tail=1, head=1))
+
+        listB, listT, in_T, sizeT, ops = lax.cond(
+            sizeT > prot_cap, demote, lambda a: a, (listB, listT, in_T, sizeT, ops)
+        )
+        return table, listB, listT, in_T, sizeT, slot, jnp.int32(NIL), ops
+
+    def on_miss(args):
+        table, listB, listT, in_T, sizeT = args
+
+        def fresh(args):
+            table, listB, listT = args
+            return table, listB, listT, table.size, jnp.int32(NIL), _ops()
+
+        def evict(args):
+            table, listB, listT = args
+
+            def evict_B(args):
+                listB, listT = args
+                listB, victim = dlist.pop_tail(listB)
+                return listB, listT, victim
+
+            def evict_T(args):
+                listB, listT = args
+                listT, victim = dlist.pop_tail(listT)
+                return listB, listT, victim
+
+            listB, listT, victim = lax.cond(
+                listB.tail != NIL, evict_B, evict_T, (listB, listT)
+            )
+            table, old_key = _table_evict(table, victim)
+            return table, listB, listT, victim, old_key, _ops(tail=1)
+
+        table, listB, listT, new_slot, old_key, ops = lax.cond(
+            table.size < cap, fresh, evict, (table, listB, listT)
+        )
+        listB = dlist.push_head(listB, new_slot)
+        in_T2 = in_T.at[new_slot].set(False)
+        sizeT = sizeT - in_T[new_slot]  # victim might have come from T
+        table = _table_assign(table, key, new_slot)
+        table = Table(table.key2slot, table.slot2key, jnp.minimum(table.size + 1, cap))
+        return (table, listB, listT, in_T2, sizeT, new_slot, old_key,
+                _ops_add(ops, _ops(head=1)))
+
+    table, listB, listT, in_T, sizeT, slot_out, evicted, ops = lax.cond(
+        hit_T, on_hit_T,
+        lambda a: lax.cond(hit, on_hit_B, on_miss, a),
+        (table, listB, listT, in_T, sizeT),
+    )
+    return (
+        SLRUState(table, listB, listT, in_T, sizeT, cap, prot_cap),
+        AccessResult(hit, evicted, slot_out, ops),
+    )
+
+
+# ---------------------------------------------------------------------------
+# S3-FIFO  (paper Sec. 4.5) — small FIFO S + main FIFO M + ghost registry.
+# ---------------------------------------------------------------------------
+
+
+class S3FIFOState(NamedTuple):
+    table: Table
+    listS: DList
+    listM: DList
+    in_M: jnp.ndarray  # (C,) bool
+    bit: jnp.ndarray  # (C,) bool
+    ghost: jnp.ndarray  # (G,) int32 ring of evicted keys
+    ghost_pos: jnp.ndarray  # () int32
+    sizeS: jnp.ndarray
+    sizeM: jnp.ndarray
+    s_cap: jnp.ndarray
+    m_cap: jnp.ndarray
+    capacity: jnp.ndarray
+    max_scan: jnp.ndarray
+
+
+def s3fifo_init(capacity: int, key_space: int, small_frac: float = 0.1,
+                max_scan: int = 3) -> S3FIFOState:
+    s_cap = max(1, int(capacity * small_frac))
+    m_cap = capacity - s_cap
+    return S3FIFOState(
+        table=_table_init(capacity, key_space),
+        listS=dlist.empty(capacity),
+        listM=dlist.empty(capacity),
+        in_M=jnp.zeros((capacity,), bool),
+        bit=jnp.zeros((capacity,), bool),
+        ghost=jnp.full((max(1, m_cap),), NIL, jnp.int32),
+        ghost_pos=jnp.int32(0),
+        sizeS=jnp.int32(0),
+        sizeM=jnp.int32(0),
+        s_cap=jnp.int32(s_cap),
+        m_cap=jnp.int32(m_cap),
+        capacity=jnp.int32(capacity),
+        max_scan=jnp.int32(max_scan),
+    )
+
+
+def _s3_evict_M(listM, bit, sizeM, max_scan):
+    """CLOCK-style scan of the M tail (reinsert 1-bits, evict first 0-bit)."""
+
+    def cond(carry):
+        _, _, scans, done, _ = carry
+        return (~done) & (scans <= max_scan)
+
+    def body(carry):
+        listM, bit, scans, done, victim = carry
+        s = listM.tail
+        give_chance = bit[s] & (scans < max_scan)
+
+        def reinsert(args):
+            lm, bit = args
+            lm, t = dlist.pop_tail(lm)
+            lm = dlist.push_head(lm, t)
+            return lm, bit.at[t].set(False), jnp.int32(NIL), False
+
+        def evict(args):
+            lm, bit = args
+            lm, t = dlist.pop_tail(lm)
+            return lm, bit, t, True
+
+        listM, bit, v, now_done = lax.cond(give_chance, reinsert, evict, (listM, bit))
+        return listM, bit, scans + 1, now_done, jnp.where(now_done, v, victim)
+
+    listM, bit, scans, _, victim = lax.while_loop(
+        cond, body, (listM, bit, jnp.int32(0), False, jnp.int32(NIL))
+    )
+    return listM, bit, victim, sizeM - 1, OpCounts(
+        jnp.int32(0), scans - 1, jnp.int32(1), scans - 1
+    )
+
+
+def s3fifo_access(state: S3FIFOState, key, u=0.0):
+    del u
+    st = state
+    slot = st.table.key2slot[key]
+    hit = slot != NIL
+
+    def on_hit(st: S3FIFOState):
+        return (
+            st._replace(bit=st.bit.at[slot].set(True)),
+            AccessResult(True, jnp.int32(NIL), slot, _ops()),
+        )
+
+    def on_miss(st: S3FIFOState):
+        in_ghost = jnp.any(st.ghost == key)
+        evicted_key = jnp.int32(NIL)
+        ops = _ops()
+
+        # -- make room in M if an insert into M is coming and M is full.
+        need_m = (in_ghost & (st.sizeM >= st.m_cap))
+
+        def mk_room_m(st_ops):
+            st, ops, evicted_key = st_ops
+            listM, bit, victim, sizeM, eops = _s3_evict_M(
+                st.listM, st.bit, st.sizeM, st.max_scan
+            )
+            table, old_key = _table_evict(st.table, victim)
+            st = st._replace(table=table, listM=listM, bit=bit, sizeM=sizeM,
+                             in_M=st.in_M.at[victim].set(False))
+            return st, _ops_add(ops, eops), old_key
+
+        st, ops, evicted_key = lax.cond(
+            need_m, mk_room_m, lambda a: a, (st, ops, evicted_key)
+        )
+
+        # -- make room in S if an insert into S is coming and S is full.
+        def mk_room_s(st_ops):
+            st, ops, evicted_key = st_ops
+            s_tail = st.listS.tail
+            promote = st.bit[s_tail]
+
+            def do_promote(st_ops):
+                st, ops, evicted_key = st_ops
+                # move S tail into M (evicting from M first if needed)
+                def room(st_ops):
+                    st, ops, evicted_key = st_ops
+                    listM, bit, victim, sizeM, eops = _s3_evict_M(
+                        st.listM, st.bit, st.sizeM, st.max_scan
+                    )
+                    table, old_key = _table_evict(st.table, victim)
+                    st = st._replace(table=table, listM=listM, bit=bit, sizeM=sizeM,
+                                     in_M=st.in_M.at[victim].set(False))
+                    return st, _ops_add(ops, eops), old_key
+
+                st, ops, evicted_key = lax.cond(
+                    st.sizeM >= st.m_cap, room, lambda a: a, (st, ops, evicted_key)
+                )
+                listS, t = dlist.pop_tail(st.listS)
+                listM = dlist.push_head(st.listM, t)
+                st = st._replace(
+                    listS=listS, listM=listM,
+                    in_M=st.in_M.at[t].set(True),
+                    bit=st.bit.at[t].set(False),
+                    sizeS=st.sizeS - 1, sizeM=st.sizeM + 1,
+                )
+                return st, _ops_add(ops, _ops(head=1, tail=1)), evicted_key
+
+            def do_evict(st_ops):
+                st, ops, evicted_key = st_ops
+                listS, t = dlist.pop_tail(st.listS)
+                table, old_key = _table_evict(st.table, t)
+                ghost = st.ghost.at[st.ghost_pos].set(old_key)
+                st = st._replace(
+                    table=table, listS=listS, ghost=ghost,
+                    ghost_pos=(st.ghost_pos + 1) % st.ghost.shape[0],
+                    sizeS=st.sizeS - 1,
+                )
+                return st, _ops_add(ops, _ops(tail=1)), old_key
+
+            return lax.cond(promote, do_promote, do_evict, st_ops)
+
+        need_s = (~in_ghost) & (st.sizeS >= st.s_cap)
+        st, ops, evicted_key = lax.cond(
+            need_s, mk_room_s, lambda a: a, (st, ops, evicted_key)
+        )
+
+        # -- place the new key. Slot: first unused slot, else reuse a freed one.
+        # A freed slot always exists after the room-making above; find one by
+        # scanning slot2key (O(C) vector op — fine at controller scale).
+        def fresh(st):
+            return st.table.size
+
+        def reuse(st):
+            free = st.table.slot2key == NIL
+            return jnp.argmax(free).astype(jnp.int32)
+
+        new_slot = lax.cond(st.table.size < st.capacity, fresh, reuse, st)
+
+        def to_M(st):
+            listM = dlist.push_head(st.listM, new_slot)
+            return st._replace(listM=listM, in_M=st.in_M.at[new_slot].set(True),
+                               sizeM=st.sizeM + 1)
+
+        def to_S(st):
+            listS = dlist.push_head(st.listS, new_slot)
+            return st._replace(listS=listS, in_M=st.in_M.at[new_slot].set(False),
+                               sizeS=st.sizeS + 1)
+
+        st = lax.cond(in_ghost, to_M, to_S, st)
+        table = _table_assign(st.table, key, new_slot)
+        table = Table(table.key2slot, table.slot2key,
+                      jnp.minimum(table.size + 1, st.capacity))
+        st = st._replace(table=table, bit=st.bit.at[new_slot].set(False))
+        return st, AccessResult(
+            False, evicted_key, new_slot, _ops_add(ops, _ops(head=1))
+        )
+
+    return lax.cond(hit, on_hit, on_miss, st)
+
+
+# ---------------------------------------------------------------------------
+# SIEVE  (Table 2, FIFO-like) — lazy promotion via a scanning hand.
+# ---------------------------------------------------------------------------
+
+
+class SieveState(NamedTuple):
+    table: Table
+    dl: DList
+    bit: jnp.ndarray
+    hand: jnp.ndarray  # () int32, NIL when unset
+    capacity: jnp.ndarray
+
+
+def sieve_init(capacity: int, key_space: int) -> SieveState:
+    return SieveState(_table_init(capacity, key_space), dlist.empty(capacity),
+                      jnp.zeros((capacity,), bool), jnp.int32(NIL),
+                      jnp.int32(capacity))
+
+
+def sieve_access(state: SieveState, key, u=0.0):
+    del u
+    table, dl, bit, hand, cap = state
+    slot = table.key2slot[key]
+    hit = slot != NIL
+
+    def on_hit(args):
+        table, dl, bit, hand = args
+        return table, dl, bit.at[slot].set(True), hand, slot, jnp.int32(NIL), _ops()
+
+    def on_miss(args):
+        table, dl, bit, hand = args
+
+        def fresh(args):
+            table, dl, bit, hand = args
+            return table, dl, bit, hand, table.size, jnp.int32(NIL), _ops()
+
+        def evict(args):
+            table, dl, bit, hand = args
+            start = jnp.where(hand == NIL, dl.tail, hand)
+
+            def cond(carry):
+                bit_c, h, _ = carry
+                return bit_c[h]
+
+            def body(carry):
+                bit, h, scans = carry
+                bit = bit.at[h].set(False)
+                nh = dl.prv[h]
+                nh = jnp.where(nh == NIL, dl.tail, nh)
+                return bit, nh, scans + 1
+
+            bit, victim, scans = lax.while_loop(cond, body, (bit, start, jnp.int32(0)))
+            new_hand = dl.prv[victim]  # may be NIL -> restart at tail next time
+            dl2 = dlist.delink(dl, victim)
+            table, old_key = _table_evict(table, victim)
+            return (table, dl2, bit, new_hand, victim, old_key,
+                    OpCounts(jnp.int32(0), jnp.int32(0), jnp.int32(1), scans))
+
+        table, dl, bit, hand, new_slot, old_key, ops = lax.cond(
+            table.size < cap, fresh, evict, (table, dl, bit, hand)
+        )
+        dl = dlist.push_head(dl, new_slot)
+        bit = bit.at[new_slot].set(False)
+        table = _table_assign(table, key, new_slot)
+        table = Table(table.key2slot, table.slot2key, jnp.minimum(table.size + 1, cap))
+        return table, dl, bit, hand, new_slot, old_key, _ops_add(ops, _ops(head=1))
+
+    table, dl, bit, hand, slot_out, evicted, ops = lax.cond(
+        hit, on_hit, on_miss, (table, dl, bit, hand)
+    )
+    return SieveState(table, dl, bit, hand, cap), AccessResult(
+        hit, evicted, slot_out, ops
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+POLICIES = {
+    "lru": PolicyDef("lru", lru_init, lru_access, lru_like=True),
+    "fifo": PolicyDef("fifo", lru_init, fifo_access, lru_like=False),
+    "prob_lru": PolicyDef("prob_lru", prob_lru_init, prob_lru_access, lru_like=True),
+    "clock": PolicyDef("clock", clock_init, clock_access, lru_like=False),
+    "slru": PolicyDef("slru", slru_init, slru_access, lru_like=True),
+    "s3fifo": PolicyDef("s3fifo", s3fifo_init, s3fifo_access, lru_like=False),
+    "sieve": PolicyDef("sieve", sieve_init, sieve_access, lru_like=False),
+}
+
+
+@partial(jax.jit, static_argnames=("policy",))
+def run_trace(policy: str, state, keys: jnp.ndarray, us: jnp.ndarray):
+    """Replay a whole key trace through a policy with lax.scan.
+
+    Returns (final_state, hits(bool[T]), per-request OpCounts arrays).
+    """
+    pdef = POLICIES[policy]
+
+    def step(state, ku):
+        k, u = ku
+        state, res = pdef.access(state, k, u)
+        return state, (res.hit, res.ops)
+
+    state, (hits, ops) = lax.scan(step, state, (keys, us))
+    return state, hits, ops

@@ -1,0 +1,51 @@
+"""repro.core — the paper's contribution: closed queueing-network models of
+cache eviction policies, analytic throughput bounds, exact MVA, event-driven
+simulation, and the LRU-like/FIFO-like classification.
+
+Three-pronged methodology (paper Sec. 1.3):
+  A. theory      -> repro.core.queueing / repro.core.policy_models
+  B. simulation  -> repro.core.simulator
+  C. implementation -> repro.cache (+ virtual-time harness in repro.core.harness)
+"""
+
+from repro.core.queueing import (
+    QUEUE,
+    THINK,
+    Branch,
+    ClosedNetwork,
+    Station,
+    bypass_network,
+    optimal_bypass_beta,
+)
+from repro.core.policy_models import (
+    POLICY_BUILDERS,
+    build,
+    clock_network,
+    fifo_network,
+    lru_network,
+    paper_fifo_bound,
+    paper_lru_bound,
+    paper_prob_lru_bound,
+    prob_lru_network,
+    s3fifo_network,
+    slru_network,
+)
+from repro.core.classify import (
+    FIFO_LIKE,
+    LRU_LIKE,
+    TABLE1,
+    TABLE2_CONJECTURE,
+    classify_by_throughput,
+    classify_structural,
+)
+
+__all__ = [
+    "QUEUE", "THINK", "Branch", "ClosedNetwork", "Station",
+    "bypass_network", "optimal_bypass_beta",
+    "POLICY_BUILDERS", "build",
+    "lru_network", "fifo_network", "prob_lru_network", "clock_network",
+    "slru_network", "s3fifo_network",
+    "paper_lru_bound", "paper_fifo_bound", "paper_prob_lru_bound",
+    "LRU_LIKE", "FIFO_LIKE", "TABLE1", "TABLE2_CONJECTURE",
+    "classify_structural", "classify_by_throughput",
+]

@@ -1,0 +1,91 @@
+"""Pure-Python reference simulator (heapq event loop).
+
+Oracle for the JAX simulator in :mod:`repro.core.simulator` — same network
+semantics, independent implementation.  Used by tests and for debugging;
+~100x slower than the jitted simulator, so keep ``n_requests`` modest.
+"""
+
+from __future__ import annotations
+
+import heapq
+import random
+
+import numpy as np
+
+from repro.core.queueing import ClosedNetwork
+from repro.core.simulator import compile_network
+
+
+def simulate_py(
+    net: ClosedNetwork,
+    p_hit: float,
+    n_requests: int = 20_000,
+    seed: int = 0,
+    warmup_frac: float = 0.25,
+) -> float:
+    """Simulate and return throughput in requests/µs.
+
+    Service distributions: det and exp are honored; bounded-Pareto stations
+    are sampled at their mean (det) — the paper (and our tests) show the
+    throughput is insensitive to this.
+    """
+    rng = random.Random(seed)
+    spec = compile_network(net, p_hit)
+    is_q = np.asarray(spec.is_queue)
+    svc = np.asarray(spec.svc_ns) / 1e3  # µs
+    dist = np.asarray(spec.dist_id)
+    cum = np.asarray(spec.branch_cum)
+    visits = np.asarray(spec.visits)
+    K = len(is_q)
+    N = net.mpl
+
+    def sample(k: int) -> float:
+        if dist[k] == 1:
+            return svc[k] * rng.expovariate(1.0)
+        return float(svc[k])
+
+    def new_branch() -> int:
+        return int(np.searchsorted(cum, rng.random()))
+
+    heap: list = []
+    queues = {k: [] for k in range(K) if is_q[k]}
+    busy = {k: False for k in range(K) if is_q[k]}
+    job_branch = [0] * N
+    job_pos = [0] * N
+    for j in range(N):
+        b = new_branch()
+        job_branch[j] = b
+        k = int(visits[b, 0])
+        heapq.heappush(heap, (sample(k), j, k))
+
+    t = 0.0
+    done = 0
+    warm_target = int(n_requests * warmup_frac)
+    warm_t = warm_c = None
+    while done < n_requests:
+        t, j, k = heapq.heappop(heap)
+        if is_q[k]:
+            if queues[k]:
+                w = queues[k].pop(0)
+                heapq.heappush(heap, (t + sample(k), w, k))
+            else:
+                busy[k] = False
+        b = job_branch[j]
+        pos = job_pos[j] + 1
+        if pos >= visits.shape[1] or visits[b, pos] < 0:
+            done += 1
+            if warm_c is None and done >= warm_target:
+                warm_c, warm_t = done, t
+            b = new_branch()
+            job_branch[j] = b
+            pos = 0
+        job_pos[j] = pos
+        k2 = int(visits[b, pos])
+        if is_q[k2]:
+            if busy[k2]:
+                queues[k2].append(j)
+                continue
+            busy[k2] = True
+        heapq.heappush(heap, (t + sample(k2), j, k2))
+
+    return (done - warm_c) / (t - warm_t)

@@ -1,0 +1,274 @@
+"""Closed queueing-network analysis — prong A of the paper's methodology.
+
+The paper models a DRAM cache under a Multi-Programming Limit (MPL) as a
+*closed* queueing network:
+
+  - **think stations** (infinite-server): cache lookup, disk/backing store,
+    ghost lookup.  No queueing; all MPL requests may be in service at once.
+  - **queue stations** (single-server FCFS): the serialized metadata
+    operations on the global eviction structure (delink, head update, tail
+    update, ...).
+
+Throughput is upper-bounded (Harchol-Balter, "Performance Modeling and
+Design of Computer Systems", Theorem 7.1) by::
+
+    X  <=  min( N / (D + E[Z]),  1 / D_max )
+
+where ``D_k`` is the *demand* of queue station ``k`` (expected total service
+a single request places on that station per pass through the system),
+``D = sum_k D_k``, ``D_max = max_k D_k`` and ``E[Z]`` the total think time.
+
+Everything below is parameterized by the hit ratio ``p_hit`` — demands and
+service times are functions of ``p_hit`` — which is what lets the model
+expose the paper's central phenomenon: the bottleneck (arg-max demand
+station) switching from the miss path to the hit path at ``p*_hit``.
+
+Units: microseconds.  Throughput is requests/µs == millions of requests/s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence, Union
+
+import numpy as np
+
+ServiceFn = Union[float, Callable[[float], float]]
+ProbFn = Union[float, Callable[[float], float]]
+
+QUEUE = "queue"
+THINK = "think"
+
+
+def _as_fn(v: ServiceFn) -> Callable[[float], float]:
+    if callable(v):
+        return v
+    return lambda p, _v=float(v): _v
+
+
+@dataclasses.dataclass(frozen=True)
+class Station:
+    """One service station.
+
+    ``bound="upper"`` marks stations whose service time could only be
+    bounded from above in the paper's measurements (the tail updates — they
+    are never the bottleneck, so they cannot be kept saturated to measure
+    the inter-departure time).  The throughput *upper* bound uses 0 for
+    these; the pessimistic bound uses ``service``.
+    """
+
+    name: str
+    kind: str  # QUEUE | THINK
+    service: ServiceFn  # mean service time (µs), may depend on p_hit
+    bound: str = "exact"  # "exact" | "upper"
+    dist: str = "det"  # det | exp | pareto  (used by the simulator)
+    dist_params: tuple = ()
+
+    def mean_service(self, p_hit: float) -> float:
+        return float(_as_fn(self.service)(p_hit))
+
+
+@dataclasses.dataclass(frozen=True)
+class Branch:
+    """A probabilistic route through the network.
+
+    Each completed request samples one branch (probabilities must sum to 1
+    at every ``p_hit``) and visits ``visits`` in order.  Station names may
+    repeat (a station visited twice contributes twice to demand).
+    """
+
+    name: str
+    prob: ProbFn
+    visits: tuple  # tuple[str, ...]
+
+    def probability(self, p_hit: float) -> float:
+        return float(_as_fn(self.prob)(p_hit))
+
+
+@dataclasses.dataclass(frozen=True)
+class ClosedNetwork:
+    name: str
+    stations: tuple  # tuple[Station, ...]
+    branches: tuple  # tuple[Branch, ...]
+    mpl: int
+    description: str = ""
+
+    # ------------------------------------------------------------------ util
+    def station(self, name: str) -> Station:
+        for s in self.stations:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    def queue_stations(self):
+        return [s for s in self.stations if s.kind == QUEUE]
+
+    def think_stations(self):
+        return [s for s in self.stations if s.kind == THINK]
+
+    def validate(self, p_grid: Sequence[float] = (0.0, 0.25, 0.5, 0.75, 0.999)) -> None:
+        names = [s.name for s in self.stations]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate station names in {self.name}")
+        for b in self.branches:
+            for v in b.visits:
+                if v not in names:
+                    raise ValueError(f"branch {b.name} visits unknown station {v}")
+        for p in p_grid:
+            tot = sum(b.probability(p) for b in self.branches)
+            if not math.isclose(tot, 1.0, abs_tol=1e-6):
+                raise ValueError(
+                    f"{self.name}: branch probabilities sum to {tot} at p_hit={p}"
+                )
+
+    # --------------------------------------------------------------- demands
+    def visit_counts(self, p_hit: float) -> dict:
+        """Expected visits per request to each station."""
+        counts = {s.name: 0.0 for s in self.stations}
+        for b in self.branches:
+            pb = b.probability(p_hit)
+            for v in b.visits:
+                counts[v] += pb
+        return counts
+
+    def demands(self, p_hit: float, tail_mode: str = "zero") -> dict:
+        """Per-queue-station demand D_k.
+
+        tail_mode:
+          "zero"    — bound="upper" stations contribute 0   (paper's X upper bound)
+          "nominal" — use the stated upper-bound service     (pessimistic)
+        """
+        counts = self.visit_counts(p_hit)
+        out = {}
+        for s in self.queue_stations():
+            svc = s.mean_service(p_hit)
+            if s.bound == "upper" and tail_mode == "zero":
+                svc = 0.0
+            out[s.name] = counts[s.name] * svc
+        return out
+
+    def think_time(self, p_hit: float) -> float:
+        counts = self.visit_counts(p_hit)
+        return sum(counts[s.name] * s.mean_service(p_hit) for s in self.think_stations())
+
+    # ------------------------------------------------------------ thm 7.1
+    def throughput_upper(self, p_hit, tail_mode: str = "zero"):
+        """Paper's analytic upper bound, X <= min(N/(D+Z), 1/Dmax).  Vectorized."""
+        p_arr = np.atleast_1d(np.asarray(p_hit, dtype=np.float64))
+        out = np.empty_like(p_arr)
+        for i, p in enumerate(p_arr):
+            d = self.demands(float(p), tail_mode=tail_mode)
+            D = sum(d.values())
+            Dmax = max(d.values()) if d else 0.0
+            Z = self.think_time(float(p))
+            terms = [self.mpl / (D + Z)]
+            if Dmax > 0:
+                terms.append(1.0 / Dmax)
+            out[i] = min(terms)
+        return out if np.ndim(p_hit) else float(out[0])
+
+    def bottleneck(self, p_hit: float, tail_mode: str = "zero") -> str:
+        d = self.demands(p_hit, tail_mode=tail_mode)
+        return max(d, key=d.get)
+
+    def p_star(self, tail_mode: str = "zero", grid: int = 20001) -> float:
+        """Critical hit ratio after which throughput starts to deteriorate.
+
+        The bound can plateau (X = 1/D_max constant while the miss-path
+        station stays the bottleneck), so p* is the *largest* hit ratio
+        still achieving the maximum.  Returns 1.0 for FIFO-like policies
+        (monotone increasing bound).
+        """
+        ps = np.linspace(0.0, 1.0, grid)
+        xs = self.throughput_upper(ps, tail_mode=tail_mode)
+        x_max = float(np.max(xs))
+        at_max = np.nonzero(xs >= x_max * (1.0 - 1e-9))[0]
+        return float(ps[int(at_max[-1])])
+
+    # ---------------------------------------------------------------- MVA
+    def mva(self, p_hit: float, n: int | None = None, tail_mode: str = "nominal"):
+        """Exact Mean Value Analysis of the (product-form) exponential analogue.
+
+        The paper only derives *bounds*; MVA gives the exact closed-network
+        solution when services are exponential.  It is a very good
+        approximation for the measured distributions (the paper notes
+        insensitivity to service distributions, citing [80]).
+
+        Returns (X, {station: mean queue length}, R_total).
+        """
+        n = int(n or self.mpl)
+        d = self.demands(p_hit, tail_mode=tail_mode)
+        names = list(d)
+        D = np.array([d[k] for k in names], dtype=np.float64)
+        Z = self.think_time(p_hit)
+        Q = np.zeros_like(D)
+        X = 0.0
+        for k in range(1, n + 1):
+            R = D * (1.0 + Q)
+            Rtot = float(R.sum())
+            X = k / (Z + Rtot)
+            Q = X * R
+        return X, dict(zip(names, Q.tolist())), Z + float((D * (1.0 + Q)).sum())
+
+    def mva_throughput(self, p_hit, n: int | None = None, tail_mode: str = "nominal"):
+        p_arr = np.atleast_1d(np.asarray(p_hit, dtype=np.float64))
+        out = np.array([self.mva(float(p), n=n, tail_mode=tail_mode)[0] for p in p_arr])
+        return out if np.ndim(p_hit) else float(out[0])
+
+    def response_time_upper(self, p_hit, tail_mode: str = "zero"):
+        """Mean cycle (response) time lower bound, R = N / X_upper."""
+        return self.mpl / self.throughput_upper(p_hit, tail_mode=tail_mode)
+
+
+# --------------------------------------------------------------------------
+# Mitigation (paper §5.2): bypass the cache under load.
+# --------------------------------------------------------------------------
+
+
+def bypass_network(net: ClosedNetwork, beta: ProbFn) -> ClosedNetwork:
+    """Send a fraction ``beta`` of requests straight to the backing store.
+
+    Bypassed requests skip all policy metadata stations (and the cache
+    cannot hit for them) — they visit only the lookup + disk think stations.
+    The remaining ``1-beta`` behave exactly as in ``net``.
+    """
+    beta_fn = _as_fn(beta)
+    scaled = []
+    for b in net.branches:
+        pf = _as_fn(b.prob)
+        scaled.append(
+            dataclasses.replace(
+                b, prob=(lambda p, pf=pf, bf=beta_fn: (1.0 - bf(p)) * pf(p))
+            )
+        )
+    disk = [s.name for s in net.think_stations() if "disk" in s.name]
+    lookup = [s.name for s in net.think_stations() if "lookup" in s.name]
+    visits = tuple(lookup[:1] + disk[:1])
+    scaled.append(Branch("bypass", lambda p, bf=beta_fn: bf(p), visits))
+    return dataclasses.replace(
+        net, name=net.name + "+bypass", branches=tuple(scaled)
+    )
+
+
+def optimal_bypass_beta(net: ClosedNetwork, p_hit: float) -> float:
+    """Smallest beta that caps the hit-path bottleneck demand at its p* level.
+
+    For p_hit <= p*, no bypass is needed (beta = 0).  Beyond p*, keeping the
+    bottleneck demand pinned at D_max(p*) keeps throughput flat instead of
+    falling — the behaviour the paper reports for this mitigation.
+    """
+    p_star = net.p_star()
+    if p_hit <= p_star:
+        return 0.0
+    target = max(net.demands(p_star).values())
+
+    lo, hi = 0.0, 1.0
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        d = max(bypass_network(net, mid).demands(p_hit).values())
+        if d > target:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, H, T, dh); k, v: (B, KV, S, dh) -> (B, H, T, dh)."""
+    B, H, T, dh = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    group = H // KV
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum(
+        "bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (dh**-0.5)
+    rows = jnp.arange(T)[:, None]
+    cols = jnp.arange(S)[None, :]
+    valid = jnp.ones((T, S), bool)
+    if causal:
+        valid = valid & (cols <= rows)
+    if window > 0:
+        valid = valid & (cols > rows - window)
+    logits = jnp.where(valid[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_attention_ref(q, pages_k, pages_v, block_table, seq_lens):
+    """Gather pages into dense KV, then masked softmax attention."""
+    B, H, dh = q.shape
+    P, page, KV, _ = pages_k.shape
+    n_pages = block_table.shape[1]
+    k = pages_k[block_table].reshape(B, n_pages * page, KV, dh)
+    v = pages_v[block_table].reshape(B, n_pages * page, KV, dh)
+    group = H // KV
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum(
+        "bhd,bshd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (dh**-0.5)
+    valid = jnp.arange(n_pages * page)[None, :] < seq_lens[:, None]
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_scan_ref(r, k, v, w, u):
+    """Step-by-step WKV6 recurrence (shared with repro.models.rwkv)."""
+    from repro.models.rwkv import _wkv_scan
+
+    B, T, H, dh = r.shape
+    state = jnp.zeros((B, H, dh, dh), jnp.float32)
+    _, y = _wkv_scan(r, k, v, w, u.astype(jnp.float32), state)
+    return y.astype(r.dtype)
+
+
+def lru_batch_update_ref(timestamps, accessed, now):
+    hit = jnp.isin(jnp.arange(timestamps.shape[0]), accessed)
+    new_ts = jnp.where(hit, now, timestamps)
+    return new_ts, jnp.argmin(new_ts).astype(jnp.int32)

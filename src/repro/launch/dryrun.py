@@ -1,0 +1,308 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape decode_32k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per cell this records (benchmarks/dryrun_results/<arch>__<shape>__<mesh>.json):
+    * memory_analysis()  — per-device argument/output/temp/code bytes,
+    * cost_analysis()    — per-device HLO flops + bytes accessed,
+    * collective bytes   — parsed from the partitioned HLO text,
+    * the three roofline terms + MODEL_FLOPS ratio (§Roofline).
+
+The XLA_FLAGS line above MUST precede any jax import: jax locks the device
+count on first backend init.  Never set it globally — tests and benchmarks
+must see one device.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import sharding as shardlib  # noqa: E402
+from repro.configs.registry import ARCHS, get_config  # noqa: E402
+from repro.launch.mesh import make_context  # noqa: E402
+from repro.launch.specs import SHAPES, SKIP, build_cell  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "dryrun_results")
+
+# v5e hardware constants (targets; this host is CPU)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|s64|u64|pred|s16|u16)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire-byte estimate per collective kind.
+
+    Shapes in the partitioned module are per-device.  all-reduce is charged
+    2x its buffer (ring send+recv); *-done lines are skipped so async pairs
+    aren't double counted.
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        result_type, kind = m.group(1), m.group(2)
+        b = _shape_bytes(result_type)
+        if kind == "all-reduce":
+            b *= 2
+        out[kind] = out.get(kind, 0) + b
+        out.setdefault("count_" + kind, 0)
+        out["count_" + kind] += 1
+    out["total_bytes"] = sum(v for k, v in out.items() if not k.startswith("count"))
+    return out
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    """Analytic MODEL_FLOPS (6ND / 2ND + attention terms).
+
+    This is the roofline's compute term: XLA-CPU's cost_analysis undercounts
+    FLOPs on this backend (dots lower to oneDNN custom-calls; while bodies
+    are counted once, not trip-count times), so the *exact* analytic count
+    is both stricter and more reliable — it is the MFU numerator.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    local_frac = (cfg.attn_pattern.count("local") / len(cfg.attn_pattern)
+                  if cfg.block == "attn" else 0.0)
+
+    def attn_flops(q_tokens, kv_len):
+        # per q token: 2*H*dh*kv (QK^T) + 2*H*dh*kv (PV); local layers see
+        # min(window, kv_len) keys
+        eff = local_frac * min(cfg.local_window, kv_len) + (1 - local_frac) * kv_len
+        return 4.0 * H * dh * L * eff * q_tokens
+
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        flops = 6.0 * n_active * tokens + 3 * attn_flops(tokens, shape.seq / 2)
+    elif shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        flops = 2.0 * n_active * tokens + attn_flops(tokens, shape.seq / 2)
+    else:  # decode: one token per sequence, attention reads the full KV
+        flops = 2.0 * n_active * shape.batch
+        if cfg.block == "attn":
+            flops += attn_flops(shape.batch, shape.seq)
+    return flops / n_devices
+
+
+def projected_hbm_bytes_per_device(arch: str, shape_name: str,
+                                   n_devices: int) -> float:
+    """TPU-projected HBM traffic (analytic).
+
+    The CPU backend's measured 'bytes accessed' is inflated by bf16->f32
+    normalization converts that a TPU never executes; this projection is
+    the memory-term numerator (raw HLO bytes are recorded alongside).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    pbytes = 2  # bf16 params
+    n_params = cfg.param_count()
+    D, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    kv_bytes = (2 * L * cfg.n_kv_heads * cfg.d_head * 2
+                if cfg.block == "attn" else 64 * D)  # per token
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        # fwd read + bwd read + grad write + update write  (+ moments r/w)
+        param_traffic = n_params * pbytes * 4 + n_params * 4 * 2
+        act_traffic = tokens * D * L * 2 * 4  # carry save + recompute r/w
+        logit_traffic = tokens * V * 4 * 2
+        return (param_traffic + act_traffic + logit_traffic) / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        act = tokens * D * L * 2 * 4
+        return (n_params * pbytes + tokens * kv_bytes + act) / n_devices
+    # decode
+    if cfg.moe is not None:
+        e = cfg.moe
+        expert_frac = min(1.0, shape.batch * e.top_k / e.n_experts)
+        mult = 3 if cfg.act in ("swiglu", "geglu") else 2
+        expert_bytes = L * e.n_experts * mult * D * e.d_ff_expert * pbytes
+        params_read = (n_params * pbytes - expert_bytes
+                       + expert_bytes * expert_frac)
+    else:
+        params_read = n_params * pbytes
+    cache_read = shape.batch * shape.seq * kv_bytes
+    if cfg.block != "attn":
+        cache_read = shape.batch * 64 * D  # O(1) recurrent state
+    return (params_read + cache_read) / n_devices
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "") -> dict:
+    t0 = time.time()
+    ctx = make_context(multi_pod=multi_pod)
+    n_dev = ctx.mesh.size
+    cfg = None
+    if variant:
+        from repro.launch.specs import variant_config
+
+        cfg = variant_config(arch, variant)
+        if cfg is None:
+            return {"arch": arch, "shape": shape_name,
+                    "skipped": f"no {variant} variant for {arch}"}
+    with shardlib.use_mesh(ctx):
+        plan = build_cell(arch, shape_name, cfg=cfg)
+        if plan is None:
+            return {"arch": arch, "shape": shape_name, "skipped":
+                    SKIP[(arch, shape_name)]}
+        jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                         out_shardings=plan.out_shardings,
+                         donate_argnums=plan.donate)
+        lowered = jitted.lower(*plan.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        mem_rec[f] = int(getattr(mem, f, 0) or 0)
+    mem_rec["resident_bytes_per_device"] = (
+        mem_rec["argument_size_in_bytes"] + mem_rec["peak_memory_in_bytes"]
+        - mem_rec["alias_size_in_bytes"]
+    )
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    coll = parse_collectives(compiled.as_text())
+
+    mf = model_flops_per_device(arch, shape_name, n_dev)
+    proj_bytes = projected_hbm_bytes_per_device(arch, shape_name, n_dev)
+    compute_s = mf / PEAK_FLOPS
+    memory_s = proj_bytes / HBM_BW
+    memory_s_hlo = bytes_accessed / HBM_BW  # CPU-inflated upper bound
+    collective_s = coll["total_bytes"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    step_s = max(terms.values())
+    # hardware envelope = max(compute, memory); collectives that fit under
+    # it are overlappable, so fraction = envelope / step estimate.
+    envelope = max(compute_s, memory_s)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_dev,
+        "note": plan.note,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_rec,
+        "hlo_flops_per_device": flops,  # unreliable on CPU backend; see doc
+        "hbm_bytes_per_device_hlo": bytes_accessed,
+        "hbm_bytes_per_device_projected": proj_bytes,
+        "collectives": coll,
+        "roofline": {
+            **terms,
+            "memory_s_hlo": memory_s_hlo,
+            "dominant": max(terms, key=terms.get),
+            "model_flops_per_device": mf,
+            "roofline_fraction": envelope / step_s if step_s else 0.0,
+            "mfu_bound": compute_s / step_s if step_s else 0.0,
+            "hlo_vs_model_flops": (flops / mf) if mf else 0.0,
+        },
+    }
+    return rec
+
+
+def cell_path(arch, shape_name, multi_pod, variant=""):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    mesh = "multi" if multi_pod else "single"
+    suffix = f"__{variant}" if variant else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                path = cell_path(arch, shape_name, multi_pod, args.variant)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {path}")
+                    continue
+                label = (f"{arch} x {shape_name} x "
+                         f"{'multi' if multi_pod else 'single'}"
+                         + (f" [{args.variant}]" if args.variant else ""))
+                print(f"=== {label}", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi_pod, args.variant)
+                except Exception as e:  # record failures; the sweep continues
+                    traceback.print_exc()
+                    failures.append(label)
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi_pod else "single",
+                           "error": f"{type(e).__name__}: {e}"}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if "roofline" in rec:
+                    r = rec["roofline"]
+                    print(
+                        f"    compile {rec['compile_s']}s | "
+                        f"peak/dev {rec['memory'].get('peak_memory_in_bytes', 0)/2**30:.2f} GiB | "
+                        f"compute {r['compute_s']*1e3:.2f}ms mem {r['memory_s']*1e3:.2f}ms "
+                        f"coll {r['collective_s']*1e3:.2f}ms -> {r['dominant']} | "
+                        f"roofline {r['roofline_fraction']:.2f}",
+                        flush=True,
+                    )
+    if failures:
+        print("FAILURES:\n  " + "\n  ".join(failures))
+        raise SystemExit(1)
+    print("dry-run sweep complete")
+
+
+if __name__ == "__main__":
+    main()

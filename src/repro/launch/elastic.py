@@ -1,0 +1,38 @@
+"""Elastic re-meshing: restore a checkpoint onto a different mesh.
+
+A 512-chip (2,16,16) checkpoint restores onto a 256-chip (16,16) mesh (or
+onto CPU for debugging) by re-resolving every logical partition spec under
+the new MeshContext and device_put-ing host arrays — node failures that
+shrink the fleet do not strand training state.
+
+    new_state = reshard(ckpt_dir, like=state_abs, ctx=make_context())
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro import sharding as shardlib
+from repro.training import checkpoint as ckpt_lib
+
+
+def reshard(path: str, like: Any, ctx: shardlib.MeshContext,
+            logical_specs: Any = None, step: Optional[int] = None) -> Any:
+    """Restore `path` under mesh context `ctx`.
+
+    logical_specs: optional pytree of logical spec tuples matching `like`
+    (e.g. from repro.launch.specs.train_state_spec_tree).  Without it, all
+    leaves restore replicated on the new mesh — correct, just larger.
+    """
+    with shardlib.use_mesh(ctx):
+        if logical_specs is None:
+            shardings = jax.tree_util.tree_map(
+                lambda _: shardlib.sharding_for(()), like
+            )
+        else:
+            from repro.launch.specs import _to_shardings
+
+            shardings = _to_shardings(logical_specs, like)
+        return ckpt_lib.restore(path, like=like, step=step, shardings=shardings)

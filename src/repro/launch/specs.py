@@ -1,0 +1,385 @@
+"""Per-(arch × shape) cell plans for the multi-pod dry-run.
+
+A *cell* = (architecture, input shape, mesh).  Each plan carries:
+  * the step function to lower (train_step / prefill / decode),
+  * abstract inputs (ShapeDtypeStructs — no allocation),
+  * input NamedShardings resolved from the logical specs.
+
+Shapes (assignment):
+  train_4k     seq 4096,    global_batch 256   (training)
+  prefill_32k  seq 32768,   global_batch 32    (inference prefill)
+  decode_32k   seq 32768,   global_batch 128   (one token, 32k KV)
+  long_500k    seq 524288,  global_batch 1     (long-context decode)
+
+Sharding policy (DESIGN.md §5): batch over ("pod","data"); vocab / heads /
+FFN / experts over "model"; KV-cache sequence over "model" (plus "data"
+when batch=1) whenever kv_heads doesn't divide the model axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro import sharding as shardlib
+from repro.configs.registry import get_config
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import param_specs, param_values
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_state import TrainState, init_train_state, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k is skipped only where architecturally meaningless (enc-dec
+# decoder with bounded context).  Pure full-attention archs are *eligible*
+# to skip per the assignment; we compile them anyway (decode is linear-cost
+# per token) and flag them in the roofline table.
+SKIP = {("whisper-tiny", "long_500k"): "enc-dec decoder context is bounded"}
+
+FULL_ATTENTION_ARCHS = {
+    "arctic-480b", "llama4-scout-17b-a16e", "chameleon-34b", "qwen3-32b",
+    "internlm2-1.8b", "nemotron-4-15b",
+}
+
+
+# §Perf variants: named cfg overrides applied on top of the baseline
+# (see EXPERIMENTS.md §Perf for the hypothesis -> result log per cell)
+VARIANTS = {
+    "opt": {
+        "zamba2-1.2b": dict(ssm_split_proj=True, sequence_parallel=True),
+        "arctic-480b": dict(moe_ep2d=True, sequence_parallel=True),
+        "gemma3-27b": dict(sequence_parallel=True),
+        "rwkv6-7b": dict(sequence_parallel=True),
+        "qwen3-32b": dict(sequence_parallel=True),
+        "whisper-tiny": dict(),
+    },
+    "sp_only": {
+        "zamba2-1.2b": dict(sequence_parallel=True),
+        "arctic-480b": dict(sequence_parallel=True),
+    },
+    "split_only": {
+        "zamba2-1.2b": dict(ssm_split_proj=True),
+    },
+    "ep2d_only": {
+        "arctic-480b": dict(moe_ep2d=True),
+    },
+}
+
+
+def variant_config(arch: str, variant: str):
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    over = VARIANTS.get(variant, {}).get(arch)
+    if over is None:
+        return None
+    return _dc.replace(cfg, **over)
+
+
+def optimizer_for(arch: str) -> OptimizerConfig:
+    # 480B params: bf16 moments or the optimizer alone overflows 256 chips
+    # (see EXPERIMENTS.md §Dry-run memory table)
+    if arch in ("arctic-480b", "llama4-scout-17b-a16e"):
+        return OptimizerConfig(moment_dtype="bfloat16")
+    return OptimizerConfig()
+
+
+# ---------------------------------------------------------------------------
+# sharding spec builders
+# ---------------------------------------------------------------------------
+
+
+def _resolve(spec_tuple) -> NamedSharding:
+    return shardlib.sharding_for(spec_tuple)
+
+
+def _leaf_name(path) -> str:
+    return getattr(path[-1], "name", None) or str(path[-1])
+
+
+def cache_spec_tree(cfg: ModelConfig, caches_abs, batch_shardable: bool):
+    """Logical specs for a decode-cache pytree (leaf-name driven)."""
+    ctx = shardlib.get_ctx()
+    model_n = ctx.axis_size("model") if ctx else 1
+    batch_ax = "batch" if batch_shardable else None
+
+    def kv_axes():
+        if cfg.tensor_parallel and cfg.n_kv_heads % model_n == 0:
+            return ("model", None if batch_shardable else "batch")
+        return (None, "model" if batch_shardable else ("batch", "model"))
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        if name in ("k", "v"):
+            head_ax, s_ax = kv_axes()
+            return (None, batch_ax, s_ax, head_ax, None)
+        if name == "index":
+            return (None, batch_ax)
+        mshard = lambda n: "model" if (cfg.tensor_parallel and n % model_n == 0) else None
+        if name == "wkv":  # (g, B, H, dh, dh)
+            return (None, batch_ax, mshard(leaf.shape[2]), None, None)
+        if name == "ssm":  # (g, B, H, hd, ds)
+            return (None, batch_ax, mshard(leaf.shape[2]), None, None)
+        if name == "conv":  # (g, B, W-1, C)
+            return (None, batch_ax, None, mshard(leaf.shape[3]))
+        if name in ("x_prev_att", "x_prev_ffn"):  # (g, B, D)
+            return (None, batch_ax, mshard(leaf.shape[2]))
+        # fallback: batch-shard dim 1, replicate the rest
+        return (None, batch_ax) + (None,) * (leaf.ndim - 2)
+
+    return jax.tree_util.tree_map_with_path(spec, caches_abs)
+
+
+def train_state_spec_tree(state_abs: TrainState, params_logical, zero1: bool = True):
+    """Specs for TrainState: params via their logical specs; optimizer
+    moments likewise (+ ZeRO-1 data-sharding on dim 0); step replicated."""
+    from repro.training.optimizer import zero1_moment_spec
+
+    flat_p = spec_leaves(params_logical)
+
+    def moments(tree):
+        flat_m = jax.tree_util.tree_leaves(tree)
+        out = []
+        for spec, leaf in zip(flat_p, flat_m):
+            s = spec if len(spec) == leaf.ndim else (None,) * leaf.ndim
+            if zero1:
+                ctx = shardlib.get_ctx()
+                n = ctx.axis_size("batch") if ctx else 16
+                s = zero1_moment_spec(tuple(s), leaf.shape, n)
+            out.append(s)
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(tree), out
+        )
+
+    opt = state_abs.opt
+    opt_specs = type(opt)(*[moments(getattr(opt, f)) for f in opt._fields])
+    return TrainState(step=(), params=params_logical, opt=opt_specs)
+
+
+def _is_spec(x) -> bool:
+    """A logical partition spec: tuple of None | axis-name | tuple-of-names.
+    Distinguishes spec leaves from structural tuples/NamedTuples in trees."""
+    if not isinstance(x, tuple) or hasattr(x, "_fields"):
+        return False
+    for e in x:
+        if e is None or isinstance(e, str):
+            continue
+        if (isinstance(e, tuple) and not hasattr(e, "_fields")
+                and e and all(isinstance(s, str) for s in e)):
+            continue
+        return False
+    return True
+
+
+def spec_leaves(tree):
+    return jax.tree_util.tree_leaves(tree, is_leaf=_is_spec)
+
+
+def _to_shardings(logical_tree, abs_tree):
+    """Resolve a logical-spec tree to NamedShardings (leaf-aligned)."""
+    flat_spec = spec_leaves(logical_tree)
+    flat_abs, treedef = jax.tree_util.tree_flatten(abs_tree)
+    assert len(flat_spec) == len(flat_abs), (len(flat_spec), len(flat_abs))
+    return jax.tree_util.tree_unflatten(
+        treedef, [_resolve(s) for s in flat_spec]
+    )
+
+
+# ---------------------------------------------------------------------------
+# cell plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: ShapeSpec
+    fn: Callable
+    args: tuple  # abstract args
+    in_shardings: tuple
+    out_shardings: Any = None  # pytree prefix; None -> compiler's choice
+    donate: tuple = ()
+    note: str = ""
+
+
+def _logits_sharding(cfg: ModelConfig, batch_shardable: bool):
+    ctx = shardlib.get_ctx()
+    model_n = ctx.axis_size("model") if ctx else 1
+    v_ax = "model" if (cfg.tensor_parallel and cfg.vocab % model_n == 0) else None
+    return _resolve(("batch" if batch_shardable else None, None, v_ax))
+
+
+def _abstract_params(cfg: ModelConfig):
+    init_fn = encdec.init_params if cfg.encdec else transformer.init_params
+    tree = init_fn(cfg, jax.random.PRNGKey(0), abstract=True)
+    return param_values(tree), param_specs(tree)
+
+
+def _token_sharding(batch_shardable: bool, ndim: int = 2):
+    spec = ("batch" if batch_shardable else None,) + (None,) * (ndim - 1)
+    return _resolve(spec)
+
+
+def build_cell(arch: str, shape_name: str, cfg=None,
+               shape: Optional[ShapeSpec] = None) -> Optional[CellPlan]:
+    """Must be called inside sharding.use_mesh(ctx).  cfg/shape overrides
+    exist for tests (reduced configs on small meshes)."""
+    if (arch, shape_name) in SKIP:
+        return None
+    cfg = cfg or get_config(arch)
+    shape = shape or SHAPES[shape_name]
+    ctx = shardlib.get_ctx()
+    batch_n = ctx.axis_size("batch") if ctx else 1
+    batch_shardable = shape.batch % batch_n == 0
+
+    if shape.kind == "train":
+        opt = optimizer_for(arch)
+        state_abs = init_train_state(cfg, opt, jax.random.PRNGKey(0), abstract=True)
+        _, logical = _abstract_params(cfg)
+        state_specs = train_state_spec_tree(state_abs, logical)
+        state_sh = _to_shardings(state_specs, state_abs)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct(
+            (shape.batch, shape.seq + 1), jnp.int32)}
+        batch_sh = {"tokens": _token_sharding(batch_shardable)}
+        if cfg.encdec:
+            batch_abs["frames"] = jax.ShapeDtypeStruct(
+                (shape.batch, cfg.enc_positions, cfg.d_model), jnp.float32)
+            batch_sh["frames"] = _token_sharding(batch_shardable, 3)
+        step = make_train_step(cfg, opt, remat="full")
+        return CellPlan(arch, shape, step, (state_abs, batch_abs),
+                        (state_sh, batch_sh),
+                        out_shardings=(state_sh, _resolve(())), donate=(0,))
+
+    params_abs, logical = _abstract_params(cfg)
+    params_sh = _to_shardings(logical, params_abs)
+
+    if cfg.encdec:
+        return _build_encdec_cell(arch, cfg, shape, params_abs, params_sh,
+                                  batch_shardable)
+
+    if shape.kind == "prefill":
+        caches_abs = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, shape.batch, shape.seq,
+                                           jnp.dtype(cfg.compute_dtype))
+        )
+        cache_sh = _to_shardings(
+            cache_spec_tree(cfg, caches_abs, batch_shardable), caches_abs)
+        tokens = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
+        clen = jax.ShapeDtypeStruct((shape.batch,), jnp.int32)
+
+        def prefill(params, tokens, caches, cache_len):
+            logits, new_caches, _ = transformer.forward(
+                params, tokens, cfg, caches=caches, cache_len=cache_len,
+                unembed_last_only=True,
+            )
+            return logits, new_caches
+
+        return CellPlan(
+            arch, shape, prefill,
+            (params_abs, tokens, caches_abs, clen),
+            (params_sh, _token_sharding(batch_shardable), cache_sh,
+             _resolve(("batch" if batch_shardable else None,))),
+            out_shardings=(_logits_sharding(cfg, batch_shardable), cache_sh),
+            donate=(2,),
+        )
+
+    # decode
+    caches_abs = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.batch, shape.seq,
+                                       jnp.dtype(cfg.compute_dtype))
+    )
+    cache_sh = _to_shardings(
+        cache_spec_tree(cfg, caches_abs, batch_shardable), caches_abs)
+    tokens = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)
+    clen = jax.ShapeDtypeStruct((shape.batch,), jnp.int32)
+
+    def serve_step(params, tokens, caches, cache_len):
+        return transformer.decode_step(params, tokens, caches, cache_len, cfg)
+
+    note = ("beyond-requirement (pure full-attention; linear per-token cost)"
+            if shape_name == "long_500k" and arch in FULL_ATTENTION_ARCHS else "")
+    return CellPlan(
+        arch, shape, serve_step,
+        (params_abs, tokens, caches_abs, clen),
+        (params_sh, _token_sharding(batch_shardable), cache_sh,
+         _resolve(("batch" if batch_shardable else None,))),
+        out_shardings=(_logits_sharding(cfg, batch_shardable), cache_sh),
+        donate=(2,), note=note,
+    )
+
+
+def _build_encdec_cell(arch, cfg, shape, params_abs, params_sh, batch_shardable):
+    frames = jax.ShapeDtypeStruct(
+        (shape.batch, cfg.enc_positions, cfg.d_model), jnp.float32)
+    frames_sh = _token_sharding(batch_shardable, 3)
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
+
+        def prefill(params, frames, tokens):
+            enc = encdec.encode(params, frames, cfg)
+            logits, _ = encdec.decode(params, tokens, enc, cfg)
+            return logits[:, -1:]
+
+        return CellPlan(arch, shape, prefill, (params_abs, frames, tokens),
+                        (params_sh, frames_sh, _token_sharding(batch_shardable)))
+
+    # decode: self-KV caches at seq + precomputed cross K/V
+    def make_caches(params):
+        enc = jnp.zeros((shape.batch, cfg.enc_positions, cfg.d_model),
+                        jnp.dtype(cfg.compute_dtype))
+        return encdec.init_dec_cache(params, enc, cfg, shape.batch, shape.seq)
+
+    caches_abs = jax.eval_shape(make_caches, params_abs)
+    batch_ax = "batch" if batch_shardable else None
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        if name in ("k", "v") and leaf.ndim == 5:
+            # self-KV sequence over "model": whisper has no TP, and leaving
+            # the cache replicated over the model axis makes GSPMD emit a
+            # full-cache all-reduce per decode step (see EXPERIMENTS §Perf)
+            s_ax = "model" if leaf.shape[2] % 16 == 0 else None
+            return (None, batch_ax, s_ax, None, None)
+        if name == "index":
+            return (None, batch_ax)
+        return (None, batch_ax) + (None,) * (leaf.ndim - 2)
+
+    cache_sh = _to_shardings(
+        jax.tree_util.tree_map_with_path(spec, caches_abs), caches_abs)
+    tokens = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)
+    enc_out = jax.ShapeDtypeStruct(
+        (shape.batch, cfg.enc_positions, cfg.d_model),
+        jnp.dtype(cfg.compute_dtype))
+
+    def serve_step(params, tokens, enc_out, caches, cache_len):
+        logits, new_caches = encdec.decode(
+            params, tokens, enc_out, cfg, caches=caches, cache_len=cache_len)
+        return logits, new_caches
+
+    clen = jax.ShapeDtypeStruct((), jnp.int32)
+    return CellPlan(
+        arch, shape, serve_step,
+        (params_abs, tokens, enc_out, caches_abs, clen),
+        (params_sh, _token_sharding(batch_shardable), frames_sh, cache_sh,
+         _resolve(())),
+        out_shardings=(_logits_sharding(cfg, batch_shardable), cache_sh),
+        donate=(3,),
+    )

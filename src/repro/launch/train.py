@@ -1,0 +1,90 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+Production use targets the (16,16) or (2,16,16) mesh (--mesh single|multi);
+on this CPU container use --reduced (tiny same-family config, 1-device
+mesh).  Fault tolerance: async checkpoints every --ckpt-every steps, exact
+resume (data is a pure function of the step counter), atomic saves.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import sharding as shardlib
+from repro.configs.registry import ARCHS, get_config
+from repro.launch.mesh import make_context, single_device_context
+from repro.training import checkpoint as ckpt_lib
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_state import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", choices=["adamw", "adafactor"], default="adamw")
+    ap.add_argument("--remat", choices=["none", "dots", "full"], default="none")
+    ap.add_argument("--mesh", choices=["cpu", "single", "multi"], default="cpu")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    opt = OptimizerConfig(name=args.optimizer, lr=args.lr, warmup_steps=10)
+    ctx = (single_device_context() if args.mesh == "cpu"
+           else make_context(multi_pod=args.mesh == "multi"))
+
+    with shardlib.use_mesh(ctx):
+        state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+        data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                      global_batch=args.batch))
+        step_fn = jax.jit(make_train_step(cfg, opt, remat=args.remat),
+                          donate_argnums=(0,))
+
+        start = 0
+        saver = None
+        if args.ckpt_dir:
+            saver = ckpt_lib.AsyncCheckpointer(args.ckpt_dir)
+            if args.resume and (last := ckpt_lib.latest_step(args.ckpt_dir)) is not None:
+                state = ckpt_lib.restore(args.ckpt_dir, like=state, step=last)
+                start = last
+                print(f"resumed from step {last}")
+
+        losses = []
+        t0 = time.time()
+        for step in range(start, args.steps):
+            state, metrics = step_fn(state, data.batch_at(step))
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % args.log_every == 0:
+                dt = time.time() - t0
+                tok_s = args.log_every * args.batch * args.seq / max(dt, 1e-9)
+                print(f"step {step+1:5d}  loss {losses[-1]:.4f}  "
+                      f"grad_norm {float(metrics['grad_norm']):.3f}  "
+                      f"{tok_s:,.0f} tok/s")
+                t0 = time.time()
+            if saver and (step + 1) % args.ckpt_every == 0:
+                saver.save(state, step + 1)
+        if saver:
+            saver.save(state, args.steps)
+            saver.join()
+        print(f"final loss {np.mean(losses[-5:]):.4f} "
+              f"(first {np.mean(losses[:5]):.4f})")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Shared layers: params-with-specs, norms, embeddings, MLPs, RoPE.
+
+Parameters are created as :class:`Param` leaves carrying a *logical*
+partition spec (axis names "batch" / "model" / None).  The launch layer
+resolves logical names to mesh axes (see repro/launch/mesh.py) — model code
+never references a concrete mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MODEL = "model"
+BATCH = "batch"
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any  # jax.Array | ShapeDtypeStruct
+    spec: tuple  # logical partition spec
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def param_values(tree):
+    return jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def param_specs(tree):
+    return jax.tree_util.tree_map(lambda p: p.spec, tree, is_leaf=is_param)
+
+
+def tree_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(param_values(tree))
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)
+
+
+class Initializer:
+    """Keyed parameter factory.  abstract=True yields ShapeDtypeStructs
+    (used by the dry-run to build full-size param trees without memory)."""
+
+    def __init__(self, key, dtype: str, abstract: bool = False):
+        self.key = key
+        self.dtype = jnp.dtype(dtype)
+        self.abstract = abstract
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def normal(self, shape, spec, scale: Optional[float] = None, dtype=None) -> Param:
+        dtype = jnp.dtype(dtype) if dtype else self.dtype
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(shape, dtype), spec)
+        scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+        v = (jax.random.normal(self._next(), shape, jnp.float32) * scale).astype(dtype)
+        return Param(v, spec)
+
+    def zeros(self, shape, spec, dtype=None) -> Param:
+        dtype = jnp.dtype(dtype) if dtype else self.dtype
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(shape, dtype), spec)
+        return Param(jnp.zeros(shape, dtype), spec)
+
+    def ones(self, shape, spec, dtype=None) -> Param:
+        dtype = jnp.dtype(dtype) if dtype else self.dtype
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(shape, dtype), spec)
+        return Param(jnp.ones(shape, dtype), spec)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def init_rms_norm(init: Initializer, d: int):
+    return {"scale": init.ones((d,), (None,), dtype="float32")}
+
+
+def layer_norm(x, p, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def init_layer_norm(init: Initializer, d: int):
+    return {
+        "scale": init.ones((d,), (None,), dtype="float32"),
+        "bias": init.zeros((d,), (None,), dtype="float32"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(init: Initializer, vocab: int, d: int, shard_vocab: bool):
+    spec = (MODEL if shard_vocab else None, None)
+    return {"table": init.normal((vocab, d), spec, scale=1.0)}
+
+
+def embed(tokens, table, compute_dtype):
+    return jnp.take(table.astype(compute_dtype), tokens, axis=0)
+
+
+def unembed(x, table):
+    # logits in f32 for a stable softmax/xent
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+GATED_ACTS = ("swiglu", "geglu")
+
+
+def init_mlp(init: Initializer, d: int, f: int, act: str, m=MODEL):
+    p = {"down": init.normal((f, d), (m, None))}
+    if act in GATED_ACTS:
+        p["gate"] = init.normal((d, f), (None, m))
+        p["up"] = init.normal((d, f), (None, m))
+    else:  # sqrelu / gelu: single up-projection
+        p["up"] = init.normal((d, f), (None, m))
+    return p
+
+
+def mlp(x, p, act: str):
+    if act in GATED_ACTS:
+        gate_fn = jax.nn.silu if act == "swiglu" else jax.nn.gelu
+        h = gate_fn(x @ p["gate"].astype(x.dtype)) * (x @ p["up"].astype(x.dtype))
+    elif act == "sqrelu":  # nemotron-4: squared ReLU
+        h = jnp.square(jax.nn.relu(x @ p["up"].astype(x.dtype)))
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["up"].astype(x.dtype))
+    else:
+        raise ValueError(act)
+    return h @ p["down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, base: float):
+    return base ** (-jnp.arange(0, d_head // 2, dtype=jnp.float32) / (d_head // 2))
+
+
+def apply_rope(x, positions, base: float):
+    """x: (..., T, H, D); positions: (..., T) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, base)  # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+Scalable dispatch (no (tokens × experts × capacity) one-hot einsum): token
+assignments are ranked per expert via a cumulative-sum position, dropped
+beyond capacity, and scattered into an (experts, capacity, d_model) buffer
+that is expert-sharded over the "model" mesh axis (expert parallelism).
+GSPMD materializes the token shuffle as all-to-all collectives.
+
+Covers the pool's variants: arctic-480b (128e top-2 + dense residual FFN),
+llama4-scout (16e top-1).  A router load-balancing auxiliary loss (Switch
+Transformer style) is returned for the training loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.layers import MODEL, Initializer
+
+
+def init_moe(init: Initializer, cfg: ModelConfig):
+    e = cfg.moe
+    D, F = cfg.d_model, e.d_ff_expert
+    m = MODEL if cfg.tensor_parallel else None
+    if cfg.moe_ep2d:
+        # §Perf: 2D expert sharding — experts over the data axis, expert-FFN
+        # hidden over the model axis: per-chip expert HBM drops by |data|.
+        e_ax, up_spec, down_spec = "batch", ("batch", None, m), ("batch", m, None)
+    else:
+        e_ax, up_spec, down_spec = m, (m, None, None), (m, None, None)
+    p = {
+        "router": init.normal((D, e.n_experts), (None, None), dtype="float32"),
+        "down": init.normal((e.n_experts, F, D), down_spec),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["gate"] = init.normal((e.n_experts, D, F), up_spec)
+        p["up"] = init.normal((e.n_experts, D, F), up_spec)
+    else:
+        p["up"] = init.normal((e.n_experts, D, F), up_spec)
+    if e.dense_residual:
+        p["dense"] = layers.init_mlp(init, D, cfg.d_ff, cfg.act, m=m)
+    return p
+
+
+def _expert_ffn(buf, p, act: str):
+    """buf: (E, C, D) -> (E, C, D), batched over experts."""
+    if act in ("swiglu", "geglu"):
+        gate_fn = jax.nn.silu if act == "swiglu" else jax.nn.gelu
+        h = gate_fn(jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(buf.dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(buf.dtype))
+    else:
+        h = jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(buf.dtype))
+        h = jnp.square(jax.nn.relu(h)) if act == "sqrelu" else jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["down"].astype(buf.dtype))
+
+
+def moe_layer(x, p, cfg: ModelConfig):
+    """x: (B, T, D) -> (out, aux_metrics)."""
+    e = cfg.moe
+    B, T, D = x.shape
+    N = B * T
+    K = e.top_k
+    E = e.n_experts
+    xf = x.reshape(N, D)
+
+    logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (N, E)
+    gate_w, expert_ids = jax.lax.top_k(probs, K)  # (N, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Decode steps (T == 1) run dropless: a dropped token at decode time is a
+    # corrupted response, and N is small, so worst-case capacity N is cheap.
+    if T == 1:
+        capacity = N
+    else:
+        capacity = max(1, int(N * K * e.capacity_factor / E))
+
+    flat_e = expert_ids.reshape(-1)  # (N*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (N*K, E)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # rank within expert
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, 0)
+
+    # scatter tokens into the expert-sharded buffer (E, C, D)
+    xrep = jnp.repeat(xf, K, axis=0)  # (N*K, D) token per assignment
+    contrib = jnp.where(keep[:, None], xrep, 0).astype(cfg.compute_dtype)
+    e_ax = "batch" if cfg.moe_ep2d else "expert"
+    buf = jnp.zeros((E, capacity, D), cfg.compute_dtype)
+    buf = buf.at[flat_e, pos_c].add(contrib, mode="drop")
+    buf = sharding.constrain(buf, e_ax, None, None)
+
+    y = _expert_ffn(buf, p, cfg.act)  # (E, C, D)
+    y = sharding.constrain(y, e_ax, None, None)
+
+    # gather back and combine with gate weights
+    gathered = y[flat_e, pos_c]  # (N*K, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = gate_w.reshape(-1).astype(gathered.dtype)
+    out = (gathered * w[:, None]).reshape(N, K, D).sum(axis=1)
+
+    if e.dense_residual:
+        out = out + layers.mlp(xf, p["dense"], cfg.act)
+
+    out = out.reshape(B, T, D).astype(x.dtype)
+
+    # Switch-style load-balance aux loss + drop fraction diagnostic
+    frac_tokens = jnp.mean(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=(0, 1))
+    frac_prob = probs.mean(axis=0)
+    aux = {
+        "moe_aux_loss": E * jnp.sum(frac_tokens * frac_prob),
+        "moe_drop_frac": 1.0 - keep.mean(),
+    }
+    return out, aux

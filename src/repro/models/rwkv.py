@@ -1,0 +1,140 @@
+"""RWKV6 ("Finch") blocks — attention-free, data-dependent decay.
+
+Time-mix: data-dependent token-shift (ddlerp with rank-32 LoRA) feeding
+r/k/v/g/w projections; the WKV6 recurrence keeps a per-head (dh x dh) state
+with a *data-dependent per-channel decay* w_t (arXiv:2404.05892).
+Channel-mix: squared-ReLU FFN with receptance gating.
+
+Train/prefill run the recurrence as a lax.scan over time (the optimized
+chunked form is kernels/linear_scan.py); decode is a single state update —
+this is why rwkv6 runs the 500k-context shape in O(1) memory.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import MODEL, Initializer, rms_norm
+
+LORA_RANK = 32
+MIX_KEYS = ("r", "k", "v", "g", "w")
+
+
+def init_rwkv_block(init: Initializer, cfg: ModelConfig):
+    D = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = D // dh
+    m = MODEL if cfg.tensor_parallel else None
+    p = {
+        "mu_base": init.normal((D,), (None,), scale=0.02),
+        "wr": init.normal((D, D), (None, m)),
+        "wk": init.normal((D, D), (None, m)),
+        "wv": init.normal((D, D), (None, m)),
+        "wg": init.normal((D, D), (None, m)),
+        "wo": init.normal((D, D), (m, None)),
+        "u": init.normal((H, dh), (m, None), scale=0.02),  # bonus
+        "w_bias": init.normal((D,), (None,), scale=0.02),
+        "ln_x": init.ones((D,), (None,), dtype="float32"),  # per-head group norm
+        # channel mix (squared-ReLU FFN, receptance gated)
+        "ffn_k": init.normal((D, cfg.d_ff), (None, m)),
+        "ffn_v": init.normal((cfg.d_ff, D), (m, None)),
+        "ffn_r": init.normal((D, D), (None, m)),
+        "mu_ffn_k": init.normal((D,), (None,), scale=0.02),
+        "mu_ffn_r": init.normal((D,), (None,), scale=0.02),
+    }
+    for z in MIX_KEYS:
+        p[f"mu_{z}"] = init.normal((D,), (None,), scale=0.02)
+        p[f"lora_a_{z}"] = init.normal((D, LORA_RANK), (None, None), scale=0.02)
+        p[f"lora_b_{z}"] = init.normal((LORA_RANK, D), (None, None), scale=0.02)
+    return p
+
+
+class RWKVState(NamedTuple):
+    x_prev_att: jax.Array  # (B, D) last token fed to time-mix
+    x_prev_ffn: jax.Array  # (B, D)
+    wkv: jax.Array  # (B, H, dh, dh) fp32 recurrent state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RWKVState:
+    D = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    return RWKVState(
+        x_prev_att=jnp.zeros((batch, D), dtype),
+        x_prev_ffn=jnp.zeros((batch, D), dtype),
+        wkv=jnp.zeros((batch, D // dh, dh, dh), jnp.float32),
+    )
+
+
+def _ddlerp(x, x_prev, p, z: str):
+    """Data-dependent lerp between x and the shifted sequence (v6)."""
+    xx = x_prev - x
+    base = x + xx * p["mu_base"].astype(x.dtype)
+    lora = jnp.tanh(base @ p[f"lora_a_{z}"].astype(x.dtype)) @ p[f"lora_b_{z}"].astype(x.dtype)
+    return x + xx * (p[f"mu_{z}"].astype(x.dtype) + lora)
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """The WKV6 recurrence.  r,k,v,w: (B, T, H, dh); state: (B, H, dh, dh).
+
+    y_t = r_t · (S + u ⊙ k_t ⊗ v_t);  S' = diag(w_t)·S + k_t ⊗ v_t
+    """
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs  # (B, H, dh)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, dh, dh)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (rf, kf, vf, wf))  # (T, B, H, dh)
+    state, ys = jax.lax.scan(step, state, xs)
+    return state, ys.swapaxes(0, 1)  # (B, T, H, dh)
+
+
+def rwkv_block(x, p, cfg: ModelConfig, state: RWKVState = None):
+    """x: (B, T, D).  Returns (out, new_state)."""
+    B, T, D = x.shape
+    dh = cfg.rwkv_head_dim
+    H = D // dh
+
+    if state is None:
+        state = init_rwkv_state(cfg, B, x.dtype)
+
+    # ---- time mix
+    x_shift = jnp.concatenate([state.x_prev_att[:, None, :], x[:, :-1, :]], axis=1)
+    r = _ddlerp(x, x_shift, p, "r") @ p["wr"].astype(x.dtype)
+    k = _ddlerp(x, x_shift, p, "k") @ p["wk"].astype(x.dtype)
+    v = _ddlerp(x, x_shift, p, "v") @ p["wv"].astype(x.dtype)
+    g = jax.nn.silu(_ddlerp(x, x_shift, p, "g") @ p["wg"].astype(x.dtype))
+    w_lin = _ddlerp(x, x_shift, p, "w") + p["w_bias"].astype(x.dtype)
+    # clamp the log-log decay: exp(x) overflows f32 past ~88 and the grad of
+    # exp(-exp(x)) becomes inf*0 = NaN; [-8, 4] spans decay in [~0, 0.9997]
+    w_lin = jnp.clip(w_lin.astype(jnp.float32), -8.0, 4.0)
+    w = jnp.exp(-jnp.exp(w_lin))  # per-channel decay in (0,1)
+
+    hd = lambda a: a.reshape(B, T, H, dh)
+    new_wkv, y = _wkv_scan(hd(r), hd(k), hd(v), hd(w), p["u"].astype(jnp.float32),
+                           state.wkv)
+    y = y.reshape(B, T, D)
+    y = rms_norm(y, p["ln_x"])  # group-norm stand-in over channels
+    att_out = (y.astype(x.dtype) * g) @ p["wo"].astype(x.dtype)
+    h = x + att_out
+
+    # ---- channel mix
+    h_shift = jnp.concatenate([state.x_prev_ffn[:, None, :], h[:, :-1, :]], axis=1)
+    xx = h_shift - h
+    hk = h + xx * p["mu_ffn_k"].astype(h.dtype)
+    hr = h + xx * p["mu_ffn_r"].astype(h.dtype)
+    kk = jnp.square(jax.nn.relu(hk @ p["ffn_k"].astype(h.dtype)))
+    ffn = jax.nn.sigmoid(hr @ p["ffn_r"].astype(h.dtype)) * (kk @ p["ffn_v"].astype(h.dtype))
+    out = h + ffn
+
+    new_state = RWKVState(
+        x_prev_att=x[:, -1, :], x_prev_ffn=h[:, -1, :], wkv=new_wkv
+    )
+    return out, new_state

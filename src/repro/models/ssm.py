@@ -1,0 +1,146 @@
+"""Mamba2 (SSD) blocks — the zamba2 hybrid's recurrent layers.
+
+Structure follows Mamba2 (expansion 2, grouped B/C with one group, per-head
+scalar decay): in_proj -> [z | xBC | dt]; short causal conv over xBC;
+selective state update h' = exp(-dt·exp(A))·h + dt·x⊗B; y = C·h + D·x,
+gated by silu(z).  Train/prefill scan over time (chunked optimized form in
+kernels/linear_scan.py); decode is one state update + conv-window shift.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import MODEL, Initializer, rms_norm
+
+EXPAND = 2
+HEAD_DIM = 64
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = EXPAND * cfg.d_model
+    n_heads = d_inner // HEAD_DIM if d_inner >= HEAD_DIM else 1
+    head_dim = d_inner // n_heads
+    return d_inner, n_heads, head_dim
+
+
+def init_mamba_block(init: Initializer, cfg: ModelConfig):
+    D = cfg.d_model
+    d_inner, n_heads, _ = _dims(cfg)
+    ds = cfg.ssm_state
+    m = MODEL if cfg.tensor_parallel else None
+    p = {
+        "conv_w": init.normal((cfg.ssm_conv_width, d_inner + 2 * ds), (None, None),
+                              scale=0.5),
+        "conv_b": init.zeros((d_inner + 2 * ds,), (None,)),
+        "A_log": init.zeros((n_heads,), (None,), dtype="float32"),
+        "D": init.ones((n_heads,), (None,), dtype="float32"),
+        "dt_bias": init.zeros((n_heads,), (None,), dtype="float32"),
+        "norm": init.ones((d_inner,), (None,), dtype="float32"),
+        "out_proj": init.normal((d_inner, D), (m, None)),
+    }
+    if cfg.ssm_split_proj:
+        # §Perf: z/x head-sharded; B/C/dt tiny and REPLICATED so the
+        # per-timestep scan never crosses a sharding boundary.
+        p["in_z"] = init.normal((D, d_inner), (None, m))
+        p["in_x"] = init.normal((D, d_inner), (None, m))
+        p["in_bc"] = init.normal((D, 2 * ds), (None, None))
+        p["in_dt"] = init.normal((D, n_heads), (None, None))
+    else:
+        in_dim = 2 * d_inner + 2 * ds + n_heads  # z | x | B | C | dt
+        p["in_proj"] = init.normal((D, in_dim), (None, m))
+    return p
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, W-1, d_inner + 2*ds) — conv window tail
+    ssm: jax.Array  # (B, n_heads, head_dim, d_state) fp32
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    d_inner, n_heads, head_dim = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, d_inner + 2 * cfg.ssm_state),
+                       dtype),
+        ssm=jnp.zeros((batch, n_heads, head_dim, cfg.ssm_state), jnp.float32),
+    )
+
+
+def _causal_conv(x, w, b, prefix):
+    """x: (B, T, C); w: (W, C) depthwise; prefix: (B, W-1, C) from state."""
+    W = w.shape[0]
+    xp = jnp.concatenate([prefix, x], axis=1)  # (B, T+W-1, C)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return out + b[None, None, :], xp[:, -(W - 1):, :]
+
+
+def mamba_block(x, p, cfg: ModelConfig, state: MambaState = None):
+    """x: (B, T, D) -> (out, new_state)."""
+    B, T, D = x.shape
+    d_inner, n_heads, head_dim = _dims(cfg)
+    ds = cfg.ssm_state
+
+    if state is None:
+        state = init_mamba_state(cfg, B, x.dtype)
+
+    cw = p["conv_w"].astype(x.dtype)
+    cb = p["conv_b"].astype(x.dtype)
+    if cfg.ssm_split_proj:
+        # §Perf variant: conv applied piecewise so the (sharded) x stream
+        # and the (replicated) B/C stream never get concatenated.
+        z = x @ p["in_z"].astype(x.dtype)
+        xs_in = x @ p["in_x"].astype(x.dtype)
+        bc = x @ p["in_bc"].astype(x.dtype)
+        dt_raw = x @ p["in_dt"].astype(x.dtype)
+        xs_c, conv_x = _causal_conv(xs_in, cw[:, :d_inner], cb[:d_inner],
+                                    state.conv[..., :d_inner])
+        bc_c, conv_bc = _causal_conv(bc, cw[:, d_inner:], cb[d_inner:],
+                                     state.conv[..., d_inner:])
+        new_conv = jnp.concatenate([conv_x, conv_bc], axis=-1)
+        xs = jax.nn.silu(xs_c).reshape(B, T, n_heads, head_dim)
+        bc_c = jax.nn.silu(bc_c)
+        Bmat, Cmat = bc_c[..., :ds], bc_c[..., ds:]
+    else:
+        zxbcdt = x @ p["in_proj"].astype(x.dtype)
+        z = zxbcdt[..., :d_inner]
+        xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * ds]
+        dt_raw = zxbcdt[..., 2 * d_inner + 2 * ds :]  # (B, T, n_heads)
+
+        xbc, new_conv = _causal_conv(xbc, cw, cb, state.conv)
+        xbc = jax.nn.silu(xbc)
+        xs = xbc[..., :d_inner].reshape(B, T, n_heads, head_dim)
+        Bmat = xbc[..., d_inner : d_inner + ds]  # (B, T, ds) one group
+        Cmat = xbc[..., d_inner + ds :]  # (B, T, ds)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,T,H)
+    decay = jnp.exp(-dt * jnp.exp(p["A_log"].astype(jnp.float32)))  # (B,T,H)
+
+    def step(h, inputs):
+        xt, bt, ct, dct, dtt = inputs  # (B,H,hd), (B,ds), (B,ds), (B,H), (B,H)
+        dx = dtt[..., None] * xt.astype(jnp.float32)  # (B,H,hd)
+        h = dct[..., None, None] * h + dx[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhds,bs->bhd", h, ct.astype(jnp.float32))
+        # emit per-step outputs in compute dtype: the stacked (T,B,H,hd) ys
+        # crosses shards at the output norm, and f32 doubles those bytes
+        return h, y.astype(x.dtype)
+
+    xs_t = xs.swapaxes(0, 1)  # (T,B,H,hd)
+    b_t = Bmat.astype(jnp.float32).swapaxes(0, 1)
+    c_t = Cmat.astype(jnp.float32).swapaxes(0, 1)
+    dc_t = decay.swapaxes(0, 1)
+    dt_t = dt.swapaxes(0, 1)
+    new_ssm, ys = jax.lax.scan(step, state.ssm, (xs_t, b_t, c_t, dc_t, dt_t))
+    ys = ys.swapaxes(0, 1)  # (B,T,H,hd) in compute dtype
+    ys = ys + p["D"].astype(x.dtype)[None, None, :, None] * xs
+
+    y = ys.reshape(B, T, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, MambaState(conv=new_conv, ssm=new_ssm)

@@ -1,0 +1,334 @@
+"""Decoder-LM assembly for all pool families.
+
+Layers are organized into **stages**: a stage is ``(group_count, block
+pattern)`` and is executed as a ``lax.scan`` over stacked per-group params —
+this keeps HLO size and compile time O(pattern) instead of O(n_layers),
+which matters when dry-running 40 (arch × shape) cells.
+
+  qwen3/internlm2/nemotron/chameleon : [(L, (attn-global,))]
+  gemma3 (5 local : 1 global, 62L)   : [(10, (l,l,l,l,l,g)), (1, (l,l))]
+  arctic/llama4 (MoE)                : [(L, (attn-global+moe,))]
+  rwkv6                              : [(L, (rwkv6,))]
+  zamba2 (38L, shared attn every 6)  : [(6, (m*,m,m,m,m,m)), (1, (m*,m))]
+                                       (m* = mamba2 + shared attn block)
+
+KV caches / recurrent states mirror the stage structure (leaves carry a
+leading group axis and are scanned alongside params).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import KVCache, attention, init_attention, init_kv_cache
+from repro.models.config import ModelConfig
+from repro.models.layers import Initializer, Param, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Stage plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDesc:
+    kind: str  # "attn" | "rwkv6" | "mamba2"
+    attn_kind: str = "global"  # for attn blocks: global | local
+    shared_attn: bool = False  # zamba2: run the shared attn block first
+
+
+def build_stages(cfg: ModelConfig):
+    """Returns [(group_count, tuple[BlockDesc, ...]), ...]."""
+    if cfg.block == "attn":
+        pattern = tuple(BlockDesc("attn", k) for k in cfg.attn_pattern)
+    elif cfg.block == "rwkv6":
+        pattern = (BlockDesc("rwkv6"),)
+    elif cfg.block == "mamba2":
+        k = cfg.shared_attn_every
+        if k:
+            pattern = (BlockDesc("mamba2", shared_attn=True),) + tuple(
+                BlockDesc("mamba2") for _ in range(k - 1)
+            )
+        else:
+            pattern = (BlockDesc("mamba2"),)
+    else:
+        raise ValueError(cfg.block)
+
+    P = len(pattern)
+    stages = []
+    if cfg.n_layers // P:
+        stages.append((cfg.n_layers // P, pattern))
+    if cfg.n_layers % P:
+        stages.append((1, pattern[: cfg.n_layers % P]))
+    return stages
+
+
+class VInit:
+    """Initializer wrapper that stacks a group axis onto every param."""
+
+    def __init__(self, inner: Initializer, g: int):
+        self.inner = inner
+        self.g = g
+
+    def normal(self, shape, spec, **kw):
+        return self.inner.normal((self.g,) + tuple(shape), (None,) + tuple(spec), **kw)
+
+    def zeros(self, shape, spec, **kw):
+        return self.inner.zeros((self.g,) + tuple(shape), (None,) + tuple(spec), **kw)
+
+    def ones(self, shape, spec, **kw):
+        return self.inner.ones((self.g,) + tuple(shape), (None,) + tuple(spec), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _init_block(init, cfg: ModelConfig, desc: BlockDesc):
+    p = {"ln1": L.init_rms_norm(init, cfg.d_model)}
+    if desc.kind == "attn":
+        p["attn"] = init_attention(init, cfg)
+        p["ln2"] = L.init_rms_norm(init, cfg.d_model)
+        if cfg.moe is not None:
+            p["moe"] = moe_lib.init_moe(init, cfg)
+        else:
+            p["mlp"] = L.init_mlp(
+                init, cfg.d_model, cfg.d_ff, cfg.act,
+                m=L.MODEL if cfg.tensor_parallel else None,
+            )
+    elif desc.kind == "rwkv6":
+        p["rwkv"] = rwkv_lib.init_rwkv_block(init, cfg)
+        p["ln2"] = L.init_rms_norm(init, cfg.d_model)
+    elif desc.kind == "mamba2":
+        p["mamba"] = ssm_lib.init_mamba_block(init, cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, abstract: bool = False):
+    init = Initializer(key, cfg.param_dtype, abstract=abstract)
+    params: dict = {
+        "embed": L.init_embedding(
+            init, cfg.vocab, cfg.d_model,
+            shard_vocab=cfg.tensor_parallel and cfg.vocab % 16 == 0,
+        ),
+        "final_norm": L.init_rms_norm(init, cfg.d_model),
+        "stages": [],
+    }
+    for g, pattern in build_stages(cfg):
+        vinit = VInit(init, g)
+        params["stages"].append(
+            tuple(_init_block(vinit, cfg, desc) for desc in pattern)
+        )
+    if cfg.shared_attn_every:
+        # zamba2's shared transformer block (params reused at every call site)
+        params["shared"] = {
+            "ln1": L.init_rms_norm(init, cfg.d_model),
+            "attn": init_attention(init, cfg),
+            "ln2": L.init_rms_norm(init, cfg.d_model),
+            "mlp": L.init_mlp(init, cfg.d_model, cfg.d_ff, cfg.act,
+                              m=L.MODEL if cfg.tensor_parallel else None),
+        }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.init_embedding(
+            init, cfg.vocab, cfg.d_model,
+            shard_vocab=cfg.tensor_parallel and cfg.vocab % 16 == 0,
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches / recurrent state
+# ---------------------------------------------------------------------------
+
+
+def _stack(tree, g):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (g,) + x.shape), tree
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Cache pytree mirroring the stage structure."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    caches = []
+    for g, pattern in build_stages(cfg):
+        stage = []
+        for desc in pattern:
+            if desc.kind == "attn":
+                c = init_kv_cache(batch, max_seq, cfg.n_kv_heads, cfg.d_head, dtype)
+            elif desc.kind == "rwkv6":
+                c = rwkv_lib.init_rwkv_state(cfg, batch, dtype)
+            else:
+                c = ssm_lib.init_mamba_state(cfg, batch, dtype)
+            if desc.shared_attn:
+                c = (init_kv_cache(batch, max_seq, cfg.n_kv_heads, cfg.d_head, dtype), c)
+            stage.append(_stack(c, g))
+        caches.append(tuple(stage))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(h, bp, desc: BlockDesc, cfg, positions, cache, shared_params,
+                 use_pallas: bool):
+    """One block.  Returns (h, new_cache, aux)."""
+    aux = {"moe_aux_loss": jnp.float32(0.0), "moe_drop_frac": jnp.float32(0.0)}
+
+    if desc.shared_attn and shared_params is not None:
+        sc, inner_cache = cache if cache is not None else (None, None)
+        a, sc = attention(
+            rms_norm(h, shared_params["ln1"]["scale"]), shared_params["attn"],
+            cfg, "global", positions, kv_cache=sc, use_pallas=use_pallas,
+        )
+        h = h + a
+        h = h + L.mlp(rms_norm(h, shared_params["ln2"]["scale"]),
+                      shared_params["mlp"], cfg.act)
+    else:
+        sc, inner_cache = None, cache
+
+    if desc.kind == "attn":
+        a, new_c = attention(
+            rms_norm(h, bp["ln1"]["scale"]), bp["attn"], cfg, desc.attn_kind,
+            positions, kv_cache=inner_cache, use_pallas=use_pallas,
+        )
+        h = h + a
+        hn = rms_norm(h, bp["ln2"]["scale"])
+        if cfg.moe is not None:
+            y, aux = moe_lib.moe_layer(hn, bp["moe"], cfg)
+        else:
+            y = L.mlp(hn, bp["mlp"], cfg.act)
+        h = h + y
+    elif desc.kind == "rwkv6":
+        h, new_c = rwkv_lib.rwkv_block(h, bp["rwkv"], cfg, inner_cache)
+    elif desc.kind == "mamba2":
+        y, new_c = ssm_lib.mamba_block(
+            rms_norm(h, bp["ln1"]["scale"]), bp["mamba"], cfg, inner_cache
+        )
+        h = h + y
+    else:
+        raise ValueError(desc.kind)
+
+    if desc.shared_attn and shared_params is not None:
+        new_c = (sc, new_c)
+    if cfg.sequence_parallel and h.shape[1] > 1:
+        # §Perf: residual stream sequence-sharded between blocks — GSPMD
+        # turns per-block TP all-reduces into reduce-scatter + all-gather
+        h = sharding.constrain(h, "batch", "model", None)
+    else:
+        h = sharding.constrain(h, "batch", None, None)
+    return h, new_c, aux
+
+
+def forward(
+    params,
+    tokens,
+    cfg: ModelConfig,
+    caches=None,
+    cache_len=None,
+    embeddings=None,
+    remat: str = "none",
+    use_pallas: bool = False,
+    unembed_last_only: bool = False,
+):
+    """tokens: (B, T) int32 (or embeddings: (B, T, D) for stub frontends).
+
+    caches None  -> train/prefill without cache retention.
+    caches given -> positions offset by cache_len; caches are updated
+                    (prefill writes T entries, decode writes 1).
+
+    Returns (logits_f32, new_caches, aux).
+    """
+    compute = jnp.dtype(cfg.compute_dtype)
+    if embeddings is None:
+        h = L.embed(tokens, params["embed"]["table"], compute)
+        B, T = tokens.shape
+    else:
+        h = embeddings.astype(compute)
+        B, T = embeddings.shape[:2]
+    h = sharding.constrain(h, "batch", None, None)
+
+    base = jnp.int32(0) if cache_len is None else cache_len
+    base = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(base, jnp.int32)), (B,))
+    positions = base[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+
+    shared = params.get("shared")
+    stages = build_stages(cfg)
+    new_caches = [] if caches is not None else None
+    aux_tot = {"moe_aux_loss": jnp.float32(0.0), "moe_drop_frac": jnp.float32(0.0)}
+
+    for si, (g, pattern) in enumerate(stages):
+        stage_params = params["stages"][si]
+        stage_cache = caches[si] if caches is not None else tuple(
+            None for _ in pattern
+        )
+
+        def body(h, xs, pattern=pattern):
+            bps, cs = xs
+            auxes = []
+            new_cs = []
+            for desc, bp, c in zip(pattern, bps, cs):
+                h, nc, aux = _apply_block(
+                    h, bp, desc, cfg, positions, c, shared, use_pallas
+                )
+                new_cs.append(nc)
+                auxes.append(aux)
+            aux = jax.tree_util.tree_map(lambda *a: sum(a), *auxes)
+            return h, (tuple(new_cs), aux)
+
+        if remat == "full":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+
+        if caches is not None:
+            h, (stage_new_cache, stage_aux) = jax.lax.scan(
+                body, h, (stage_params, stage_cache)
+            )
+            new_caches.append(stage_new_cache)
+        else:
+            dummy = tuple(
+                jax.tree_util.tree_map(lambda x: None, c) for c in stage_cache
+            )
+            h, (_, stage_aux) = jax.lax.scan(body, h, (stage_params, dummy))
+        aux_tot = jax.tree_util.tree_map(
+            lambda a, b: a + b.sum(), aux_tot, stage_aux
+        )
+
+    h = rms_norm(h, params["final_norm"]["scale"])
+    if unembed_last_only:
+        # serving prefill: only next-token logits — a (B, T, V) f32 buffer
+        # at 32k tokens x 150k vocab would be hundreds of GB per chip
+        h = h[:, -1:]
+    table = (params["embed"] if cfg.tie_embeddings else params["unembed"])["table"]
+    logits = L.unembed(h, table)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = sharding.constrain(logits, "batch", None, "model")
+    return logits, new_caches, aux_tot
+
+
+def decode_step(params, tokens, caches, cache_len, cfg: ModelConfig,
+                use_pallas: bool = False):
+    """One decode step.  tokens: (B, 1).  Returns (logits, new_caches)."""
+    logits, new_caches, _ = forward(
+        params, tokens, cfg, caches=caches, cache_len=cache_len,
+        use_pallas=use_pallas,
+    )
+    return logits, new_caches

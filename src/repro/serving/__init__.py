@@ -1,0 +1,5 @@
+"""repro.serving — continuous batching engine + prefix cache controller."""
+
+from repro.serving.engine import Engine, Request, ServeConfig
+from repro.serving.prefix_cache import PrefixCache, chunk_hashes
+from repro.serving.kv_pages import PageAllocator

@@ -1,0 +1,327 @@
+"""Serving engine: continuous batching + prefix cache + paged KV pool.
+
+Design (DESIGN.md §2):
+  * a fixed pool of `max_seqs` dense decode slots (the closed-loop MPL N —
+    exactly the paper's multiprogramming limit);
+  * a host-side **controller**: prefix-cache lookup/insert under a
+    pluggable eviction policy, page allocator, slot scheduler.  Every
+    controller action's metadata ops are recorded — these are the paper's
+    serialized queue-station visits;
+  * admission: chunk the prompt, gather prefix-cache hit pages into the
+    slot's dense cache (attention archs) or restore a state snapshot (SSM
+    archs), prefill only the uncached remainder, then insert the newly
+    computed chunks into the cache;
+  * decode: one batched step for all active slots per engine tick;
+  * bypass (paper §5.2 mitigation): a fraction of requests skip the
+    controller entirely.
+
+Works for every non-encdec arch in the pool; whisper (enc-dec) is served
+by examples/ with per-request cross-KV instead (no prefix reuse — see
+DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serving import kv_pages
+from repro.serving.kv_pages import PageAllocator
+from repro.serving.prefix_cache import PrefixCache, chunk_hashes
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seqs: int = 4  # MPL (decode slots)
+    max_seq_len: int = 256
+    page_size: int = 16  # tokens per KV page / prefix chunk
+    n_pages: int = 64
+    prefix_capacity: int = 48  # policy capacity (pages)
+    policy: str = "lru"
+    bypass_fraction: float = 0.0
+    max_new_tokens: int = 16
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray  # prompt
+    max_new: int
+    out: Optional[List[int]] = None
+    slot: int = -1
+    done: bool = False
+    prefill_tokens_computed: int = 0
+    prefill_tokens_skipped: int = 0
+
+
+def _leaf_is_kv(path) -> bool:
+    name = getattr(path[-1], "name", None)
+    return name in ("k", "v")
+
+
+def _leaf_is_index(path) -> bool:
+    return getattr(path[-1], "name", None) == "index"
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig):
+        if cfg.encdec:
+            raise ValueError("enc-dec archs are served via examples/, not Engine")
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self.state_mode = cfg.block in ("rwkv6", "mamba2")  # snapshot caching
+
+        self.caches = transformer.init_cache(
+            cfg, serve.max_seqs, serve.max_seq_len
+        )
+        self.pool = jax.tree_util.tree_map_with_path(
+            lambda p, leaf: None if _leaf_is_index(p) else (
+                kv_pages.make_kv_pool_leaf(leaf, serve.n_pages, serve.page_size,
+                                           is_kv=_leaf_is_kv(p))
+            ),
+            self.caches,
+        )
+        self.allocator = PageAllocator(serve.n_pages)
+        self.prefix = PrefixCache(
+            self.allocator, serve.prefix_capacity, policy=serve.policy
+        )
+        self.lengths = np.zeros(serve.max_seqs, dtype=np.int64)
+        self.active: Dict[int, Request] = {}  # slot -> request
+        self.free_slots = list(range(serve.max_seqs))
+        self.waiting: List[Request] = []
+        self._rng = np.random.default_rng(serve.seed)
+        self.ticks = 0
+        self.decode_steps = 0
+
+        self._decode = jax.jit(
+            lambda p, t, c, l: transformer.decode_step(p, t, c, l, cfg)
+        )
+        self._prefill = jax.jit(
+            lambda p, t, c, l: transformer.forward(p, t, cfg, caches=c,
+                                                   cache_len=l)[:2]
+        )
+
+    # ------------------------------------------------------------- admission
+    def submit(self, tokens, max_new: Optional[int] = None, rid: Optional[int] = None):
+        r = Request(
+            rid=len(self.waiting) if rid is None else rid,
+            tokens=np.asarray(tokens, dtype=np.int64),
+            max_new=max_new or self.serve.max_new_tokens,
+        )
+        self.waiting.append(r)
+        return r
+
+    def _slot_cache(self, slot: int):
+        """Fresh single-sequence cache view for prefill of `slot`."""
+        return transformer.init_cache(self.cfg, 1, self.serve.max_seq_len)
+
+    def _admit(self, r: Request, slot: int) -> None:
+        ps = self.serve.page_size
+        bypass = self._rng.random() < self.serve.bypass_fraction
+        hashes = [] if bypass else chunk_hashes(r.tokens, ps)
+        if bypass:
+            self.prefix.stats.bypassed += 1
+
+        cache1 = self._slot_cache(slot)
+
+        if self.state_mode:
+            logits, cache1, r_stats = self._admit_state(r, cache1, hashes)
+            r.prefill_tokens_skipped, r.prefill_tokens_computed = r_stats
+        else:
+            n_hit = 0
+            if hashes:
+                pages, n_hit = self.prefix.lookup(hashes)
+                if n_hit:
+                    cache1 = self._gather(cache1, pages)
+
+            start = n_hit * ps
+            remainder = r.tokens[start:]
+            r.prefill_tokens_skipped = start
+            r.prefill_tokens_computed = len(remainder)
+            if len(remainder) == 0:  # full hit: re-prefill the last token
+                # (idempotent for KV caches: position len-1 is overwritten
+                # with identical values)
+                remainder = r.tokens[-1:]
+                start = len(r.tokens) - 1
+                r.prefill_tokens_computed = 1
+
+            toks = jnp.asarray(remainder, jnp.int32)[None, :]
+            cache_len = jnp.full((1,), start, jnp.int32)
+            if n_hit:
+                cache1 = self._set_index(cache1, start)
+            logits, cache1 = self._prefill(self.params, toks, cache1, cache_len)
+
+            # insert newly computed full chunks into the prefix cache
+            if hashes:
+                n_full = len(r.tokens) // ps
+                for i in range(n_hit, n_full):
+                    page = self.prefix.insert(hashes[i], self._rng.random())
+                    if page is not None:
+                        self._store_chunk(cache1, i * ps, page)
+
+        self._install(cache1, slot)
+        self.lengths[slot] = len(r.tokens)
+        first = int(np.asarray(logits[0, -1]).argmax())
+        r.out = [first]
+        r.slot = slot
+        self.active[slot] = r
+
+    def _admit_state(self, r: Request, cache1, hashes):
+        """SSM/hybrid admission: all-or-nothing snapshot of the recurrent
+        state at len(prompt)-1; the final prompt token is always prefilled
+        fresh (state updates are not idempotent, unlike KV writes)."""
+        full = hashes[-1] if hashes else None
+        hit = full is not None and full in self.prefix.pages
+
+        if hit:
+            pages, _ = self.prefix.lookup([full])
+            cache1 = self._restore_state(cache1, pages[0])
+            head, start = r.tokens[-1:], len(r.tokens) - 1
+            skipped, computed = len(r.tokens) - 1, 1
+            logits, cache1 = self._prefill(
+                self.params, jnp.asarray(head, jnp.int32)[None, :], cache1,
+                jnp.full((1,), start, jnp.int32),
+            )
+            return logits, cache1, (skipped, computed)
+
+        if full is not None:
+            self.prefix.stats.chunk_misses += 1
+        skipped, computed = 0, len(r.tokens)
+        head, last = r.tokens[:-1], r.tokens[-1:]
+        if len(head):
+            _, cache1 = self._prefill(
+                self.params, jnp.asarray(head, jnp.int32)[None, :], cache1,
+                jnp.zeros((1,), jnp.int32),
+            )
+        if full is not None:  # snapshot the state at len-1
+            page = self.prefix.insert(full, self._rng.random())
+            if page is not None:
+                self._store_state(cache1, page)
+        logits, cache1 = self._prefill(
+            self.params, jnp.asarray(last, jnp.int32)[None, :], cache1,
+            jnp.full((1,), len(head), jnp.int32),
+        )
+        return logits, cache1, (skipped, computed)
+
+    # ------------------------------------------------ cache <-> pool plumbing
+    # The pool tree carries None at index leaves, so pool goes FIRST in every
+    # tree_map (None treated as a leaf via is_leaf) and the cache rides along.
+    _IS_NONE = staticmethod(lambda x: x is None)
+
+    def _gather(self, cache1, pages: List[int]):
+        ids = jnp.asarray(pages, jnp.int32)
+
+        def fn(path, pleaf, cleaf):
+            if pleaf is None or not _leaf_is_kv(path):
+                return cleaf
+            return kv_pages.gather_pages(cleaf, pleaf, 0, ids)
+
+        return jax.tree_util.tree_map_with_path(
+            fn, self.pool, cache1, is_leaf=self._IS_NONE
+        )
+
+    def _store_chunk(self, cache1, start: int, page_id: int):
+        def fn(path, pleaf, cleaf):
+            if pleaf is None or not _leaf_is_kv(path):
+                return pleaf
+            return kv_pages.store_chunk(pleaf, cleaf, 0, start, page_id)
+
+        self.pool = jax.tree_util.tree_map_with_path(
+            fn, self.pool, cache1, is_leaf=self._IS_NONE
+        )
+
+    def _store_state(self, cache1, page_id: int):
+        def fn(path, pleaf, cleaf):
+            if pleaf is None or _leaf_is_kv(path):
+                return pleaf
+            return kv_pages.store_state(pleaf, cleaf, 0, page_id)
+
+        self.pool = jax.tree_util.tree_map_with_path(
+            fn, self.pool, cache1, is_leaf=self._IS_NONE
+        )
+
+    def _restore_state(self, cache1, page_id: int):
+        def fn(path, pleaf, cleaf):
+            if pleaf is None or _leaf_is_kv(path):
+                return cleaf
+            return kv_pages.restore_state(cleaf, pleaf, 0, page_id)
+
+        return jax.tree_util.tree_map_with_path(
+            fn, self.pool, cache1, is_leaf=self._IS_NONE
+        )
+
+    def _set_index(self, cache1, value: int):
+        def fn(path, leaf):
+            if _leaf_is_index(path):
+                return jnp.full_like(leaf, value)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(fn, cache1)
+
+    def _install(self, cache1, slot: int):
+        def fn(batch_leaf, single_leaf):
+            return batch_leaf.at[:, slot].set(single_leaf[:, 0])
+
+        self.caches = jax.tree_util.tree_map(fn, self.caches, cache1)
+
+    # ------------------------------------------------------------------ tick
+    def tick(self) -> bool:
+        """Admit waiting requests, run one batched decode step.
+        Returns True while work remains."""
+        self.ticks += 1
+        while self.waiting and self.free_slots:
+            slot = self.free_slots.pop()
+            self._admit(self.waiting.pop(0), slot)
+
+        if not self.active:
+            return bool(self.waiting)
+
+        B = self.serve.max_seqs
+        tokens = np.zeros((B, 1), dtype=np.int32)
+        for slot, r in self.active.items():
+            tokens[slot, 0] = r.out[-1]
+        lens = jnp.asarray(self.lengths + np.arange(B) * 0, jnp.int32)
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(tokens), self.caches, lens
+        )
+        self.decode_steps += 1
+        nxt = np.asarray(logits[:, 0].argmax(axis=-1))
+
+        finished = []
+        for slot, r in list(self.active.items()):
+            self.lengths[slot] += 1
+            if len(r.out) >= r.max_new:
+                r.done = True
+                finished.append(slot)
+            else:
+                r.out.append(int(nxt[slot]))
+        for slot in finished:
+            del self.active[slot]
+            self.free_slots.append(slot)
+            self.lengths[slot] = 0
+        return bool(self.active or self.waiting)
+
+    def run(self, max_ticks: int = 10_000):
+        while self.tick():
+            if self.ticks >= max_ticks:
+                raise RuntimeError("engine did not drain")
+        return self.stats()
+
+    def stats(self) -> dict:
+        s = self.prefix.stats
+        return {
+            "decode_steps": self.decode_steps,
+            "chunk_hit_ratio": s.hit_ratio,
+            "controller_ops": s.ops.tolist(),
+            "evictions": s.evictions,
+            "bypassed": s.bypassed,
+            "pages_free": self.allocator.n_free,
+        }

@@ -1,0 +1,82 @@
+"""Device-side KV page pool + host-side allocator.
+
+Pages hold `page_size` tokens of per-layer K/V (mirroring the stage-stacked
+cache structure of repro.models.transformer).  The prefix cache is the sole
+owner of pool pages: admission *gathers* hit pages into the request's dense
+decode-cache slot, so pages are never referenced by in-flight requests and
+eviction is always safe (no refcounting needed — see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+
+class PageAllocator:
+    """Host-side free list over page ids [0, n_pages)."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages))
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("page pool exhausted")
+        return self._free.pop()
+
+    def free(self, page_id: int) -> None:
+        self._free.append(page_id)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+
+def make_kv_pool_leaf(leaf, n_pages: int, page_size: int, is_kv: bool):
+    """Pool array for one cache leaf.
+
+    K/V leaves (g, B, S, KV, dh) -> chunk pages (g, n_pages, page, KV, dh);
+    recurrent-state leaves (g, B, *state) -> snapshots (g, n_pages, *state).
+    """
+    g = leaf.shape[0]
+    if is_kv:
+        _, _, _, kvh, dh = leaf.shape
+        return jnp.zeros((g, n_pages, page_size, kvh, dh), leaf.dtype)
+    return jnp.zeros((g, n_pages) + leaf.shape[2:], leaf.dtype)
+
+
+@jax.jit
+def store_chunk(pool_leaf, cache_leaf, slot, start, page_id):
+    """pool[page_id] <- cache[slot, start : start+page] (one K/V leaf)."""
+    page = pool_leaf.shape[2]
+    chunk = jax.lax.dynamic_slice_in_dim(
+        cache_leaf[:, slot], start, page, axis=1
+    )  # (g, page, KV, dh)
+    return pool_leaf.at[:, page_id].set(chunk)
+
+
+@jax.jit
+def gather_pages(cache_leaf, pool_leaf, slot, page_ids):
+    """cache[slot, 0 : n*page] <- pool[page_ids] (one K/V leaf)."""
+    g = pool_leaf.shape[0]
+    pages = pool_leaf[:, page_ids]  # (g, n, page, KV, dh)
+    n, page = pages.shape[1], pages.shape[2]
+    flat = pages.reshape(g, n * page, *pages.shape[3:])
+    updated = jax.lax.dynamic_update_slice_in_dim(
+        cache_leaf[:, slot], flat, 0, axis=1
+    )
+    return cache_leaf.at[:, slot].set(updated)
+
+
+@jax.jit
+def store_state(pool_leaf, state_leaf, slot, page_id):
+    """Snapshot pool[page_id] <- state[slot] (recurrent-state leaf)."""
+    return pool_leaf.at[:, page_id].set(state_leaf[:, slot])
+
+
+@jax.jit
+def restore_state(state_leaf, pool_leaf, slot, page_id):
+    return state_leaf.at[:, slot].set(pool_leaf[:, page_id])

@@ -1,0 +1,113 @@
+"""Logical-axis sharding context.
+
+Model code annotates params/activations with *logical* axis names
+("batch", "model", None).  The launcher installs a :class:`MeshContext`
+that resolves logical names to concrete mesh axes:
+
+    single-pod:  batch -> ("data",)          model -> "model"
+    multi-pod:   batch -> ("pod", "data")    model -> "model"
+
+With no context installed (CPU tests), every annotation is a no-op, so the
+same model code runs unsharded.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_mesh_ctx", default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    mesh: Mesh
+    rules: dict  # logical axis name -> mesh axis name or tuple of names
+    # GSPMD supports uneven (padded) partitions; archs whose head counts do
+    # not divide the model axis rely on this at baseline (see DESIGN.md §5).
+    allow_uneven: bool = True
+
+    def axis_size(self, logical: str) -> int:
+        ax = self.rules.get(logical)
+        if ax is None:
+            return 1
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+
+def default_rules(multi_pod: bool) -> dict:
+    return {
+        "batch": ("pod", "data") if multi_pod else ("data",),
+        "model": "model",
+        "expert": "model",
+    }
+
+
+def get_ctx() -> Optional[MeshContext]:
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def use_mesh(ctx: MeshContext):
+    token = _CTX.set(ctx)
+    try:
+        with ctx.mesh:
+            yield ctx
+    finally:
+        _CTX.reset(token)
+
+
+def resolve_spec(logical_spec) -> PartitionSpec:
+    """Logical spec tuple -> PartitionSpec under the installed context."""
+    ctx = get_ctx()
+    if ctx is None:
+        return PartitionSpec()
+    out = []
+    for item in logical_spec:
+        if item is None:
+            out.append(None)
+        elif isinstance(item, tuple):
+            resolved = []
+            for sub in item:
+                r = ctx.rules.get(sub)
+                if r is not None:
+                    resolved.extend(r if isinstance(r, tuple) else (r,))
+            out.append(tuple(resolved) if resolved else None)
+        else:
+            r = ctx.rules.get(item)
+            out.append(r if r is not None else None)
+    return PartitionSpec(*out)
+
+
+def sharding_for(logical_spec) -> Optional[NamedSharding]:
+    ctx = get_ctx()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, resolve_spec(logical_spec))
+
+
+def constrain(x, *logical_spec):
+    """with_sharding_constraint under a context; identity otherwise."""
+    ctx = get_ctx()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, resolve_spec(logical_spec))
+    )
+
+
+def shard_dim_ok(size: int, logical: str = "model") -> bool:
+    """True when `size` divides the logical axis (even partitioning)."""
+    ctx = get_ctx()
+    if ctx is None:
+        return True
+    n = ctx.axis_size(logical)
+    return size % n == 0 or ctx.allow_uneven

@@ -1,0 +1,5 @@
+"""repro.training — optimizers, train step, data, checkpointing, compression."""
+
+from repro.training.optimizer import OptimizerConfig, init_state, apply_updates
+from repro.training.train_state import TrainState, init_train_state, make_train_step
+from repro.training.data import DataConfig, SyntheticLM

@@ -1,0 +1,83 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Batches are a pure function of (seed, step): restart-from-checkpoint
+reproduces the exact token stream with no iterator state beyond the step
+counter (which lives in TrainState).  The distribution is a Zipf-weighted
+token mix with short repeated motifs so tiny models have learnable
+structure (loss decreases measurably within ~50 steps on CPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_theta: float = 1.2
+    motif_len: int = 8
+    n_motifs: int = 64
+
+
+def _motifs(cfg: DataConfig) -> np.ndarray:
+    rng = np.random.default_rng(cfg.seed)
+    return rng.integers(0, cfg.vocab, size=(cfg.n_motifs, cfg.motif_len))
+
+
+class SyntheticLM:
+    """Stateless batch source: batch_at(step) is deterministic."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._motifs = jnp.asarray(_motifs(cfg), jnp.int32)
+        ranks = np.arange(1, cfg.n_motifs + 1, dtype=np.float64)
+        p = ranks**-cfg.zipf_theta
+        self._probs = jnp.asarray(p / p.sum(), jnp.float32)
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        n_slots = -(-cfg.seq_len // cfg.motif_len)
+        picks = jax.random.choice(
+            key, cfg.n_motifs, (cfg.global_batch, n_slots), p=self._probs
+        )
+        toks = self._motifs[picks].reshape(cfg.global_batch, -1)[:, : cfg.seq_len]
+        # sprinkle noise tokens so the task is not pure memorization
+        nkey = jax.random.fold_in(key, 1)
+        noise = jax.random.randint(nkey, toks.shape, 0, cfg.vocab)
+        mask = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.05, toks.shape)
+        return {"tokens": jnp.where(mask, noise, toks).astype(jnp.int32)}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def zipf_request_stream(n_requests: int, n_prefixes: int, prefix_len: int,
+                        vocab: int, theta: float = 0.99, seed: int = 0,
+                        new_tokens: int = 8):
+    """Serving workload: requests share Zipf-popular prefixes (the serving
+    analogue of the paper's Zipf block workload).  Returns a list of
+    (prefix_id, tokens) with tokens = shared prefix + unique suffix."""
+    rng = np.random.default_rng(seed)
+    prefixes = rng.integers(0, vocab, size=(n_prefixes, prefix_len))
+    ranks = np.arange(1, n_prefixes + 1, dtype=np.float64)
+    p = ranks**-theta
+    p /= p.sum()
+    perm = rng.permutation(n_prefixes)
+    out = []
+    for _ in range(n_requests):
+        pid = perm[rng.choice(n_prefixes, p=p)]
+        suffix = rng.integers(0, vocab, size=(new_tokens,))
+        out.append((int(pid), np.concatenate([prefixes[pid], suffix])))
+    return out

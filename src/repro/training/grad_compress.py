@@ -1,0 +1,87 @@
+"""Gradient-compression for the data-parallel all-reduce.
+
+Two modes, both with error feedback (the quantization residual is carried
+to the next step so compression error doesn't accumulate as bias):
+
+  * "bf16": cast grads to bfloat16 before the psum — halves all-reduce
+    bytes vs f32 with negligible quality cost; the production default.
+  * "int8": per-tensor-scale int8; 4x fewer wire bytes.  The psum itself
+    runs in f32 after dequant *per shard-group hop* under shard_map, so the
+    HLO collective operand is s8 only for the reduce-scatter stage.
+
+Used via shard_map over the "data" axis inside the train step (see
+repro/launch/train.py --grad-compress); on CPU tests it runs on a 1-device
+mesh where psum is the identity.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grad(g, error, mode: str):
+    """Returns (wire_value, new_error).  wire_value is what gets psummed."""
+    g32 = g.astype(jnp.float32) + (error if error is not None else 0.0)
+    if mode == "bf16":
+        wire = g32.astype(jnp.bfloat16)
+        return wire, g32 - wire.astype(jnp.float32)
+    if mode == "int8":
+        q, scale = _quantize_int8(g32)
+        deq = q.astype(jnp.float32) * scale
+        return (q, scale), g32 - deq
+    raise ValueError(mode)
+
+
+def decompress_grad(wire, mode: str):
+    if mode == "bf16":
+        return wire.astype(jnp.float32)
+    q, scale = wire
+    return q.astype(jnp.float32) * scale
+
+
+def psum_compressed(grads: Any, errors: Any, axis_name: str, mode: str = "bf16"):
+    """All-reduce grads over `axis_name` with error feedback.
+
+    Call INSIDE shard_map.  Returns (mean_grads_f32, new_errors).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        wire, new_e = compress_grad(g, e, mode)
+        if mode == "bf16":
+            summed = jax.lax.psum(wire, axis_name)
+            return summed.astype(jnp.float32) / n, new_e
+        q, scale = wire
+        # int8 payload all-gathered then reduced locally in f32 (saturation-
+        # safe); wire bytes: 1B/elem + one scalar per shard.
+        qs = jax.lax.all_gather(q, axis_name)
+        ss = jax.lax.all_gather(scale, axis_name)
+        summed = jnp.tensordot(
+            ss, qs.astype(jnp.float32), axes=((0,), (0,))
+        )
+        return summed / n, new_e
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = (jax.tree_util.tree_flatten(errors)[0] if errors is not None
+              else [None] * len(flat_g))
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    mean = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return mean, new_err
+
+
+def init_errors(grads: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads
+    )

@@ -1,0 +1,194 @@
+"""Optimizers: AdamW (dtype-configurable moments) and Adafactor, plus
+ZeRO-1 spec transforms for optimizer-state sharding.
+
+No optax dependency — the state layouts must be sharding-annotated, so we
+own them.  States are pytrees of plain arrays mirroring the param tree,
+making them checkpoint- and pjit-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # moment dtype: float32 for quality, bfloat16 to halve optimizer HBM
+    # (the arctic-480b config needs bf16 moments to fit 256 chips; see
+    # EXPERIMENTS.md §Dry-run)
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+    # adafactor
+    factored_min_dim: int = 128
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+
+
+class AdafactorState(NamedTuple):
+    vr: Any  # row statistics (or full v for small/1D params)
+    vc: Any  # col statistics (or None sentinel zeros)
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def _clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def init_state(cfg: OptimizerConfig, params):
+    dt = jnp.dtype(cfg.moment_dtype)
+    if cfg.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+        )
+    if cfg.name == "adafactor":
+        def vr(p):
+            if p.ndim >= 2 and min(p.shape[-2:]) >= cfg.factored_min_dim:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            if p.ndim >= 2 and min(p.shape[-2:]) >= cfg.factored_min_dim:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(
+            vr=jax.tree_util.tree_map(vr, params),
+            vc=jax.tree_util.tree_map(vc, params),
+        )
+    raise ValueError(cfg.name)
+
+
+def apply_updates(cfg: OptimizerConfig, step, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = _clip_by_global_norm(grads, cfg.grad_clip)
+    lr = lr_at(cfg, step)
+
+    if cfg.name == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1.0)
+        bc2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1.0)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(m.dtype),
+                v32.astype(v.dtype),
+            )
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat = [
+            upd(p, g, m, v)
+            for p, g, m, v in zip(
+                flat_p,
+                jax.tree_util.tree_leaves(grads),
+                jax.tree_util.tree_leaves(state.m),
+                jax.tree_util.tree_leaves(state.v),
+            )
+        ]
+        unflat = lambda i: jax.tree_util.tree_unflatten(
+            treedef, [t[i] for t in flat]
+        )
+        return unflat(0), AdamWState(unflat(1), unflat(2)), {
+            "grad_norm": gnorm, "lr": lr,
+        }
+
+    if cfg.name == "adafactor":
+        d = 1.0 - cfg.b2  # decay toward RMS statistics
+
+        def upd(p, g, vr, vc):
+            g32 = jnp.square(g.astype(jnp.float32)) + 1e-30
+            factored = p.ndim >= 2 and min(p.shape[-2:]) >= cfg.factored_min_dim
+            if factored:
+                vr2 = (1 - d) * vr + d * g32.mean(axis=-1)
+                vc2 = (1 - d) * vc + d * g32.mean(axis=-2)
+                denom = (
+                    vr2[..., :, None]
+                    * vc2[..., None, :]
+                    / jnp.maximum(vr2.mean(axis=-1)[..., None, None], 1e-30)
+                )
+            else:
+                vr2 = (1 - d) * vr + d * g32
+                vc2 = vc
+                denom = vr2
+            delta = g.astype(jnp.float32) / (jnp.sqrt(denom) + cfg.eps)
+            if p.ndim >= 2:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype), vr2, vc2)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat = [
+            upd(p, g, vr, vc)
+            for p, g, vr, vc in zip(
+                flat_p,
+                jax.tree_util.tree_leaves(grads),
+                jax.tree_util.tree_leaves(state.vr),
+                jax.tree_util.tree_leaves(state.vc),
+            )
+        ]
+        unflat = lambda i: jax.tree_util.tree_unflatten(
+            treedef, [t[i] for t in flat]
+        )
+        return unflat(0), AdafactorState(unflat(1), unflat(2)), {
+            "grad_norm": gnorm, "lr": lr,
+        }
+
+    raise ValueError(cfg.name)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: shard optimizer moments over the data axis too.
+# ---------------------------------------------------------------------------
+
+
+def zero1_moment_spec(param_spec: tuple, shape: tuple, data_axis_size: int = 16) -> tuple:
+    """Add "batch" sharding to the first evenly-divisible unsharded dim.
+
+    Moments are only read/written inside the optimizer, so GSPMD inserts an
+    all-gather around the update instead of keeping N data-parallel copies —
+    the ZeRO-1 trade (collective bytes for HBM).  Dims already sharded over
+    "model" keep their spec; stacked-layer leading dims (g not divisible by
+    the data axis) are skipped in favour of an inner dim.
+    """
+    if len(shape) < 2 or len(shape) != len(param_spec):
+        return param_spec  # vectors/scalars: not worth the gather
+    flat = [a for s in param_spec if s is not None
+            for a in (s if isinstance(s, tuple) else (s,))]
+    if "batch" in flat:
+        return param_spec  # already data-sharded (e.g. 2-D expert sharding)
+    out = list(param_spec)
+    for i, (s, d) in enumerate(zip(param_spec, shape)):
+        if s is None and d >= data_axis_size and d % data_axis_size == 0:
+            out[i] = "batch"
+            return tuple(out)
+    return param_spec

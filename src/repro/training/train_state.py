@@ -1,0 +1,78 @@
+"""Train state + train-step factory (loss, grads, optimizer, metrics)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt_lib
+from repro.training.optimizer import OptimizerConfig
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: Any
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: OptimizerConfig, key,
+                     abstract: bool = False) -> TrainState:
+    init_fn = encdec.init_params if cfg.encdec else transformer.init_params
+    from repro.models.layers import param_values
+
+    params = param_values(init_fn(cfg, key, abstract=abstract))
+    if abstract:
+        opt_state = jax.eval_shape(lambda p: opt_lib.init_state(opt_cfg, p), params)
+    else:
+        opt_state = opt_lib.init_state(opt_cfg, params)
+    step = jax.ShapeDtypeStruct((), jnp.int32) if abstract else jnp.int32(0)
+    return TrainState(step=step, params=params, opt=opt_state)
+
+
+def lm_loss(logits, targets, mask=None):
+    """Token-mean cross entropy in f32.  logits: (B, T, V); targets: (B, T)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -ll.mean()
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    remat: str = "dots", aux_weight: float = 0.01,
+                    use_pallas: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: {"tokens": (B, T) int32[, "frames": (B, S_enc, D)]}.  Next-token
+    prediction; MoE aux loss is added with `aux_weight`.
+    """
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        if cfg.encdec:
+            logits = encdec.forward(params, batch["frames"], tokens[:, :-1], cfg)
+            loss = lm_loss(logits, tokens[:, 1:])
+            return loss, {"xent": loss}
+        logits, _, aux = transformer.forward(
+            params, tokens[:, :-1], cfg, remat=remat, use_pallas=use_pallas
+        )
+        xent = lm_loss(logits, tokens[:, 1:])
+        loss = xent + aux_weight * aux["moe_aux_loss"]
+        return loss, {"xent": xent, **aux}
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        params, opt_state, opt_metrics = opt_lib.apply_updates(
+            opt_cfg, state.step, state.params, grads, state.opt
+        )
+        metrics = {"loss": loss, **metrics, **opt_metrics}
+        return TrainState(state.step + 1, params, opt_state), metrics
+
+    return train_step

@@ -1,0 +1,181 @@
+"""Property tests: jittable cache policies vs pure-Python oracles.
+
+For every policy, random traces must produce identical hit sequences,
+eviction sequences, and per-request op counts (the op counts feed the
+queueing model, so they are load-bearing, not just diagnostics).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cache import dlist
+from repro.cache.policies import POLICIES, run_trace
+from repro.cache.py_ref import PY_POLICIES
+
+KEY_SPACE = 24
+CAPACITY = 8
+
+POLICY_PARAMS = {
+    "lru": {},
+    "fifo": {},
+    "prob_lru": {"q": 0.5},
+    "clock": {"max_scan": 3},
+    "slru": {"protected_frac": 0.5},
+    "s3fifo": {"small_frac": 0.25, "max_scan": 3},
+    "sieve": {},
+}
+PY_PARAMS = {
+    "lru": {},
+    "fifo": {},
+    "prob_lru": {"q": 0.5},
+    "clock": {"max_scan": 3},
+    "slru": {"protected_frac": 0.5},
+    "s3fifo": {"small_frac": 0.25},
+    "sieve": {},
+}
+
+trace_strategy = st.lists(
+    st.integers(min_value=0, max_value=KEY_SPACE - 1), min_size=1, max_size=120
+)
+
+
+def _run_both(policy: str, keys, us):
+    pdef = POLICIES[policy]
+    state = pdef.init(CAPACITY, KEY_SPACE, **POLICY_PARAMS[policy])
+    # Pad to a fixed length so jit compiles once per policy (padding accesses
+    # happen after every compared index, so they cannot affect the prefix).
+    n = len(keys)
+    pad = -len(keys) % 128 if len(keys) % 128 else 0
+    keys_p = list(keys) + [0] * pad
+    us_p = list(us) + [0.0] * pad
+    _, hits, ops = run_trace(
+        policy, state, jnp.asarray(keys_p, jnp.int32), jnp.asarray(us_p, jnp.float32)
+    )
+    hits = hits[:n]
+    ops = type(ops)(*(o[:n] for o in ops))
+    ref = PY_POLICIES[policy](CAPACITY, **PY_PARAMS[policy])
+    ref_hits, ref_ops = [], []
+    for k, u in zip(keys, us):
+        a = ref.access(int(k), float(u))
+        ref_hits.append(a.hit)
+        ref_ops.append(a.ops)
+    return (
+        np.asarray(hits),
+        np.stack([np.asarray(o) for o in ops], axis=1),
+        np.asarray(ref_hits),
+        np.asarray(ref_ops, dtype=np.int64),
+    )
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+@given(keys=trace_strategy, data=st.data())
+@settings(max_examples=15, deadline=None)
+def test_policy_matches_oracle(policy, keys, data):
+    us = [
+        data.draw(st.floats(min_value=0.0, max_value=0.999)) for _ in keys
+    ]
+    hits, ops, ref_hits, ref_ops = _run_both(policy, keys, us)
+    np.testing.assert_array_equal(hits, ref_hits, err_msg=f"{policy} hit seq")
+    np.testing.assert_array_equal(ops, ref_ops, err_msg=f"{policy} op counts")
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_long_zipf_trace_matches_oracle(policy):
+    """Longer adversarial-ish trace: zipf-weighted keys exercise evictions."""
+    rng = np.random.default_rng(0)
+    ranks = np.arange(1, KEY_SPACE + 1)
+    probs = (1.0 / ranks**0.99) / np.sum(1.0 / ranks**0.99)
+    keys = rng.choice(KEY_SPACE, size=2000, p=probs)
+    us = rng.random(2000)
+    hits, ops, ref_hits, ref_ops = _run_both(policy, keys.tolist(), us.tolist())
+    np.testing.assert_array_equal(hits, ref_hits)
+    np.testing.assert_array_equal(ops, ref_ops)
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_capacity_respected(policy):
+    """Never more than `capacity` distinct resident keys."""
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, KEY_SPACE, size=400)
+    us = rng.random(400)
+    ref = PY_POLICIES[policy](CAPACITY, **PY_PARAMS[policy])
+    resident = set()
+    for k, u in zip(keys, us):
+        a = ref.access(int(k), float(u))
+        resident.add(int(k))
+        if a.evicted_key >= 0:
+            resident.discard(a.evicted_key)
+        assert len(resident) <= CAPACITY
+
+
+def test_lru_eviction_order_exact():
+    """Classic LRU semantics on a hand-written trace."""
+    ref = PY_POLICIES["lru"](3)
+    for k in [1, 2, 3]:
+        ref.access(k)
+    ref.access(1)  # order now: 1,3,2
+    a = ref.access(4)  # evicts 2
+    assert a.evicted_key == 2
+    a = ref.access(5)  # evicts 3
+    assert a.evicted_key == 3
+
+
+def test_fifo_ignores_hits():
+    ref = PY_POLICIES["fifo"](3)
+    for k in [1, 2, 3]:
+        ref.access(k)
+    ref.access(1)  # no reordering
+    a = ref.access(4)
+    assert a.evicted_key == 1  # oldest, despite the recent hit
+
+
+def test_clock_second_chance():
+    ref = PY_POLICIES["clock"](3)
+    for k in [1, 2, 3]:
+        ref.access(k)
+    ref.access(1)  # bit[1] = 1
+    a = ref.access(4)  # 1 gets a second chance; 2 evicted
+    assert a.evicted_key == 2
+
+
+def test_hit_path_op_invariant():
+    """The paper's structural dichotomy, verified on the implementations:
+    LRU-like policies do list ops on hits; FIFO-like do none."""
+    rng = np.random.default_rng(2)
+    keys = rng.integers(0, KEY_SPACE, size=1500)
+    us = rng.random(1500)
+    for policy, pdef in POLICIES.items():
+        ref = PY_POLICIES[policy](CAPACITY, **PY_PARAMS[policy])
+        hit_ops = 0
+        hits = 0
+        for k, u in zip(keys, us):
+            a = ref.access(int(k), float(u))
+            if a.hit:
+                hits += 1
+                hit_ops += sum(a.ops)
+        assert hits > 50, policy
+        if pdef.lru_like:
+            assert hit_ops > 0, f"{policy} should touch the list on hits"
+        else:
+            assert hit_ops == 0, f"{policy} must not touch the list on hits"
+
+
+def test_dlist_primitives():
+    dl = dlist.empty(4)
+    dl = dlist.push_head(dl, 0)
+    dl = dlist.push_head(dl, 1)
+    dl = dlist.push_head(dl, 2)  # list: 2,1,0
+    assert int(dl.head) == 2 and int(dl.tail) == 0
+    assert int(dlist.length(dl, 4)) == 3
+    dl = dlist.delink(dl, 1)  # list: 2,0
+    assert int(dl.nxt[2]) == 0 and int(dl.prv[0]) == 2
+    dl, t = dlist.pop_tail(dl)
+    assert int(t) == 0
+    assert int(dl.head) == 2 and int(dl.tail) == 2
+    dl, t = dlist.pop_tail(dl)
+    assert int(t) == 2
+    assert int(dl.head) == dlist.NIL and int(dl.tail) == dlist.NIL

@@ -1,0 +1,93 @@
+"""Prong C: virtual-time measurement of the implemented caches, and the
+paper's model-vs-implementation agreement claim."""
+
+import numpy as np
+import pytest
+
+from repro.core import build
+from repro.core.harness import (
+    PAPER_SERVICES,
+    measure_cache,
+    run_cache_trace,
+    sweep_cache_sizes,
+    zipf_trace,
+)
+
+
+def test_zipf_trace_is_skewed():
+    t = zipf_trace(20_000, key_space=1000, theta=0.99, seed=0)
+    _, counts = np.unique(t, return_counts=True)
+    top = np.sort(counts)[::-1]
+    assert top[0] > 20 * np.median(counts)  # heavy head
+    assert t.min() >= 0 and t.max() < 1000
+
+
+def test_hit_ratio_increases_with_cache_size():
+    trace = zipf_trace(30_000, key_space=2048, theta=0.99, seed=1)
+    ratios = []
+    for cap in [32, 128, 512, 1536]:
+        hits, _ = run_cache_trace("lru", cap, trace)
+        ratios.append(hits[len(hits) // 4:].mean())
+    assert all(b > a for a, b in zip(ratios, ratios[1:])), ratios
+    assert ratios[-1] > 0.9
+
+
+def test_lru_beats_fifo_on_hit_ratio():
+    """Sanity: LRU's whole selling point — better hit ratio than FIFO."""
+    trace = zipf_trace(30_000, key_space=2048, theta=0.99, seed=2)
+    h_lru, _ = run_cache_trace("lru", 128, trace)
+    h_fifo, _ = run_cache_trace("fifo", 128, trace)
+    assert h_lru.mean() > h_fifo.mean()
+
+
+def test_empirical_network_matches_model_lru():
+    """The measured-profile network's demands match the Bernoulli model's
+    at the measured hit ratio (within a few %) — the paper's model
+    validation, done structurally."""
+    meas = measure_cache("lru", capacity=512, key_space=4096, n_requests=40_000)
+    p = meas.hit_ratio
+    model = build("lru", disk_us=100.0)
+    d_model = model.demands(p, tail_mode="nominal")
+    d_meas = meas.network.demands(p, tail_mode="nominal")
+    # same station demand structure
+    assert abs(d_meas["delink"] - d_model["delink"]) / d_model["delink"] < 0.05
+    assert abs(d_meas["head"] - d_model["head"]) / d_model["head"] < 0.05
+
+
+def test_implementation_within_5pct_of_model_simulation():
+    """Paper Sec. 3.4: implementation and (model) simulation within 5%."""
+    from repro.core.simulator import simulate_network
+
+    meas = measure_cache("lru", capacity=512, key_space=4096, n_requests=40_000)
+    p = meas.hit_ratio
+    x_impl = simulate_network(meas.network, [p], n_requests=15_000, seeds=(0, 1))
+    x_model = simulate_network(build("lru"), [p], n_requests=15_000, seeds=(0, 1))
+    rel = abs(x_impl.throughput[0] - x_model.throughput[0]) / x_model.throughput[0]
+    assert rel < 0.05, (x_impl.throughput, x_model.throughput)
+
+
+def test_clock_scan_ops_grow_with_hit_ratio():
+    """Paper Sec. 4.3: E[S_tail] grows with p_hit because more bits are set."""
+    trace = zipf_trace(40_000, key_space=2048, theta=0.99, seed=3)
+    scans = []
+    for cap in [64, 1024]:
+        hits, ops = run_cache_trace("clock", cap, trace)
+        miss = ~hits
+        scans.append(ops[miss, 3].mean())
+    assert scans[1] > scans[0]  # larger cache -> higher p_hit -> more scanning
+
+
+def test_sweep_cache_sizes_produces_curve():
+    out = sweep_cache_sizes(
+        "fifo", sizes=[64, 256, 1024], key_space=4096, n_requests=20_000
+    )
+    assert len(out["p_hit"]) == 3
+    assert np.all(np.diff(out["p_hit"]) > 0)
+    assert np.all(out["x_bound"] > 0)
+
+
+def test_paper_services_cover_all_policies():
+    from repro.cache import PY_POLICIES
+
+    for name in PY_POLICIES:
+        assert name in PAPER_SERVICES

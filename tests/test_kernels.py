@@ -1,0 +1,177 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, T, S, H, KV, dh, causal, window, dtype)
+    (1, 128, 128, 4, 4, 64, True, 0, jnp.float32),
+    (2, 256, 256, 4, 2, 64, True, 0, jnp.float32),
+    (1, 128, 128, 8, 2, 128, True, 0, jnp.bfloat16),
+    (1, 256, 256, 4, 4, 64, True, 128, jnp.float32),  # sliding window
+    (2, 64, 192, 4, 2, 64, False, 0, jnp.float32),  # bidir, ragged blocks
+    (1, 100, 100, 2, 2, 64, True, 0, jnp.float32),  # non-multiple of block
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_ref(case):
+    B, T, S, H, KV, dh, causal, window, dtype = case
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (B, T, H, dh), dtype)
+    k = jax.random.normal(k2, (B, S, KV, dh), dtype)
+    v = jax.random.normal(k3, (B, S, KV, dh), dtype)
+
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=causal, window=window,
+    ).swapaxes(1, 2)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_matches_model_reference():
+    """Kernel vs the model's chunked_attention (two independent paths)."""
+    from repro.models.attention import chunked_attention
+
+    B, T, H, KV, dh = 2, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, KV, dh))
+    v = jax.random.normal(ks[2], (B, T, KV, dh))
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    want = chunked_attention(q, k, v, pos, T, causal=True, chunk=64)
+    # chunked_attention folds the 1/sqrt scale into q
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # (B, H, KV, dh, page, n_pages, P, dtype)
+    (2, 4, 2, 64, 16, 4, 16, jnp.float32),
+    (3, 8, 8, 64, 32, 3, 12, jnp.float32),
+    (2, 4, 4, 128, 16, 2, 8, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_attention_matches_ref(case):
+    B, H, KV, dh, page, n_pages, P, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    pages_k = jax.random.normal(ks[1], (P, page, KV, dh), dtype)
+    pages_v = jax.random.normal(ks[2], (P, page, KV, dh), dtype)
+    # distinct random pages per sequence + ragged lengths
+    bt = jax.random.permutation(ks[3], P)[: B * n_pages].reshape(B, n_pages)
+    bt = bt.astype(jnp.int32)
+    seq_lens = jax.random.randint(ks[4], (B,), 1, n_pages * page + 1,
+                                  dtype=jnp.int32)
+    out = ops.paged_attention(q, pages_k, pages_v, bt, seq_lens, interpret=True)
+    want = ref.paged_attention_ref(q, pages_k, pages_v, bt, seq_lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_paged_matches_dense_when_contiguous():
+    """Paged with identity block table == dense cache attention."""
+    B, H, KV, dh, page = 2, 4, 2, 64, 16
+    n_pages, S = 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, S, KV, dh))
+    v = jax.random.normal(ks[2], (B, S, KV, dh))
+    pages_k = k.reshape(B * n_pages, page, KV, dh)
+    pages_v = v.reshape(B * n_pages, page, KV, dh)
+    bt = jnp.arange(B * n_pages, dtype=jnp.int32).reshape(B, n_pages)
+    seq_lens = jnp.full((B,), S, jnp.int32)
+    out = ops.paged_attention(q, pages_k, pages_v, bt, seq_lens, interpret=True)
+    want = ref.flash_attention_ref(
+        q[:, :, None, :], k.swapaxes(1, 2), v.swapaxes(1, 2), causal=False
+    )[:, :, 0, :]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv6 linear scan
+# ---------------------------------------------------------------------------
+
+WKV_CASES = [
+    # (B, T, H, dh, chunk, dtype)
+    (2, 128, 2, 32, 32, jnp.float32),
+    (1, 256, 4, 64, 128, jnp.float32),
+    (1, 100, 2, 32, 32, jnp.float32),  # padding path
+    (2, 64, 2, 64, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+def test_wkv6_scan_matches_ref(case):
+    B, T, H, dh, chunk, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    r = jax.random.normal(ks[0], (B, T, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, dh), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, dh), dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, dh))).astype(dtype)
+    u = jax.random.normal(ks[4], (H, dh), dtype)
+    out = ops.wkv6_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    want = ref.wkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        **(_tol(dtype) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# batched LRU cache update
+# ---------------------------------------------------------------------------
+
+LRU_CASES = [(1024, 64, 512), (2048, 128, 512), (512, 16, 128)]
+
+
+@pytest.mark.parametrize("C,N,tile", LRU_CASES)
+def test_lru_batch_update_matches_ref(C, N, tile):
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    ts = jax.random.randint(ks[0], (C,), 1, 10_000, dtype=jnp.int32)
+    accessed = jax.random.choice(ks[1], C, (N,), replace=False).astype(jnp.int32)
+    now = jnp.int32(50_000)
+    new_ts, victim = ops.lru_batch_update(ts, accessed, now, tile=tile,
+                                          interpret=True)
+    want_ts, want_victim = ref.lru_batch_update_ref(ts, accessed, now)
+    np.testing.assert_array_equal(np.asarray(new_ts), np.asarray(want_ts))
+    # argmin ties can differ between tiles; compare the *timestamp* values
+    assert new_ts[victim] == want_ts[want_victim]
+
+
+def test_lru_batch_update_semantics():
+    """Victim is the LRU slot; accessed slots become most-recent."""
+    ts = jnp.array([5, 3, 9, 1, 7, 2, 8, 6], jnp.int32)
+    accessed = jnp.array([3, 5], jnp.int32)  # touch the two oldest
+    new_ts, victim = ops.lru_batch_update(ts, accessed, jnp.int32(100),
+                                          tile=8, interpret=True)
+    assert int(new_ts[3]) == 100 and int(new_ts[5]) == 100
+    assert int(victim) == 1  # ts=3 is now the oldest

@@ -1,0 +1,124 @@
+"""Launch layer: spec machinery, drivers, elastic restore — on a 1-device
+mesh (the 512-device dry-run itself runs via repro.launch.dryrun)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sharding as shardlib
+from repro.configs.registry import ARCHS, get_config
+from repro.launch.mesh import single_device_context
+from repro.launch.specs import SHAPES, ShapeSpec, build_cell, _is_spec
+
+
+def test_is_spec_classifier():
+    assert _is_spec((None, "model"))
+    assert _is_spec((("batch", "model"), None))
+    assert _is_spec(())
+    assert not _is_spec(({"a": 1},))
+    from repro.models.attention import KVCache
+
+    assert not _is_spec(KVCache((None,), (None,), (None,)))
+    assert not _is_spec(((None, "x"), {"d": 2}))
+
+
+SMALL_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 64, 4, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 64, 2, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 64, 4, "decode"),
+    "long_500k": ShapeSpec("long_500k", 128, 1, "decode"),
+}
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "rwkv6-7b", "zamba2-1.2b",
+                                  "llama4-scout-17b-a16e", "whisper-tiny",
+                                  "gemma3-27b"])
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_cell_lowers_on_single_device(arch, shape_name):
+    """Every plan kind traces + lowers with reduced configs (fast check of
+    the sharding/spec machinery; full configs run in the dry-run sweep)."""
+    if (arch, shape_name) in {("whisper-tiny", "long_500k")}:
+        pytest.skip("skipped cell (DESIGN.md)")
+    cfg = get_config(arch, reduced=True)
+    ctx = single_device_context()
+    with shardlib.use_mesh(ctx):
+        plan = build_cell(arch, shape_name, cfg=cfg,
+                          shape=SMALL_SHAPES[shape_name])
+        jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                         out_shardings=plan.out_shardings,
+                         donate_argnums=plan.donate)
+        lowered = jitted.lower(*plan.args)
+        assert "module" in lowered.as_text()[:200]
+
+
+def test_train_driver_loss_decreases(tmp_path):
+    from repro.launch import train as train_cli
+
+    losses = train_cli.main([
+        "--arch", "internlm2-1.8b", "--reduced", "--steps", "30",
+        "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path / "ck"),
+        "--ckpt-every", "15",
+    ])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+    # resume from checkpoint continues at the saved step
+    more = train_cli.main([
+        "--arch", "internlm2-1.8b", "--reduced", "--steps", "35",
+        "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path / "ck"),
+        "--resume",
+    ])
+    assert len(more) == 5  # only steps 30..35 ran
+
+
+def test_serve_driver_runs():
+    from repro.launch import serve as serve_cli
+
+    stats = serve_cli.main(["--requests", "10", "--max-new", "4"])
+    assert stats["decode_steps"] > 0
+    assert 0.0 <= stats["chunk_hit_ratio"] <= 1.0
+
+
+def test_elastic_reshard(tmp_path):
+    from repro.launch.elastic import reshard
+    from repro.training import checkpoint as ckpt_lib
+    from repro.training.optimizer import OptimizerConfig
+    from repro.training.train_state import init_train_state
+
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    opt = OptimizerConfig()
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    ckpt_lib.save(str(tmp_path), state, step=7)
+
+    # restore under a different (1-device) mesh context
+    restored = reshard(str(tmp_path), like=state, ctx=single_device_context())
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collectives
+
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={}
+  %ar = f32[512]{0} all-reduce(%y), to_apply=%add
+  %ars = f32[8,2]{1,0} all-reduce-start(%z)
+  %ard = f32[8,2]{1,0} all-reduce-done(%ars)
+  %a2a = s8[64]{0} all-to-all(%w)
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == (512 * 4 + 8 * 2 * 4) * 2  # ring 2x, start counted once
+    assert out["all-to-all"] == 64
+    assert out["total_bytes"] == sum(
+        v for k, v in out.items() if not k.startswith("count") and k != "total_bytes"
+    )
+
+
+def test_shape_table_matches_assignment():
+    assert SHAPES["train_4k"].seq == 4096 and SHAPES["train_4k"].batch == 256
+    assert SHAPES["prefill_32k"].seq == 32768 and SHAPES["prefill_32k"].batch == 32
+    assert SHAPES["decode_32k"].seq == 32768 and SHAPES["decode_32k"].batch == 128
+    assert SHAPES["long_500k"].seq == 524288 and SHAPES["long_500k"].batch == 1
+    assert len(ARCHS) == 10

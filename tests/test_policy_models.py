@@ -1,0 +1,242 @@
+"""Prong A reproduction tests: our generic network machinery must reproduce
+the paper's closed-form throughput bounds (Eqs. 1-6 and Sec. 4) exactly."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FIFO_LIKE,
+    LRU_LIKE,
+    build,
+    bypass_network,
+    classify_by_throughput,
+    classify_structural,
+    clock_network,
+    fifo_network,
+    lru_network,
+    optimal_bypass_beta,
+    paper_fifo_bound,
+    paper_lru_bound,
+    paper_prob_lru_bound,
+    prob_lru_network,
+    s3fifo_network,
+    slru_network,
+)
+from repro.core.policy_models import clock_g, slru_ell
+
+P = np.linspace(0.0, 0.999, 97)
+
+
+def test_networks_validate():
+    for name in ["lru", "fifo", "clock", "slru", "s3fifo"]:
+        build(name).validate()
+    build("prob_lru", q=0.5).validate()
+    build("prob_lru", q=1 - 1 / 72).validate()
+
+
+# ---------------------------------------------------------------------------
+# LRU: Eq. (1), (2), (3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("disk_us,c0,c1", [(100.0, 101.1, 99.3), (5.0, 6.1, 4.3), (500.0, 501.1, 499.3)])
+def test_lru_matches_paper_equations(disk_us, c0, c1):
+    net = lru_network(disk_us=disk_us)
+    ours = net.throughput_upper(P)
+    paper = np.minimum(72.0 / (c0 - c1 * P), 1.0 / np.maximum(0.59, 0.7 * P))
+    np.testing.assert_allclose(ours, paper, rtol=1e-12)
+    np.testing.assert_allclose(ours, paper_lru_bound(P, disk_us=disk_us), rtol=1e-12)
+
+
+def test_lru_bottleneck_switch_at_084():
+    """Sec. 3.2: delink overtakes head update at p_hit = 0.59/0.7 = 0.843."""
+    net = lru_network(disk_us=100.0)
+    assert net.bottleneck(0.80) == "head"
+    assert net.bottleneck(0.90) == "delink"
+    p_star = net.p_star()
+    assert abs(p_star - 0.59 / 0.7) < 2e-3
+
+
+def test_lru_throughput_drops_at_high_hit_ratio():
+    net = lru_network(disk_us=100.0)
+    assert net.throughput_upper(0.999) < net.throughput_upper(0.84)
+
+
+def test_lru_p_star_moves_earlier_with_faster_disk():
+    """Sec. 3.2 / Fig. 3: p* decreases as disks get faster."""
+    p500 = lru_network(disk_us=500.0).p_star()
+    p100 = lru_network(disk_us=100.0).p_star()
+    p5 = lru_network(disk_us=5.0).p_star()
+    assert p5 <= p100 <= p500
+
+
+def test_lru_tail_insensitivity():
+    """Sec. 3.2: using the nominal S_tail changes X by < 0.5%."""
+    net = lru_network(disk_us=100.0)
+    a = net.throughput_upper(P, tail_mode="zero")
+    b = net.throughput_upper(P, tail_mode="nominal")
+    assert np.all(b <= a + 1e-15)
+    rel = (a - b) / a
+    assert np.max(rel) < 0.006  # the paper's "< 0.5%" claim (their rounding)
+
+
+# ---------------------------------------------------------------------------
+# FIFO: Eq. (4), (5), (6)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("disk_us,c0,c1", [(100.0, 101.24, 100.73), (5.0, 6.24, 5.73), (500.0, 501.24, 500.73)])
+def test_fifo_matches_paper_equations(disk_us, c0, c1):
+    net = fifo_network(disk_us=disk_us)
+    ours = net.throughput_upper(P)
+    paper = np.minimum(72.0 / (c0 - c1 * P), 1.0 / (0.73 * (1.0 - P)))
+    np.testing.assert_allclose(ours, paper, rtol=1e-12)
+    np.testing.assert_allclose(ours, paper_fifo_bound(P, disk_us=disk_us), rtol=1e-12)
+
+
+@pytest.mark.parametrize("disk_us", [500.0, 100.0, 5.0])
+def test_fifo_monotone_increasing(disk_us):
+    x = fifo_network(disk_us=disk_us).throughput_upper(P)
+    assert np.all(np.diff(x) >= -1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Probabilistic LRU — Sec. 4.2
+# ---------------------------------------------------------------------------
+
+
+def test_prob_lru_q05_matches_paper():
+    net = prob_lru_network(q=0.5, disk_us=100.0)
+    ours = net.throughput_upper(P)
+    paper = np.minimum(
+        72.0 / (101.16 - 99.935 * P),
+        1.0 / np.maximum(0.39 * P, 0.65 - 0.325 * P),
+    )
+    np.testing.assert_allclose(ours, paper, rtol=1e-9)
+    np.testing.assert_allclose(ours, paper_prob_lru_bound(P, q=0.5), rtol=1e-12)
+
+
+def test_prob_lru_q0986_is_fifo_like_and_q05_is_not():
+    q_hi = 1.0 - 1.0 / 72.0
+    assert classify_by_throughput(prob_lru_network(q=q_hi, disk_us=100.0)) == FIFO_LIKE
+    assert classify_by_throughput(prob_lru_network(q=0.5, disk_us=100.0)) == LRU_LIKE
+
+
+def test_prob_lru_needs_extremely_high_q():
+    """Sec 4.2 finding: q must be >= 1-1/N for FIFO-like behaviour."""
+    assert classify_by_throughput(prob_lru_network(q=0.9, disk_us=5.0)) == LRU_LIKE
+
+
+def test_prob_lru_endpoints_interpolate_lru():
+    np.testing.assert_allclose(
+        prob_lru_network(q=0.0).throughput_upper(P),
+        lru_network().throughput_upper(P),
+        rtol=1e-12,
+    )
+
+
+# ---------------------------------------------------------------------------
+# CLOCK — Sec. 4.3
+# ---------------------------------------------------------------------------
+
+
+def test_clock_matches_paper_bound():
+    net = clock_network(disk_us=100.0)
+    g = clock_g(P)
+    A = 72.0 / (101.16 + 0.3 * g - (100.65 + 0.3 * g) * P)
+    B = 1.0 / ((1.0 - P) * (0.65 + 0.3 * g))
+    np.testing.assert_allclose(net.throughput_upper(P), np.minimum(A, B), rtol=1e-9)
+
+
+@pytest.mark.parametrize("disk_us", [500.0, 100.0, 5.0])
+def test_clock_monotone_increasing(disk_us):
+    x = clock_network(disk_us=disk_us).throughput_upper(P)
+    assert np.all(np.diff(x) >= -1e-9)
+
+
+# ---------------------------------------------------------------------------
+# SLRU — Sec. 4.4
+# ---------------------------------------------------------------------------
+
+
+def test_slru_matches_paper_bound():
+    net = slru_network(disk_us=100.0)
+    ell = slru_ell(P)
+    A = 72.0 / (101.1 - 98.71 * P - 0.59 * ell)  # paper prints 88.71; see DESIGN.md
+    B = 1.0 / np.maximum.reduce([0.7 * ell, 0.59 * P, 0.59 * (1.0 - ell)])
+    np.testing.assert_allclose(net.throughput_upper(P), np.minimum(A, B), rtol=1e-9)
+
+
+def test_slru_is_lru_like():
+    assert classify_by_throughput(slru_network(disk_us=100.0)) == LRU_LIKE
+    assert classify_structural(slru_network()) == LRU_LIKE
+
+
+def test_slru_p_star_moves_earlier_with_mpl_and_disk():
+    """Fig. 12 trends: higher MPL and faster disk move p* earlier."""
+    p_72 = slru_network(disk_us=100.0, mpl=72).p_star()
+    p_144 = slru_network(disk_us=100.0, mpl=144).p_star()
+    assert p_144 <= p_72 + 1e-9
+    p_fast = slru_network(disk_us=5.0, mpl=72).p_star()
+    assert p_fast <= p_72 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# S3-FIFO — Sec. 4.5
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("disk_us", [500.0, 100.0, 5.0])
+def test_s3fifo_monotone_increasing(disk_us):
+    x = s3fifo_network(disk_us=disk_us).throughput_upper(np.linspace(0.3, 0.999, 200))
+    assert np.all(np.diff(x) >= -1e-9)
+    assert classify_structural(s3fifo_network()) == FIFO_LIKE
+
+
+# ---------------------------------------------------------------------------
+# Classification + MVA + mitigation
+# ---------------------------------------------------------------------------
+
+
+def test_classification_matches_table1():
+    assert classify_by_throughput(lru_network()) == LRU_LIKE
+    assert classify_by_throughput(fifo_network()) == FIFO_LIKE
+    assert classify_by_throughput(clock_network()) == FIFO_LIKE
+    assert classify_structural(lru_network()) == LRU_LIKE
+    assert classify_structural(fifo_network()) == FIFO_LIKE
+
+
+def test_mva_below_upper_bound_and_saturates():
+    for name in ["lru", "fifo", "clock", "slru", "s3fifo"]:
+        net = build(name)
+        for p in [0.3, 0.6, 0.9, 0.99]:
+            x_mva = net.mva(p)[0]
+            x_ub = net.throughput_upper(p, tail_mode="nominal")
+            assert x_mva <= x_ub * (1.0 + 1e-9), (name, p)
+            assert x_mva > 0.25 * x_ub, (name, p)  # MVA not degenerate
+
+
+def test_mva_shows_lru_inversion():
+    net = lru_network(disk_us=5.0)
+    xs = net.mva_throughput(np.array([0.85, 0.999]))
+    assert xs[1] < xs[0]
+
+
+def test_bypass_mitigation_keeps_throughput_flat():
+    """Sec. 5.2: bypass keeps X ~ constant past p* instead of dropping."""
+    net = lru_network(disk_us=100.0)
+    p_star = net.p_star()
+    x_star = net.throughput_upper(p_star)
+    for p in [0.9, 0.95, 0.99]:
+        beta = optimal_bypass_beta(net, p)
+        x_bypass = bypass_network(net, beta).throughput_upper(p)
+        x_plain = net.throughput_upper(p)
+        assert x_bypass >= x_plain - 1e-9
+        assert abs(x_bypass - x_star) / x_star < 0.05
+
+
+def test_response_time_increases_past_p_star():
+    """Sec. 3.2: in a closed loop, R = N/X, so R rises when X falls."""
+    net = lru_network(disk_us=100.0)
+    r = net.response_time_upper(np.array([0.84, 0.99]))
+    assert r[1] > r[0]

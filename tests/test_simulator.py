@@ -1,0 +1,83 @@
+"""Prong B validation: the event-driven simulator against theory + MVA."""
+
+import numpy as np
+import pytest
+
+from repro.core import build, fifo_network, lru_network
+from repro.core.simulator import SimResult, compile_network, simulate_network
+
+P_GRID = np.array([0.4, 0.7, 0.9, 0.99])
+
+
+@pytest.fixture(scope="module")
+def lru_sim() -> SimResult:
+    return simulate_network(lru_network(disk_us=100.0), P_GRID,
+                            n_requests=12_000, seeds=(0, 1))
+
+
+def test_simulation_below_upper_bound(lru_sim):
+    """Thm 7.1 is an upper bound: the exact (simulated) X must sit below it."""
+    ub = lru_network(disk_us=100.0).throughput_upper(P_GRID)
+    assert np.all(lru_sim.throughput <= ub * 1.02)  # 2% sim noise allowance
+
+
+def test_simulation_close_to_bound_when_saturated(lru_sim):
+    """At saturation (p near the bound's flat region) sim ~= bound."""
+    net = lru_network(disk_us=100.0)
+    ub = net.throughput_upper(P_GRID)
+    # high-MPL closed networks run close to their bottleneck bound
+    assert np.all(lru_sim.throughput >= 0.80 * ub)
+
+
+def test_simulation_matches_mva(lru_sim):
+    """MVA (exponential analogue) within ~12% of the simulated network."""
+    net = lru_network(disk_us=100.0)
+    mva = net.mva_throughput(P_GRID)
+    rel = np.abs(lru_sim.throughput - mva) / mva
+    assert np.max(rel) < 0.12, rel
+
+
+def test_lru_inversion_in_simulation(lru_sim):
+    """The paper's headline: LRU simulated throughput DROPS at high p_hit."""
+    x = dict(zip(P_GRID.tolist(), lru_sim.throughput.tolist()))
+    assert x[0.99] < x[0.9], x
+
+
+def test_fifo_monotone_in_simulation():
+    res = simulate_network(fifo_network(disk_us=100.0), P_GRID,
+                           n_requests=12_000, seeds=(0,))
+    assert np.all(np.diff(res.throughput) > 0), res.throughput
+
+
+@pytest.mark.parametrize("policy", ["clock", "s3fifo", "slru"])
+def test_other_policies_simulate(policy):
+    net = build(policy, disk_us=100.0)
+    res = simulate_network(net, np.array([0.5, 0.95]), n_requests=16_000, seeds=(0, 1))
+    ub = net.throughput_upper(res.p_hit)
+    assert np.all(res.throughput > 0)
+    assert np.all(res.throughput <= ub * 1.05)
+
+
+def test_jax_simulator_matches_python_oracle():
+    """Independent heapq reference implementation agrees within sim noise."""
+    from repro.core.py_sim import simulate_py
+
+    net = lru_network(disk_us=100.0)
+    for p in (0.5, 0.95):
+        x_py = simulate_py(net, p, n_requests=12_000, seed=3)
+        x_jax = simulate_network(net, [p], n_requests=12_000, seeds=(0, 1)).throughput[0]
+        assert abs(x_py - x_jax) / x_py < 0.05, (p, x_py, x_jax)
+
+
+def test_compile_network_shapes():
+    spec = compile_network(build("s3fifo"), 0.9)
+    assert spec.visits.shape[0] == 4  # four branches
+    assert spec.branch_cum.shape == (4,)
+    assert abs(float(spec.branch_cum[-1]) - 1.0) < 1e-6
+
+
+def test_deterministic_given_seed():
+    net = lru_network(disk_us=100.0)
+    a = simulate_network(net, [0.8], n_requests=3_000, seeds=(7,)).throughput
+    b = simulate_network(net, [0.8], n_requests=3_000, seeds=(7,)).throughput
+    np.testing.assert_array_equal(a, b)
