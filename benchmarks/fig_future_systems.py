@@ -1,0 +1,124 @@
+"""Paper Sec. 6 "future systems" sweep: cores × disk speed, multi-server disk.
+
+The paper closes by arguing the hit-ratio-hurts-throughput effect will be
+*more* pronounced in future systems — more cores per CPU (more closed-loop
+clients hammering the serialized metadata ops) and faster backing stores
+(less think time hiding the contention).  With c-server queue stations we
+can reproduce that section: the backing store is modeled as an
+``IO_DEPTH``-way concurrent queue station (bounded NVMe-style I/O depth)
+instead of the paper's infinite-server disk, and ``cores`` sets the MPL
+(one closed-loop client per core, as in the paper's testbed).
+
+For each (policy, cores, disk-speedup) cell we report the analytic p*, the
+throughput at p* and at p_hit ≈ 1 (the size of the cliff), and validate the
+event-driven simulator against exact multi-server MVA on the exponential
+analogue of the network: MVA solves exactly that analogue, so sim and MVA
+must agree at CI-level precision (the det/pareto originals carry a genuine
+distribution-sensitivity gap of several percent at saturation and are NOT
+what MVA computes).
+
+Headline assertions:
+  * LRU's p* at 64 cores + 10x disk is strictly smaller than at
+    1 core + 1x disk, and p* is non-increasing in cores at every speedup.
+  * FIFO-like policies (fifo, clock) keep p* = 1 in every future-system
+    cell — the paper's dichotomy survives the hardware trend.
+  * sim-vs-MVA within the simulator's 95% CI on the swept grid (individual
+    points may miss at the ~5% rate a 95% interval implies — and a
+    few-seed CI underestimates the seed-to-seed variance — and short-run
+    transient bias adds a small offset, so each point is also allowed a
+    3% relative floor; the within-CI fraction is asserted in aggregate).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import row, timer
+from repro.core import build, exponential_analogue
+from repro.core.simulator import simulate_network
+
+CORES = (1, 4, 16, 64)
+SPEEDUPS = (1, 10, 100)
+BASE_DISK_US = 100.0
+IO_DEPTH = 16  # backing-store concurrency (NVMe-style queue depth)
+POLICY_LIST = ("lru", "fifo", "clock")
+P_VALIDATE = np.array([0.5, 0.8, 0.95])
+SEEDS = (0, 1, 2, 3)
+N_VALIDATE = int(os.environ.get("REPRO_BENCH_FUTURE_REQUESTS", 30_000))
+
+
+def main() -> dict:
+    print("# fig_future_systems: c-server disk (IO_DEPTH=16), X in Mreq/s")
+    row("policy", "cores", "speedup", "disk_us", "p_star", "x_at_pstar",
+        "x_at_p999", "cliff", "bneck_p999", "mva_ok", "max_relgap", "sim_s")
+    out: dict = {}
+    ci_hits = ci_points = 0
+    for policy in POLICY_LIST:
+        for cores in CORES:
+            for spd in SPEEDUPS:
+                disk_us = BASE_DISK_US / spd
+                net = build(policy, disk_us=disk_us, cores=cores,
+                            disk_servers=IO_DEPTH)
+                p_star = net.p_star()
+                x_star = float(net.throughput_upper(p_star))
+                x_hi = float(net.throughput_upper(0.999))
+                cliff = x_star / x_hi  # >1 means throughput fell past p*
+
+                # --- validation lane: simulator vs exact multi-server MVA on
+                # the exponential analogue (what MVA actually solves).
+                with timer() as t:
+                    sim = simulate_network(
+                        exponential_analogue(net), P_VALIDATE,
+                        n_requests=N_VALIDATE, seeds=SEEDS, warmup_frac=0.4,
+                    )
+                mva = net.mva_throughput(P_VALIDATE)
+                gap = np.abs(sim.throughput - mva)
+                in_ci = gap <= sim.ci95
+                ok = bool(np.all(gap <= np.maximum(sim.ci95, 0.03 * mva)))
+                ci_hits += int(in_ci.sum())
+                ci_points += len(P_VALIDATE)
+                assert ok, (
+                    f"{policy} cores={cores} spd={spd}: sim-vs-MVA gap "
+                    f"{gap} exceeds CI {sim.ci95} + 3% floor (mva={mva})"
+                )
+
+                rel = float(np.max(gap / mva))
+                row(policy, cores, spd, disk_us, f"{p_star:.4f}",
+                    f"{x_star:.4f}", f"{x_hi:.4f}", f"{cliff:.3f}",
+                    net.bottleneck(0.999), f"{int(in_ci.sum())}/{len(in_ci)}",
+                    f"{rel:.3f}", f"{t.elapsed:.1f}")
+                out[(policy, cores, spd)] = dict(
+                    p_star=p_star, x_star=x_star, x_hi=x_hi, cliff=cliff,
+                    sim=sim.throughput, ci95=sim.ci95, mva=mva,
+                )
+
+    # ---- headline: the effect is MORE pronounced in future systems.
+    p_now = out[("lru", 1, 1)]["p_star"]
+    p_future = out[("lru", 64, 10)]["p_star"]
+    assert p_future < p_now, (p_future, p_now)
+    for spd in SPEEDUPS:
+        stars = [out[("lru", c, spd)]["p_star"] for c in CORES]
+        assert all(b <= a + 1e-9 for a, b in zip(stars, stars[1:])), (spd, stars)
+    # FIFO-like policies never develop a cliff, even in future systems.
+    for policy in ("fifo", "clock"):
+        for cores in CORES:
+            for spd in SPEEDUPS:
+                assert out[(policy, cores, spd)]["p_star"] > 0.999, (
+                    policy, cores, spd)
+    # the cliff deepens with cores for LRU at 10x disk
+    cliffs = [out[("lru", c, 10)]["cliff"] for c in CORES]
+    assert cliffs[-1] > cliffs[0], cliffs
+
+    frac = ci_hits / ci_points
+    print(f"# sim-vs-MVA: {ci_hits}/{ci_points} grid points within 95% CI "
+          f"({frac:.0%}); all within max(CI, 3%)")
+    assert frac >= 0.7, f"within-CI fraction {frac:.0%} too low"
+    print(f"# headline: LRU p* {p_now:.3f} (1 core, 1x) -> {p_future:.3f} "
+          f"(64 cores, 10x disk)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ BENCHES = [
     "fig10_clock",  # Fig. 10
     "fig12_slru",  # Fig. 12 (disk x MPL trends)
     "fig14_s3fifo",  # Fig. 14
+    "fig_future_systems",  # Sec. 6: cores x disk speed, c-server disk
     "table2_classify",  # Tables 1-2
     "bypass_mitigation",  # Sec. 5.2
     "serving_integration",  # beyond-paper: prefix-cache controller at pod scale
@@ -33,6 +34,9 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
     only = [s.strip() for s in args.only.split(",") if s.strip()]
+    unknown = [n for n in only if n not in BENCHES]
+    if unknown:
+        sys.exit(f"unknown benchmark(s) {unknown}; choose from {BENCHES}")
 
     failures = []
     for name in BENCHES:

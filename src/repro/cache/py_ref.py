@@ -22,15 +22,51 @@ class Access:
     ops: tuple  # (delink, head, tail, scan)
 
 
+class _KeyList(list):
+    """Key list with an O(1) membership set kept in sync.
+
+    Cache lists hold each key at most once, and are only mutated through
+    ``insert`` / ``pop`` / ``remove`` — exactly the operations shadowed here.
+    Rebuilding ``set(self)`` per membership probe (the old ``_ListCache``
+    behaviour) made every access O(n) with a hidden allocation, which times
+    out the hypothesis differential tests and the host-side serving
+    controller at realistic capacities.
+    """
+
+    def __init__(self, iterable=()):
+        super().__init__(iterable)
+        self._set = set(self)
+
+    def insert(self, index, key):
+        super().insert(index, key)
+        self._set.add(key)
+
+    def append(self, key):
+        super().append(key)
+        self._set.add(key)
+
+    def pop(self, index=-1):
+        key = super().pop(index)
+        self._set.discard(key)
+        return key
+
+    def remove(self, key):
+        super().remove(key)
+        self._set.discard(key)
+
+    def __contains__(self, key):
+        return key in self._set
+
+
 class _ListCache:
     """Shared machinery: key list ordered head(0) .. tail(-1)."""
 
     def __init__(self, capacity: int):
         self.capacity = capacity
-        self.order: list = []  # keys
+        self.order: _KeyList = _KeyList()  # keys
 
     def __contains__(self, key):
-        return key in set(self.order)
+        return key in self.order
 
 
 class LRU(_ListCache):
@@ -137,8 +173,8 @@ class SLRU:
     def __init__(self, capacity: int, protected_frac: float = 0.5):
         self.capacity = capacity
         self.protected_cap = max(1, int(capacity * protected_frac))
-        self.B: list = []  # probationary, head..tail
-        self.T: list = []  # protected
+        self.B: _KeyList = _KeyList()  # probationary, head..tail
+        self.T: _KeyList = _KeyList()  # protected
 
     def access(self, key: int, u: float = 0.0) -> Access:
         if key in self.T:
@@ -175,10 +211,15 @@ class S3FIFO:
         self.capacity = capacity
         self.s_cap = max(1, int(capacity * small_frac))
         self.m_cap = capacity - self.s_cap
-        self.S: list = []
-        self.M: list = []
+        self.S: _KeyList = _KeyList()
+        self.M: _KeyList = _KeyList()
         self.bit: dict = {}
+        # ghost is a circular buffer mutated by slot assignment, which
+        # _KeyList can't shadow — keep its membership set in sync by hand.
+        # A key never re-enters S (the only ghost writer) while its ghost
+        # entry is live, so the ring holds no duplicates.
         self.ghost = [-1] * max(1, self.m_cap)
+        self.ghost_set: set = set()
         self.ghost_pos = 0
 
     def _evict_m(self, max_scan=None):
@@ -205,7 +246,7 @@ class S3FIFO:
 
         ops = [0, 0, 0, 0]
         evicted = -1
-        in_ghost = key in self.ghost
+        in_ghost = key in self.ghost_set
 
         if in_ghost and len(self.M) >= self.m_cap:
             evicted, eops = self._evict_m()
@@ -225,7 +266,11 @@ class S3FIFO:
             else:
                 self.S.pop()
                 self.bit.pop(s_tail, None)
+                old = self.ghost[self.ghost_pos]
+                if old >= 0:
+                    self.ghost_set.discard(old)
                 self.ghost[self.ghost_pos] = s_tail
+                self.ghost_set.add(s_tail)
                 self.ghost_pos = (self.ghost_pos + 1) % len(self.ghost)
                 evicted = s_tail
                 ops[2] += 1

@@ -15,6 +15,7 @@ from repro.core.queueing import (
     ClosedNetwork,
     Station,
     bypass_network,
+    exponential_analogue,
     optimal_bypass_beta,
 )
 from repro.core.policy_models import (
@@ -41,7 +42,7 @@ from repro.core.classify import (
 
 __all__ = [
     "QUEUE", "THINK", "Branch", "ClosedNetwork", "Station",
-    "bypass_network", "optimal_bypass_beta",
+    "bypass_network", "exponential_analogue", "optimal_bypass_beta",
     "POLICY_BUILDERS", "build",
     "lru_network", "fifo_network", "prob_lru_network", "clock_network",
     "slru_network", "s3fifo_network",

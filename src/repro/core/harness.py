@@ -33,7 +33,14 @@ from collections import Counter
 import numpy as np
 
 from repro.cache.py_ref import PY_POLICIES
-from repro.core.queueing import QUEUE, THINK, Branch, ClosedNetwork, Station
+from repro.core.queueing import (
+    QUEUE,
+    THINK,
+    Branch,
+    ClosedNetwork,
+    Station,
+    disk_station,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +115,7 @@ def empirical_network(
     service: ServiceTimes | None = None,
     mpl: int = 72,
     warmup_frac: float = 0.25,
+    disk_servers: int = 0,
 ) -> tuple:
     """Build the measured-profile closed network from an execution trace.
 
@@ -124,7 +132,7 @@ def empirical_network(
 
     stations = [
         Station("lookup", THINK, service.lookup, dist="det"),
-        Station("disk", THINK, service.disk, dist="exp"),
+        disk_station(service.disk, disk_servers),
         Station("delink", QUEUE, service.delink, dist="det"),
         Station("head", QUEUE, service.head, dist="pareto",
                 dist_params=(0.45, 0.1, max(2 * service.head - 0.1, 0.2))),
@@ -166,6 +174,7 @@ def parameterized_network(
     miss_ops,
     service: ServiceTimes | None = None,
     mpl: int = 72,
+    disk_servers: int = 0,
 ) -> ClosedNetwork:
     """Hit-ratio-parameterized network from measured op vectors.
 
@@ -175,7 +184,7 @@ def parameterized_network(
     service = service or PAPER_SERVICES.get(policy, ServiceTimes())
     stations = [
         Station("lookup", THINK, service.lookup, dist="det"),
-        Station("disk", THINK, service.disk, dist="exp"),
+        disk_station(service.disk, disk_servers),
         Station("delink", QUEUE, service.delink, dist="det"),
         Station("head", QUEUE, service.head, dist="det"),
         Station("tail", QUEUE, service.tail, dist="det"),
@@ -205,6 +214,7 @@ def measure_cache(
     disk_us: float = 100.0,
     mpl: int = 72,
     seed: int = 0,
+    disk_servers: int = 0,
     **policy_kwargs,
 ) -> CacheMeasurement:
     """End-to-end prong C measurement at one cache size."""
@@ -213,7 +223,8 @@ def measure_cache(
     service = dataclasses.replace(
         PAPER_SERVICES.get(policy, ServiceTimes()), disk=disk_us
     )
-    meas = empirical_network(policy, hits, ops, service=service, mpl=mpl)
+    meas = empirical_network(policy, hits, ops, service=service, mpl=mpl,
+                             disk_servers=disk_servers)
     return dataclasses.replace(meas, capacity=capacity)
 
 

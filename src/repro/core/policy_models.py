@@ -14,6 +14,15 @@ analytic upper bound reproduces the paper's equations exactly:
 All service times are the paper's measurements on a 72-core Xeon 8360Y
 (Sec. 3.1/3.4).  ``disk_us`` selects the emulated backing-store latency
 (500 / 100 / 5 µs in the paper), ``mpl`` the multi-programming limit.
+
+"Future systems" knobs (paper Sec. 6 — more cores per CPU, faster disks):
+
+* ``cores`` — number of client cores; the paper runs one closed-loop client
+  thread per core, so this simply sets ``mpl = cores`` (overriding ``mpl``).
+* ``disk_servers`` — when > 0, the backing store is modeled as a
+  ``disk_servers``-server FCFS queue station (bounded I/O concurrency, e.g.
+  an NVMe queue depth) instead of the infinite-server think station the
+  paper assumes.  0 keeps the paper's infinite-server disk.
 """
 
 from __future__ import annotations
@@ -22,7 +31,14 @@ import math
 
 import numpy as np
 
-from repro.core.queueing import QUEUE, THINK, Branch, ClosedNetwork, Station
+from repro.core.queueing import (
+    QUEUE,
+    THINK,
+    Branch,
+    ClosedNetwork,
+    Station,
+    disk_station,
+)
 
 Z_CACHE_LOOKUP = 0.51  # µs, Sec. 3.1
 
@@ -82,11 +98,16 @@ def s3fifo_p_m(p_hit):
     return np.clip(chi2_h(400.0 * miss, 2.2870, 4.5309, 26.5874) / miss, 0.0, 1.0)
 
 
-def _common_think(disk_us: float):
+def _common_think(disk_us: float, disk_servers: int = 0):
     return [
         Station("lookup", THINK, Z_CACHE_LOOKUP, dist="det"),
-        Station("disk", THINK, float(disk_us), dist="exp"),
+        disk_station(disk_us, disk_servers),
     ]
+
+
+def _resolve_mpl(mpl: int, cores) -> int:
+    """One closed-loop client thread per core (paper Sec. 3.1 testbed)."""
+    return int(cores) if cores is not None else int(mpl)
 
 
 # --------------------------------------------------------------------------
@@ -94,9 +115,11 @@ def _common_think(disk_us: float):
 # --------------------------------------------------------------------------
 
 
-def lru_network(disk_us: float = 100.0, mpl: int = 72) -> ClosedNetwork:
+def lru_network(disk_us: float = 100.0, mpl: int = 72, cores: int | None = None,
+                disk_servers: int = 0) -> ClosedNetwork:
     """Fig. 2.  Hit: delink + head update.  Miss: disk + tail + head update."""
-    stations = _common_think(disk_us) + [
+    mpl = _resolve_mpl(mpl, cores)
+    stations = _common_think(disk_us, disk_servers) + [
         # S_head ~ BoundedPareto(alpha=0.45, 0.1..1.2) per Sec 3.1.
         Station("head", QUEUE, LRU_S_HEAD, dist="pareto", dist_params=(0.45, 0.1, 1.2)),
         Station("delink", QUEUE, LRU_S_DELINK, dist="det"),
@@ -117,9 +140,11 @@ def lru_network(disk_us: float = 100.0, mpl: int = 72) -> ClosedNetwork:
 # --------------------------------------------------------------------------
 
 
-def fifo_network(disk_us: float = 100.0, mpl: int = 72) -> ClosedNetwork:
+def fifo_network(disk_us: float = 100.0, mpl: int = 72, cores: int | None = None,
+                 disk_servers: int = 0) -> ClosedNetwork:
     """Fig. 4.  Hit: nothing.  Miss: disk + tail + head update."""
-    stations = _common_think(disk_us) + [
+    mpl = _resolve_mpl(mpl, cores)
+    stations = _common_think(disk_us, disk_servers) + [
         Station("head", QUEUE, FIFO_S_HEAD, dist="pareto", dist_params=(0.45, 0.1, 1.4)),
         Station("tail", QUEUE, FIFO_S_HEAD, bound="upper", dist="det"),
     ]
@@ -144,12 +169,14 @@ def prob_lru_service(q: float):
     return s_delink, s_head
 
 
-def prob_lru_network(q: float = 0.5, disk_us: float = 100.0, mpl: int = 72) -> ClosedNetwork:
+def prob_lru_network(q: float = 0.5, disk_us: float = 100.0, mpl: int = 72,
+                     cores: int | None = None, disk_servers: int = 0) -> ClosedNetwork:
     """Fig. 6.  Hit: with prob (1-q) promote (delink+head), with prob q nothing."""
     if not 0.0 <= q <= 1.0:
         raise ValueError("q must be in [0, 1]")
+    mpl = _resolve_mpl(mpl, cores)
     s_delink, s_head = prob_lru_service(q)
-    stations = _common_think(disk_us) + [
+    stations = _common_think(disk_us, disk_servers) + [
         Station("head", QUEUE, s_head, dist="pareto", dist_params=(0.45, 0.1, 2 * s_head - 0.1)),
         Station("delink", QUEUE, s_delink, dist="det"),
         Station("tail", QUEUE, s_head, bound="upper", dist="det"),
@@ -170,9 +197,11 @@ def prob_lru_network(q: float = 0.5, disk_us: float = 100.0, mpl: int = 72) -> C
 # --------------------------------------------------------------------------
 
 
-def clock_network(disk_us: float = 100.0, mpl: int = 72) -> ClosedNetwork:
+def clock_network(disk_us: float = 100.0, mpl: int = 72, cores: int | None = None,
+                  disk_servers: int = 0) -> ClosedNetwork:
     """Fig. 9.  Hit: set bit (~0 cost).  Miss: disk + (scanning) tail + head."""
-    stations = _common_think(disk_us) + [
+    mpl = _resolve_mpl(mpl, cores)
+    stations = _common_think(disk_us, disk_servers) + [
         Station(
             "tail", QUEUE,
             lambda p: CLOCK_S_BASE + 0.3 * float(clock_g(p)),
@@ -195,14 +224,16 @@ def clock_network(disk_us: float = 100.0, mpl: int = 72) -> ClosedNetwork:
 # --------------------------------------------------------------------------
 
 
-def slru_network(disk_us: float = 100.0, mpl: int = 72) -> ClosedNetwork:
+def slru_network(disk_us: float = 100.0, mpl: int = 72, cores: int | None = None,
+                 disk_servers: int = 0) -> ClosedNetwork:
     """Fig. 11.  Probationary B list + protected T list.
 
     hit-in-T (prob l(p)):  delinkT + headT
     hit-in-B (prob p - l(p)):  delinkB + headT, T overflows -> tailT + headB
     miss (1-p):  disk + tailB + headB
     """
-    stations = _common_think(disk_us) + [
+    mpl = _resolve_mpl(mpl, cores)
+    stations = _common_think(disk_us, disk_servers) + [
         Station("delinkT", QUEUE, LRU_S_DELINK, dist="det"),
         Station("delinkB", QUEUE, LRU_S_DELINK, dist="det"),
         Station("headT", QUEUE, LRU_S_HEAD, dist="pareto", dist_params=(0.45, 0.1, 1.2)),
@@ -234,6 +265,8 @@ def slru_network(disk_us: float = 100.0, mpl: int = 72) -> ClosedNetwork:
 def s3fifo_network(
     disk_us: float = 100.0,
     mpl: int = 72,
+    cores: int | None = None,
+    disk_servers: int = 0,
     p_ghost_fn=None,
     p_m_fn=None,
 ) -> ClosedNetwork:
@@ -247,9 +280,10 @@ def s3fifo_network(
     The M-tail scans for a 0 bit like CLOCK; the paper writes its service
     time as the bare g(p_hit) (Sec. 4.5) — encoded as printed.
     """
+    mpl = _resolve_mpl(mpl, cores)
     pg = p_ghost_fn or (lambda p: float(s3fifo_p_ghost(p)))
     pm = p_m_fn or (lambda p: float(s3fifo_p_m(p)))
-    stations = _common_think(disk_us) + [
+    stations = _common_think(disk_us, disk_servers) + [
         Station("ghost", THINK, Z_CACHE_LOOKUP, dist="det"),
         Station("headS", QUEUE, CLOCK_S_BASE, dist="det"),
         Station("tailS", QUEUE, CLOCK_S_BASE, bound="upper", dist="det"),

@@ -36,6 +36,7 @@ def simulate_py(
     dist = np.asarray(spec.dist_id)
     cum = np.asarray(spec.branch_cum)
     visits = np.asarray(spec.visits)
+    servers = np.asarray(spec.servers)
     K = len(is_q)
     N = net.mpl
 
@@ -49,7 +50,9 @@ def simulate_py(
 
     heap: list = []
     queues = {k: [] for k in range(K) if is_q[k]}
-    busy = {k: False for k in range(K) if is_q[k]}
+    # busy count per queue station: jobs in service, <= servers[k] (matches
+    # the JAX simulator's busy-count semantics; c-server FCFS).
+    busy = {k: 0 for k in range(K) if is_q[k]}
     job_branch = [0] * N
     job_pos = [0] * N
     for j in range(N):
@@ -66,10 +69,10 @@ def simulate_py(
         t, j, k = heapq.heappop(heap)
         if is_q[k]:
             if queues[k]:
-                w = queues[k].pop(0)
+                w = queues[k].pop(0)  # waiter takes over the freed server
                 heapq.heappush(heap, (t + sample(k), w, k))
             else:
-                busy[k] = False
+                busy[k] -= 1
         b = job_branch[j]
         pos = job_pos[j] + 1
         if pos >= visits.shape[1] or visits[b, pos] < 0:
@@ -82,10 +85,10 @@ def simulate_py(
         job_pos[j] = pos
         k2 = int(visits[b, pos])
         if is_q[k2]:
-            if busy[k2]:
+            if busy[k2] >= servers[k2]:
                 queues[k2].append(j)
                 continue
-            busy[k2] = True
+            busy[k2] += 1
         heapq.heappush(heap, (t + sample(k2), j, k2))
 
     return (done - warm_c) / (t - warm_t)

@@ -5,18 +5,23 @@ The paper models a DRAM cache under a Multi-Programming Limit (MPL) as a
 
   - **think stations** (infinite-server): cache lookup, disk/backing store,
     ghost lookup.  No queueing; all MPL requests may be in service at once.
-  - **queue stations** (single-server FCFS): the serialized metadata
+  - **queue stations** (c-server FCFS, default c=1): the serialized metadata
     operations on the global eviction structure (delink, head update, tail
-    update, ...).
+    update, ...), and — for the "future systems" extension — finite-
+    concurrency resources such as a backing store with bounded I/O depth.
 
 Throughput is upper-bounded (Harchol-Balter, "Performance Modeling and
-Design of Computer Systems", Theorem 7.1) by::
+Design of Computer Systems", Theorem 7.1; multi-server bottleneck law)
+by::
 
-    X  <=  min( N / (D + E[Z]),  1 / D_max )
+    X  <=  min( N / (D + E[Z]),  min_k c_k / D_k )
 
 where ``D_k`` is the *demand* of queue station ``k`` (expected total service
 a single request places on that station per pass through the system),
-``D = sum_k D_k``, ``D_max = max_k D_k`` and ``E[Z]`` the total think time.
+``c_k`` its server count, ``D = sum_k D_k`` and ``E[Z]`` the total think
+time.  A ``c_k``-server station completes at most ``c_k / D_k`` requests per
+unit time when saturated; with every ``c_k = 1`` this reduces to the
+paper's ``1 / D_max`` form.
 
 Everything below is parameterized by the hit ratio ``p_hit`` — demands and
 service times are functions of ``p_hit`` — which is what lets the model
@@ -64,6 +69,7 @@ class Station:
     bound: str = "exact"  # "exact" | "upper"
     dist: str = "det"  # det | exp | pareto  (used by the simulator)
     dist_params: tuple = ()
+    servers: int = 1  # FCFS server count (QUEUE stations only)
 
     def mean_service(self, p_hit: float) -> float:
         return float(_as_fn(self.service)(p_hit))
@@ -111,10 +117,22 @@ class ClosedNetwork:
         names = [s.name for s in self.stations]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate station names in {self.name}")
+        for s in self.stations:
+            if s.servers < 1:
+                raise ValueError(f"station {s.name}: servers must be >= 1")
+        kinds = {s.name: s.kind for s in self.stations}
         for b in self.branches:
             for v in b.visits:
                 if v not in names:
                     raise ValueError(f"branch {b.name} visits unknown station {v}")
+            # Simulators place all mpl jobs straight into service at their
+            # first station, which is only correct for infinite-server
+            # stations — queue-first routes would bypass busy accounting.
+            if b.visits and kinds[b.visits[0]] != THINK:
+                raise ValueError(
+                    f"branch {b.name} must start at a think station, "
+                    f"not queue station {b.visits[0]}"
+                )
         for p in p_grid:
             tot = sum(b.probability(p) for b in self.branches)
             if not math.isclose(tot, 1.0, abs_tol=1e-6):
@@ -152,25 +170,35 @@ class ClosedNetwork:
         counts = self.visit_counts(p_hit)
         return sum(counts[s.name] * s.mean_service(p_hit) for s in self.think_stations())
 
+    def queue_servers(self) -> dict:
+        """Server count c_k per queue station."""
+        return {s.name: int(s.servers) for s in self.queue_stations()}
+
     # ------------------------------------------------------------ thm 7.1
     def throughput_upper(self, p_hit, tail_mode: str = "zero"):
-        """Paper's analytic upper bound, X <= min(N/(D+Z), 1/Dmax).  Vectorized."""
+        """Analytic upper bound, X <= min(N/(D+Z), min_k c_k/D_k).  Vectorized.
+
+        With all-single-server stations this is exactly the paper's
+        X <= min(N/(D+Z), 1/Dmax) (Thm 7.1); a c-server station saturates
+        at c/D_k instead of 1/D_k.
+        """
+        servers = self.queue_servers()
         p_arr = np.atleast_1d(np.asarray(p_hit, dtype=np.float64))
         out = np.empty_like(p_arr)
         for i, p in enumerate(p_arr):
             d = self.demands(float(p), tail_mode=tail_mode)
             D = sum(d.values())
-            Dmax = max(d.values()) if d else 0.0
             Z = self.think_time(float(p))
             terms = [self.mpl / (D + Z)]
-            if Dmax > 0:
-                terms.append(1.0 / Dmax)
+            terms += [servers[k] / dk for k, dk in d.items() if dk > 0]
             out[i] = min(terms)
         return out if np.ndim(p_hit) else float(out[0])
 
     def bottleneck(self, p_hit: float, tail_mode: str = "zero") -> str:
+        """Station that saturates first: arg-max of per-server demand D_k/c_k."""
+        servers = self.queue_servers()
         d = self.demands(p_hit, tail_mode=tail_mode)
-        return max(d, key=d.get)
+        return max(d, key=lambda k: d[k] / servers[k])
 
     def p_star(self, tail_mode: str = "zero", grid: int = 20001) -> float:
         """Critical hit ratio after which throughput starts to deteriorate.
@@ -187,38 +215,136 @@ class ClosedNetwork:
         return float(ps[int(at_max[-1])])
 
     # ---------------------------------------------------------------- MVA
-    def mva(self, p_hit: float, n: int | None = None, tail_mode: str = "nominal"):
-        """Exact Mean Value Analysis of the (product-form) exponential analogue.
+    def mva(self, p_hit: float, n: int | None = None, tail_mode: str = "nominal",
+            multiserver: str = "exact"):
+        """Mean Value Analysis of the (product-form) exponential analogue.
 
         The paper only derives *bounds*; MVA gives the exact closed-network
         solution when services are exponential.  It is a very good
         approximation for the measured distributions (the paper notes
         insensitivity to service distributions, citing [80]).
 
+        Multi-server (c > 1) stations are handled per ``multiserver``:
+
+        ``"exact"`` (default)
+            Load-dependent MVA: per-station marginal queue-length
+            probabilities with service rate min(j, c)/S — exact for the
+            exponential analogue (Reiser & Lavenberg).
+        ``"seidmann"``
+            Seidmann's tandem decomposition: the c-server station becomes a
+            single server with demand D/c plus a pure delay of D(c-1)/c.
+            Cheaper, but underestimates X by up to ~15% when the population
+            is close to c.
+
+        With every ``servers=1`` both modes reduce to the same plain
+        single-server recursion as the seed code, bit for bit.
+
         Returns (X, {station: mean queue length}, R_total).
         """
         n = int(n or self.mpl)
         d = self.demands(p_hit, tail_mode=tail_mode)
         names = list(d)
+        servers = self.queue_servers()
+        C = np.array([servers[k] for k in names], dtype=np.float64)
         D = np.array([d[k] for k in names], dtype=np.float64)
         Z = self.think_time(p_hit)
-        Q = np.zeros_like(D)
-        X = 0.0
-        for k in range(1, n + 1):
-            R = D * (1.0 + Q)
-            Rtot = float(R.sum())
-            X = k / (Z + Rtot)
-            Q = X * R
-        return X, dict(zip(names, Q.tolist())), Z + float((D * (1.0 + Q)).sum())
 
-    def mva_throughput(self, p_hit, n: int | None = None, tail_mode: str = "nominal"):
+        if multiserver not in ("exact", "seidmann"):
+            raise ValueError(f"unknown multiserver mode {multiserver!r}")
+        if multiserver == "seidmann" or np.all(C == 1.0):
+            Dq = D / C  # queueing portion (per-server demand)
+            Zd = float((D * (C - 1.0) / C).sum())  # Seidmann delay portion
+            Z = Z + Zd
+            Q = np.zeros_like(D)
+            X = 0.0
+            R = Dq
+            for k in range(1, n + 1):
+                R = Dq * (1.0 + Q)
+                X = k / (Z + float(R.sum()))
+                Q = X * R
+            # R_total = Z + R(n) = n/X — same Little's-law-consistent
+            # convention as the exact branch below.
+            return X, dict(zip(names, Q.tolist())), Z + float(R.sum())
+
+        # Exact load-dependent recursion.  Single-server stations only need
+        # their mean queue length; c>1 stations carry marginal probabilities
+        # p_k(j | pop):  R_k = D_k sum_j (j / min(j, c)) p_k(j-1 | pop-1).
+        # The marginal update is renormalized when float error pushes
+        # sum_j>0 p_j past 1 — the classic MVA-LD instability at saturation
+        # otherwise compounds (the clamped p_0 form can overshoot c_k/D_k).
+        K = len(names)
+        Q = np.zeros(K)
+        j_idx = np.arange(1, n + 1, dtype=np.float64)
+        weights = {}  # per multi-server station: j / min(j, c) for j = 1..n
+        marg = {}
+        for k in range(K):
+            if C[k] > 1:
+                weights[k] = j_idx / np.minimum(j_idx, C[k])
+                pk = np.zeros(n + 1)
+                pk[0] = 1.0
+                marg[k] = pk
+        X = 0.0
+        R = np.zeros(K)
+        for pop in range(1, n + 1):
+            for k in range(K):
+                if k in marg:
+                    R[k] = D[k] * float((weights[k][:pop] * marg[k][:pop]).sum())
+                else:
+                    R[k] = D[k] * (1.0 + Q[k])
+            X = pop / (Z + float(R.sum()))
+            Q = X * R
+            for k in marg:
+                pk = marg[k]
+                new = np.zeros(n + 1)
+                new[1:pop + 1] = X * D[k] / np.minimum(j_idx[:pop], C[k]) * pk[:pop]
+                s = float(new[1:].sum())
+                if s > 1.0:
+                    new[1:] /= s
+                else:
+                    new[0] = 1.0 - s
+                marg[k] = new
+        return X, dict(zip(names, Q.tolist())), Z + float(R.sum())
+
+    def mva_throughput(self, p_hit, n: int | None = None, tail_mode: str = "nominal",
+                       multiserver: str = "exact"):
         p_arr = np.atleast_1d(np.asarray(p_hit, dtype=np.float64))
-        out = np.array([self.mva(float(p), n=n, tail_mode=tail_mode)[0] for p in p_arr])
+        out = np.array([
+            self.mva(float(p), n=n, tail_mode=tail_mode, multiserver=multiserver)[0]
+            for p in p_arr
+        ])
         return out if np.ndim(p_hit) else float(out[0])
 
     def response_time_upper(self, p_hit, tail_mode: str = "zero"):
         """Mean cycle (response) time lower bound, R = N / X_upper."""
         return self.mpl / self.throughput_upper(p_hit, tail_mode=tail_mode)
+
+
+def disk_station(disk_us: float, disk_servers: int = 0) -> Station:
+    """The backing store: infinite-server think station (the paper's model,
+    ``disk_servers=0``) or a c-server FCFS queue station with bounded I/O
+    concurrency (the "future systems" extension).  Single definition shared
+    by the analytic policy networks and the prong-C harness so the two
+    stacks can never model different disks behind the same knob."""
+    if disk_servers:
+        return Station("disk", QUEUE, float(disk_us), dist="exp",
+                       servers=int(disk_servers))
+    return Station("disk", THINK, float(disk_us), dist="exp")
+
+
+def exponential_analogue(net: ClosedNetwork) -> ClosedNetwork:
+    """Replace every service distribution by exponential (same means).
+
+    This is the network MVA actually solves; simulate it when validating
+    MVA at CI-level precision — the det/pareto originals differ from the
+    exponential analogue by a genuine (in)sensitivity gap of several percent
+    at saturated single-server stations.
+    """
+    return dataclasses.replace(
+        net,
+        stations=tuple(
+            dataclasses.replace(s, dist="exp", dist_params=()) for s in net.stations
+        ),
+    )
 
 
 # --------------------------------------------------------------------------
@@ -242,7 +368,9 @@ def bypass_network(net: ClosedNetwork, beta: ProbFn) -> ClosedNetwork:
                 b, prob=(lambda p, pf=pf, bf=beta_fn: (1.0 - bf(p)) * pf(p))
             )
         )
-    disk = [s.name for s in net.think_stations() if "disk" in s.name]
+    # the disk may be a think station (paper) or a c-server queue station
+    # (disk_servers > 0) — bypassed traffic hits it either way.
+    disk = [s.name for s in net.stations if "disk" in s.name]
     lookup = [s.name for s in net.think_stations() if "lookup" in s.name]
     visits = tuple(lookup[:1] + disk[:1])
     scaled.append(Branch("bypass", lambda p, bf=beta_fn: bf(p), visits))
@@ -251,24 +379,54 @@ def bypass_network(net: ClosedNetwork, beta: ProbFn) -> ClosedNetwork:
     )
 
 
-def optimal_bypass_beta(net: ClosedNetwork, p_hit: float) -> float:
+def optimal_bypass_beta(net: ClosedNetwork, p_hit: float, grid: int = 1001) -> float:
     """Smallest beta that caps the hit-path bottleneck demand at its p* level.
 
     For p_hit <= p*, no bypass is needed (beta = 0).  Beyond p*, keeping the
     bottleneck demand pinned at D_max(p*) keeps throughput flat instead of
-    falling — the behaviour the paper reports for this mitigation.
+    falling — the behaviour the paper reports for this mitigation.  The cap
+    only covers stations the bypass actually relieves: bypassed requests
+    still visit the lookup + backing store, so those are excluded (for the
+    paper's infinite-server disk this changes nothing — think stations carry
+    no queueing demand).
+
+    With a bounded-I/O-depth disk (``disk_servers`` > 0) bypassing *adds*
+    disk demand, so the capping beta can saturate the disk and make the
+    "mitigation" a net loss; in that case fall back to the beta maximizing
+    the analytic bound over a grid (ties resolve to the smallest beta).
     """
     p_star = net.p_star()
     if p_hit <= p_star:
         return 0.0
-    target = max(net.demands(p_star).values())
+    servers = net.queue_servers()
+    relieved = set(servers) - set(
+        next(b for b in bypass_network(net, 0.5).branches
+             if b.name == "bypass").visits
+    )
+
+    def max_relieved(n: ClosedNetwork, p: float) -> float:
+        return max(
+            (dk / servers[k] for k, dk in n.demands(p).items() if k in relieved),
+            default=0.0,
+        )
+
+    target = max_relieved(net, p_star)
 
     lo, hi = 0.0, 1.0
     for _ in range(60):
         mid = 0.5 * (lo + hi)
-        d = max(bypass_network(net, mid).demands(p_hit).values())
-        if d > target:
+        if max_relieved(bypass_network(net, mid), p_hit) > target:
             lo = mid
         else:
             hi = mid
-    return 0.5 * (lo + hi)
+    beta = 0.5 * (lo + hi)
+
+    if (bypass_network(net, beta).throughput_upper(p_hit)
+            < net.throughput_upper(p_hit)):
+        betas = np.linspace(0.0, 1.0, grid)
+        xs = np.array([
+            float(bypass_network(net, float(b)).throughput_upper(p_hit))
+            for b in betas
+        ])
+        beta = float(betas[int(np.argmax(xs))])
+    return beta

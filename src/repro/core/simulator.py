@@ -1,16 +1,20 @@
 """Event-driven simulation of the closed queueing networks — prong B.
 
 A generic discrete-event simulator for :class:`repro.core.queueing.ClosedNetwork`,
-written against ``jax.lax`` so a whole ``p_hit`` grid simulates as one
-``vmap``-ed, jitted program.
+written against ``jax.lax`` so the full ``p_hit`` × ``seed`` grid simulates
+as one ``vmap``-ed, jitted program.
 
 Design notes
 ------------
 * **Closed loop.**  Exactly ``mpl`` jobs exist; a completed request
   immediately re-enters as a new request (samples a fresh branch).
 * **Stations.**  Think stations are infinite-server (a job entering one is
-  immediately "in service"); queue stations are single-server FCFS with an
-  explicit FIFO discipline implemented via per-job enqueue sequence numbers.
+  immediately "in service"); queue stations are c-server FCFS.  Each queue
+  station tracks a *busy count* (jobs currently in service); an arriving job
+  starts service while ``busy_count < servers`` and otherwise waits, and a
+  departure hands the freed server to the earliest waiter.  The FIFO
+  discipline is implemented via per-job enqueue sequence numbers; with
+  ``servers=1`` the behaviour is exactly the seed single-server semantics.
 * **Clock.**  Integer *nanoseconds*, rebased to zero at every event so the
   clock never overflows int32 regardless of simulation length; total elapsed
   time accumulates separately in float32 microseconds (increments are
@@ -51,6 +55,7 @@ class SimSpec(NamedTuple):
     dist_params: jax.Array  # (K, 4) f32: alpha, lo, hi, raw_mean (pareto)
     branch_cum: jax.Array  # (B,) f32 cumulative branch probabilities
     visits: jax.Array  # (B, L) i32 station indices, -1 padded
+    servers: jax.Array  # (K,) i32 FCFS server count (1 for think stations)
     mpl: int
 
 
@@ -93,6 +98,15 @@ def compile_network(net: ClosedNetwork, p_hit: float) -> SimSpec:
     for bi, b in enumerate(net.branches):
         for vi, v in enumerate(b.visits):
             visits[bi, vi] = idx[v]
+    if is_queue[visits[:, 0]].any():
+        # init places all mpl jobs straight into service at their first
+        # station; a queue-first route would bypass the busy accounting.
+        raise ValueError("branch routes must start at a think station")
+
+    servers = np.array(
+        [s.servers if s.kind == QUEUE else 1 for s in net.stations],
+        dtype=np.int32,
+    )
 
     return SimSpec(
         is_queue=jnp.asarray(is_queue),
@@ -101,6 +115,7 @@ def compile_network(net: ClosedNetwork, p_hit: float) -> SimSpec:
         dist_params=jnp.asarray(dist_params),
         branch_cum=jnp.asarray(branch_cum),
         visits=jnp.asarray(visits),
+        servers=jnp.asarray(servers),
         mpl=net.mpl,
     )
 
@@ -144,7 +159,7 @@ class _SimState(NamedTuple):
     branch: jax.Array  # (N,) i32
     pos: jax.Array  # (N,) i32
     enq_seq: jax.Array  # (N,) i32, BIG when not waiting
-    busy: jax.Array  # (K,) bool
+    busy_count: jax.Array  # (K,) i32 jobs in service (<= servers[k])
     seq_ctr: jax.Array  # i32
     completed: jax.Array  # i32
     elapsed_us: jax.Array  # f32
@@ -178,7 +193,7 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         branch=branch0,
         pos=jnp.zeros((N,), jnp.int32),
         enq_seq=jnp.full((N,), BIG_SEQ),
-        busy=jnp.zeros(spec.is_queue.shape, bool),
+        busy_count=jnp.zeros(spec.is_queue.shape, jnp.int32),
         seq_ctr=jnp.int32(0),
         completed=jnp.int32(0),
         elapsed_us=jnp.float32(0.0),
@@ -201,12 +216,12 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         elapsed_us = state.elapsed_us + t.astype(jnp.float32) * 1e-3
 
         k_cur = state.station[j]
-        busy = state.busy
+        busy_count = state.busy_count
         enq_seq = state.enq_seq
 
-        # ---- release the server job j held (if any) to its FIFO successor.
+        # ---- hand the server job j held (if any) to its FIFO successor.
         def release(args):
-            ready, busy, enq_seq = args
+            ready, busy_count, enq_seq = args
             waiting = (state.station == k_cur) & (ready == INF_NS)
             waiting = waiting.at[j].set(False)
             seqs = jnp.where(waiting, enq_seq, BIG_SEQ)
@@ -215,11 +230,16 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             svc = _sample_service_ns(k_svc1, spec, k_cur)
             ready = jnp.where(has_waiter, ready.at[w].set(svc), ready)
             enq_seq = jnp.where(has_waiter, enq_seq.at[w].set(BIG_SEQ), enq_seq)
-            busy = busy.at[k_cur].set(has_waiter)
-            return ready, busy, enq_seq
+            # a waiter takes over j's server (count unchanged); otherwise the
+            # server goes idle.
+            busy_count = busy_count.at[k_cur].add(
+                jnp.where(has_waiter, 0, -1).astype(jnp.int32)
+            )
+            return ready, busy_count, enq_seq
 
-        ready, busy, enq_seq = jax.lax.cond(
-            spec.is_queue[k_cur], release, lambda a: a, (ready, busy, enq_seq)
+        ready, busy_count, enq_seq = jax.lax.cond(
+            spec.is_queue[k_cur], release, lambda a: a,
+            (ready, busy_count, enq_seq),
         )
 
         # ---- advance job j along its route (or complete + start new request).
@@ -237,12 +257,12 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         # ---- place j at k_next.
         svc_next = _sample_service_ns(k_svc2, spec, k_next)
         is_q = spec.is_queue[k_next]
-        q_busy = busy[k_next]
-        starts_now = (~is_q) | (~q_busy)
+        has_slot = busy_count[k_next] < spec.servers[k_next]
+        starts_now = (~is_q) | has_slot
         ready = ready.at[j].set(jnp.where(starts_now, svc_next, INF_NS))
         enq_seq = enq_seq.at[j].set(jnp.where(starts_now, BIG_SEQ, state.seq_ctr))
         seq_ctr = state.seq_ctr + (~starts_now).astype(jnp.int32)
-        busy = jnp.where(is_q & starts_now, busy.at[k_next].set(True), busy)
+        busy_count = busy_count.at[k_next].add((is_q & starts_now).astype(jnp.int32))
 
         # ---- warmup bookkeeping.
         warm_now = (completed >= warmup) & (state.warm_completed < 0)
@@ -256,7 +276,7 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             branch=state.branch.at[j].set(branch_j),
             pos=state.pos.at[j].set(pos_j),
             enq_seq=enq_seq,
-            busy=busy,
+            busy_count=busy_count,
             seq_ctr=seq_ctr,
             completed=completed,
             elapsed_us=elapsed_us,
@@ -288,7 +308,12 @@ def simulate_network(
     seeds=(0, 1, 2),
     warmup_frac: float = 0.25,
 ) -> SimResult:
-    """Simulate ``net`` over a grid of hit ratios; vmapped over the grid."""
+    """Simulate ``net`` over a grid of hit ratios.
+
+    The full (p_hit × seed) grid dispatches as ONE vmapped, jitted program:
+    the per-p_hit spec arrays are tiled across seeds so every (p, seed) cell
+    is an independent lane of the same kernel.
+    """
     p_hits = np.atleast_1d(np.asarray(p_hits, dtype=np.float64))
     spec = stack_specs([compile_network(net, float(p)) for p in p_hits])
     warmup = int(n_requests * warmup_frac)
@@ -302,12 +327,16 @@ def simulate_network(
         )[0],
         in_axes=(0, 0),
     )
-    spec_arrays = tuple(spec[:-1])  # strip the static mpl field for vmap
-    xs = []
-    for seed in seeds:
-        seed_v = jnp.full((len(p_hits),), seed, jnp.int32) * 1000 + jnp.arange(len(p_hits))
-        xs.append(np.asarray(runner(spec_arrays, seed_v)))
-    xs = np.stack(xs)  # (seeds, P)
+    P, S = len(p_hits), len(seeds)
+    # strip the static mpl field for vmap; tile (P, ...) -> (S*P, ...)
+    spec_arrays = tuple(
+        jnp.concatenate([a] * S, axis=0) if S > 1 else a for a in spec[:-1]
+    )
+    seed_v = jnp.concatenate(
+        [jnp.full((P,), s, jnp.int32) * 1000 + jnp.arange(P, dtype=jnp.int32)
+         for s in seeds]
+    )
+    xs = np.asarray(runner(spec_arrays, seed_v)).reshape(S, P)
     mean = xs.mean(axis=0)
     ci = 1.96 * xs.std(axis=0, ddof=1) / math.sqrt(len(seeds)) if len(seeds) > 1 else np.zeros_like(mean)
     return SimResult(p_hit=p_hits, throughput=mean, ci95=ci, n_requests=n_requests)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 INT_MAX = jnp.int32(2**31 - 1)
 
 
@@ -57,8 +59,16 @@ def lru_batch_update(timestamps, accessed, now, *, tile: int = 512,
     C = timestamps.shape[0]
     N = accessed.shape[0]
     tile = min(tile, C)
-    assert C % tile == 0, "capacity must be a multiple of the tile size"
-    n_tiles = C // tile
+    # Pad to the next tile multiple with INT_MAX sentinels.  Slot ids past C
+    # never appear in `accessed` (ids are < C, padding is -1), so sentinels
+    # survive the sweep untouched and can never win the argmin victim search
+    # (any real slot's timestamp is < INT_MAX).
+    pad = (-C) % tile
+    if pad:
+        timestamps = jnp.concatenate(
+            [timestamps, jnp.full((pad,), INT_MAX, jnp.int32)]
+        )
+    n_tiles = (C + pad) // tile
 
     kernel = functools.partial(_sweep_kernel, tile=tile)
     new_ts, mins, args = pl.pallas_call(
@@ -75,15 +85,15 @@ def lru_batch_update(timestamps, accessed, now, *, tile: int = 512,
             pl.BlockSpec((1,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((C,), jnp.int32),
+            jax.ShapeDtypeStruct((C + pad,), jnp.int32),
             jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
             jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
     )(timestamps, accessed, jnp.asarray([now], jnp.int32))
 
     best = jnp.argmin(mins)
-    return new_ts, args[best]
+    return new_ts[:C], args[best]

@@ -1,0 +1,199 @@
+"""c-server queue stations: model / JAX simulator / Python oracle agreement.
+
+The multi-server extension must (a) leave every single-server result
+bit-identical to the seed code, and (b) keep the three prongs consistent
+with each other on genuinely multi-server networks.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    QUEUE,
+    THINK,
+    Branch,
+    ClosedNetwork,
+    Station,
+    exponential_analogue,
+    lru_network,
+)
+from repro.core.py_sim import simulate_py
+from repro.core.simulator import compile_network, simulate_network
+
+
+def _two_server_network(mpl: int = 8) -> ClosedNetwork:
+    """Tiny LRU-shaped network whose metadata op runs on TWO servers."""
+    stations = (
+        Station("lookup", THINK, 0.5, dist="det"),
+        Station("disk", THINK, 20.0, dist="exp"),
+        Station("head", QUEUE, 0.6, dist="exp", servers=2),
+    )
+    branches = (
+        Branch("hit", lambda p: p, ("lookup", "head")),
+        Branch("miss", lambda p: 1.0 - p, ("lookup", "disk", "head")),
+    )
+    return ClosedNetwork("lru2srv", stations, branches, mpl)
+
+
+# ---------------------------------------------------------------------------
+# servers=1 must reproduce the seed single-server numbers exactly
+# ---------------------------------------------------------------------------
+
+
+def test_throughput_upper_servers_one_reproduces_seed():
+    """With all servers=1, the c/D law IS the seed's min(N/(D+Z), 1/Dmax)."""
+    net = lru_network(disk_us=100.0)
+    assert all(s.servers == 1 for s in net.stations)
+    P = np.linspace(0.0, 0.999, 41)
+    ours = net.throughput_upper(P)
+    seed = np.empty_like(ours)
+    for i, p in enumerate(P):
+        d = net.demands(float(p))
+        seed[i] = min(net.mpl / (sum(d.values()) + net.think_time(float(p))),
+                      1.0 / max(d.values()))
+    np.testing.assert_array_equal(ours, seed)
+
+
+def test_mva_servers_one_reproduces_seed():
+    """Both multiserver modes reduce to the seed recursion, bit for bit."""
+    net = lru_network(disk_us=100.0)
+    for p in (0.3, 0.84, 0.99):
+        d = net.demands(p, tail_mode="nominal")
+        D = np.array(list(d.values()))
+        Z = net.think_time(p)
+        Q = np.zeros_like(D)
+        X = 0.0
+        for k in range(1, net.mpl + 1):  # the seed's exact recursion
+            R = D * (1.0 + Q)
+            X = k / (Z + float(R.sum()))
+            Q = X * R
+        assert net.mva(p, multiserver="exact")[0] == X
+        assert net.mva(p, multiserver="seidmann")[0] == X
+
+
+# ---------------------------------------------------------------------------
+# multi-server model properties
+# ---------------------------------------------------------------------------
+
+
+def test_multiserver_bottleneck_law():
+    """A c-server station saturates at c/D, not 1/D."""
+    net = _two_server_network(mpl=64)
+    p = 0.95
+    d_head = net.demands(p)["head"]
+    assert net.throughput_upper(p) == pytest.approx(2.0 / d_head)
+    one = ClosedNetwork(
+        net.name, tuple(
+            s if s.name != "head" else
+            Station("head", QUEUE, 0.6, dist="exp", servers=1)
+            for s in net.stations
+        ), net.branches, net.mpl,
+    )
+    assert one.throughput_upper(p) == pytest.approx(1.0 / d_head)
+
+
+def test_seidmann_underestimates_exact():
+    """Seidmann's tandem decomposition is pessimistic near pop ~ c."""
+    net = lru_network(disk_us=100.0, cores=16, disk_servers=16)
+    for p in (0.5, 0.8):
+        seid = net.mva(p, multiserver="seidmann")[0]
+        exact = net.mva(p, multiserver="exact")[0]
+        assert seid <= exact + 1e-12
+        assert exact <= net.throughput_upper(p, tail_mode="nominal") * (1 + 1e-9)
+
+
+def test_queue_first_route_rejected():
+    """Simulators start all jobs in service at their first station — routes
+    must begin at a think station, and both entry points enforce it."""
+    stations = (Station("q", QUEUE, 1.0), Station("z", THINK, 1.0))
+    net = ClosedNetwork("bad", stations, (Branch("b", 1.0, ("q", "z")),), 4)
+    with pytest.raises(ValueError, match="think station"):
+        net.validate()
+    with pytest.raises(ValueError, match="think station"):
+        compile_network(net, 0.5)
+
+
+def test_compile_network_exposes_servers():
+    spec = compile_network(_two_server_network(), 0.5)
+    servers = np.asarray(spec.servers)
+    is_q = np.asarray(spec.is_queue)
+    assert servers[is_q].tolist() == [2]
+    assert np.all(servers[~is_q] == 1)
+
+
+# ---------------------------------------------------------------------------
+# differential: JAX simulator vs heapq oracle on 2- and 8-server networks
+# ---------------------------------------------------------------------------
+
+
+def test_jax_matches_py_oracle_two_server():
+    net = _two_server_network(mpl=8)
+    for p in (0.5, 0.9):
+        res = simulate_network(net, [p], n_requests=12_000, seeds=(0, 1, 2))
+        x_py = simulate_py(net, p, n_requests=12_000, seed=3)
+        x_jax = float(res.throughput[0])
+        assert abs(x_py - x_jax) / x_py < 0.05, (p, x_py, x_jax)
+
+
+def test_jax_matches_py_oracle_eight_server():
+    """8-server disk station under a 16-client closed loop."""
+    net = lru_network(disk_us=50.0, cores=16, disk_servers=8)
+    for p in (0.4, 0.9):
+        res = simulate_network(net, [p], n_requests=12_000, seeds=(0, 1, 2))
+        x_py = simulate_py(net, p, n_requests=12_000, seed=5)
+        x_jax = float(res.throughput[0])
+        assert abs(x_py - x_jax) / x_py < 0.05, (p, x_py, x_jax)
+
+
+def test_multiserver_sim_respects_bound_and_mva():
+    """Sim below the c/D bound; exact LD-MVA tracks the exponential analogue."""
+    net = _two_server_network(mpl=16)
+    p = 0.9
+    res = simulate_network(exponential_analogue(net), [p],
+                           n_requests=20_000, seeds=(0, 1, 2), warmup_frac=0.4)
+    x = float(res.throughput[0])
+    assert x <= net.throughput_upper(p, tail_mode="nominal") * 1.03
+    mva = net.mva(p)[0]
+    assert abs(x - mva) / mva < 0.05, (x, mva)
+
+
+def test_bypass_reaches_queue_station_disk():
+    """Bypassed requests must still hit the backing store when it is a
+    c-server queue station (disk_servers > 0), not only when it is a think
+    station."""
+    from repro.core import bypass_network
+
+    net = lru_network(disk_us=100.0, cores=16, disk_servers=16)
+    byp = bypass_network(net, 0.5)
+    bypass_branch = next(b for b in byp.branches if b.name == "bypass")
+    assert "disk" in bypass_branch.visits
+    byp.validate()
+
+
+def test_optimal_bypass_with_queue_station_disk():
+    """Regression: with a bounded-I/O-depth disk, bypassing adds disk load,
+    so the old cap-the-bottleneck bisection walked to beta=1 (a ~9x
+    throughput LOSS); the maximizer must strictly improve on no bypass and
+    never land on full bypass."""
+    from repro.core import bypass_network, optimal_bypass_beta
+
+    net = lru_network(disk_us=100.0, disk_servers=16)
+    p = 0.999
+    beta = optimal_bypass_beta(net, p)
+    assert 0.0 < beta < 0.99, beta
+    x_plain = net.throughput_upper(p)
+    x_bypass = bypass_network(net, beta).throughput_upper(p)
+    x_full = bypass_network(net, 1.0).throughput_upper(p)
+    assert x_bypass > x_plain
+    assert x_bypass > x_full
+
+
+def test_future_systems_p_star_shrinks():
+    """The paper's closing claim, analytically: more cores + faster disk
+    move the critical hit ratio strictly earlier."""
+    p_now = lru_network(disk_us=100.0, cores=1, disk_servers=16).p_star()
+    p_future = lru_network(disk_us=10.0, cores=64, disk_servers=16).p_star()
+    assert p_future < p_now
+    # and cores alone (disk fixed) already shrink it
+    p_few = lru_network(disk_us=10.0, cores=4, disk_servers=16).p_star()
+    assert p_future <= p_few <= p_now
