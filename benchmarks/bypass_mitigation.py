@@ -1,29 +1,43 @@
 """Paper Sec. 5.2: bypassing the cache under load keeps throughput flat
-past p* instead of dropping."""
+past p* instead of dropping.
+
+The operating points are *measured* hit ratios from the real LRU structure
+(one batched Mattson sweep over cache sizes), not a hand-picked p grid —
+the mitigation is evaluated exactly where an implementation can sit.
+"""
 
 import numpy as np
 
 from benchmarks.common import N_SIM_REQUESTS, row
 from repro.core import bypass_network, lru_network, optimal_bypass_beta
+from repro.core.harness import sweep_cache_sizes
 from repro.core.simulator import simulate_network
+
+CAPS = (1024, 2048, 3300, 4096)
 
 
 def main() -> dict:
     print("# bypass_mitigation: policy=lru disk=100us")
-    row("p_hit", "beta", "x_plain", "x_bypass")
+    row("cap", "p_hit", "beta", "x_plain", "x_bypass")
     net = lru_network(disk_us=100.0)
+    sweep = sweep_cache_sizes("lru", CAPS, key_space=4096,
+                              n_requests=40_000, disk_us=100.0, backend="jax")
     out = {}
-    ps = [0.85, 0.9, 0.95, 0.99]
-    for p in ps:
+    for cap, p in zip(sweep["size"], sweep["p_hit"]):
+        p = float(p)
         beta = optimal_bypass_beta(net, p)
         x_plain = simulate_network(net, [p], n_requests=N_SIM_REQUESTS,
                                    seeds=(0,)).throughput[0]
         bnet = bypass_network(net, beta)
         x_byp = simulate_network(bnet, [p], n_requests=N_SIM_REQUESTS,
                                  seeds=(0,)).throughput[0]
-        row(f"{p:.2f}", f"{beta:.3f}", f"{x_plain:.4f}", f"{x_byp:.4f}")
-        out[p] = (beta, float(x_plain), float(x_byp))
-    assert out[0.99][2] >= out[0.99][1], "bypass must not hurt at high p_hit"
+        row(int(cap), f"{p:.3f}", f"{beta:.3f}", f"{x_plain:.4f}",
+            f"{x_byp:.4f}")
+        out[int(cap)] = (p, beta, float(x_plain), float(x_byp))
+    # at the largest cache (highest measured p_hit) bypassing must not hurt
+    p_top, _, x_plain_top, x_byp_top = out[CAPS[-1]]
+    assert p_top > 0.9, f"largest cache should measure p_hit > 0.9, got {p_top}"
+    assert x_byp_top >= x_plain_top, "bypass must not hurt at high p_hit"
     return out
 
 

@@ -8,8 +8,10 @@ import numpy as np
 
 from benchmarks.common import DISKS, N_SIM_REQUESTS, P_GRID, row, timer
 from repro.core import lru_network
-from repro.core.harness import measure_cache
+from repro.core.harness import sweep_cache_sizes
 from repro.core.simulator import simulate_network
+
+IMPL_CAPS = (96, 384, 1024, 2048, 3300)
 
 
 def main() -> dict:
@@ -22,16 +24,17 @@ def main() -> dict:
         with timer() as t:
             sim = simulate_network(net, P_GRID, n_requests=N_SIM_REQUESTS,
                                    seeds=(0,))
-        # implementation prong: drive the real LRU structure at cache sizes
-        # that land near the model p_hit grid, then simulate its measured
-        # profile network at the measured hit ratio.
-        impl_points = {}
-        for cap in (96, 384, 1024, 2048, 3300):
-            meas = measure_cache("lru", cap, key_space=4096,
-                                 n_requests=30_000, disk_us=disk)
-            res = simulate_network(meas.network, [meas.hit_ratio],
-                                   n_requests=N_SIM_REQUESTS, seeds=(0,))
-            impl_points[meas.hit_ratio] = float(res.throughput[0])
+        # implementation prong: replay the real LRU structure at cache sizes
+        # that land near the model p_hit grid — all sizes in one batched
+        # dispatch (backend="jax") — then simulate each measured-profile
+        # network at its measured hit ratio.
+        sweep = sweep_cache_sizes(
+            "lru", IMPL_CAPS, key_space=4096, n_requests=30_000,
+            disk_us=disk, simulate=True, sim_requests=N_SIM_REQUESTS,
+            backend="jax",
+        )
+        impl_points = dict(zip(sweep["p_hit"].tolist(),
+                               sweep["x_sim"].tolist()))
         for i, p in enumerate(P_GRID):
             # nearest implementation point (impl p_hit comes from cache size)
             impl_p = min(impl_points, key=lambda q: abs(q - p))

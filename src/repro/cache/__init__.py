@@ -8,11 +8,18 @@ property-tested-equivalent forms:
   * :mod:`repro.cache.py_ref`  — Python references, used by the host-side
     serving controller and as hypothesis oracles.
 
-The linked-list primitives in :mod:`repro.cache.dlist` map 1:1 to the
-paper's queue stations (delink / head update / tail update).
+:mod:`repro.cache.replay` batches the JAX policies into a compiled
+(capacity x seed) trace-replay grid — the fast path of the prong-C
+measurement harness.  The linked-list primitives in
+:mod:`repro.cache.dlist` map 1:1 to the paper's queue stations
+(delink / head update / tail update).
 """
 
 from repro.cache.policies import POLICIES, AccessResult, OpCounts, run_trace
 from repro.cache.py_ref import PY_POLICIES
+from repro.cache.replay import ReplayResult, lru_sweep, replay_grid, replay_trace
 
-__all__ = ["POLICIES", "PY_POLICIES", "AccessResult", "OpCounts", "run_trace"]
+__all__ = [
+    "POLICIES", "PY_POLICIES", "AccessResult", "OpCounts", "run_trace",
+    "ReplayResult", "lru_sweep", "replay_grid", "replay_trace",
+]

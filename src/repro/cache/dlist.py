@@ -78,6 +78,44 @@ def pop_tail(dl: DList):
     return dl2, s
 
 
+def delink_if(dl: DList, s, pred) -> DList:
+    """Predicated :func:`delink`: a no-op when ``pred`` is False.
+
+    Every write is an unconditional gather-select-scatter (the stored value
+    is re-written when disabled), so the op stays branch-free under
+    ``lax.scan``/``vmap`` — a ``lax.cond`` here forces XLA to copy the whole
+    state at the branch boundary, which dominates replay time on CPU.
+    """
+    s = jnp.int32(s)
+    p, n = dl.prv[s], dl.nxt[s]
+    ip = jnp.maximum(p, 0)
+    nxt = dl.nxt.at[ip].set(jnp.where(pred & (p != NIL), n, dl.nxt[ip]))
+    im = jnp.maximum(n, 0)
+    prv = dl.prv.at[im].set(jnp.where(pred & (n != NIL), p, dl.prv[im]))
+    head = jnp.where(pred & (dl.head == s), n, dl.head)
+    tail = jnp.where(pred & (dl.tail == s), p, dl.tail)
+    prv = prv.at[s].set(jnp.where(pred, jnp.int32(NIL), prv[s]))
+    nxt = nxt.at[s].set(jnp.where(pred, jnp.int32(NIL), nxt[s]))
+    return DList(prv, nxt, head, tail)
+
+
+def push_head_if(dl: DList, s, pred) -> DList:
+    """Predicated :func:`push_head`: a no-op when ``pred`` is False.
+
+    Callers must only enable it for a detached slot (same contract as
+    ``push_head``).
+    """
+    s = jnp.int32(s)
+    old = dl.head
+    nxt = dl.nxt.at[s].set(jnp.where(pred, old, dl.nxt[s]))
+    prv = dl.prv.at[s].set(jnp.where(pred, jnp.int32(NIL), dl.prv[s]))
+    io = jnp.maximum(old, 0)
+    prv = prv.at[io].set(jnp.where(pred & (old != NIL), s, prv[io]))
+    head = jnp.where(pred, s, dl.head)
+    tail = jnp.where(pred & (dl.tail == NIL), s, dl.tail)
+    return DList(prv, nxt, head, tail)
+
+
 def is_member(dl: DList, s) -> jnp.ndarray:
     """Membership test (O(1) via link fields + head check)."""
     s = jnp.int32(s)

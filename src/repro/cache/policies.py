@@ -17,6 +17,15 @@ op its calibrated service time (see repro.core.harness).
 
 Keys are ints in [0, key_space) — in the serving layer they are KV block
 ids, which are bounded by construction.
+
+Shape uniformity (``pad_to``): every ``<policy>_init`` accepts a
+``pad_to`` slot-array size >= ``capacity``.  All per-slot arrays are sized
+``pad_to`` while the *traced* ``capacity`` scalar bounds warmup and
+eviction (the same trick ``lru_batch_update`` uses with INT_MAX
+sentinels), so states for *different* capacities share one pytree shape
+and stack under ``jax.vmap``.  ``PolicyDef.batched_init`` builds exactly
+that stack, which is what lets :mod:`repro.cache.replay` dispatch a whole
+(capacity x seed) measurement grid as one compiled program.
 """
 
 from __future__ import annotations
@@ -59,16 +68,24 @@ class Table(NamedTuple):
     """key<->slot mapping over a bounded key space."""
 
     key2slot: jnp.ndarray  # (K,) int32, NIL when absent
-    slot2key: jnp.ndarray  # (C,) int32
+    slot2key: jnp.ndarray  # (P,) int32 — P = pad_to >= capacity
     size: jnp.ndarray  # () int32
 
 
-def _table_init(capacity: int, key_space: int) -> Table:
+def _table_init(slots: int, key_space: int) -> Table:
     return Table(
         key2slot=jnp.full((key_space,), NIL, jnp.int32),
-        slot2key=jnp.full((capacity,), NIL, jnp.int32),
+        slot2key=jnp.full((slots,), NIL, jnp.int32),
         size=jnp.int32(0),
     )
+
+
+def _padded(capacity: int, pad_to) -> int:
+    """Resolve the slot-array size: ``pad_to`` (defaulting to capacity)."""
+    pad = int(capacity if pad_to is None else pad_to)
+    if pad < capacity:
+        raise ValueError(f"pad_to={pad} < capacity={capacity}")
+    return pad
 
 
 def _table_assign(t: Table, key, slot) -> Table:
@@ -83,14 +100,40 @@ def _table_evict(t: Table, slot) -> tuple:
     return Table(k2s, t.slot2key.at[slot].set(NIL), t.size), old_key
 
 
+def make_batched_init(init: Callable[..., Any]) -> Callable[..., Any]:
+    """Lift a policy init to a capacity-grid init.
+
+    ``batched(capacities, key_space, pad_to=None, **params)`` returns one
+    state pytree whose leading axis enumerates ``capacities``: every state
+    is built with the same ``pad_to`` (default: max capacity) so the slot
+    arrays share a shape, then the per-capacity states are stacked.  The
+    result is exactly what ``jax.vmap`` over axis 0 expects.
+    """
+
+    def batched(capacities, key_space: int, pad_to: int | None = None, **params):
+        caps = [int(c) for c in capacities]
+        if not caps:
+            raise ValueError("batched_init needs at least one capacity")
+        pad = _padded(max(caps), pad_to)
+        states = [init(c, key_space, pad_to=pad, **params) for c in caps]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+    return batched
+
+
 @dataclasses.dataclass(frozen=True)
 class PolicyDef:
-    """A policy as a pair of pure functions (init, access)."""
+    """A policy as a pair of pure functions (init, access).
+
+    ``batched_init`` stacks per-capacity states (shared ``pad_to`` slot
+    arrays) for vmapped replay — see :func:`make_batched_init`.
+    """
 
     name: str
     init: Callable[..., Any]
     access: Callable[..., Any]  # (state, key, u) -> (state, AccessResult)
     lru_like: bool  # paper Sec. 5.1 classification (ground truth for tests)
+    batched_init: Callable[..., Any] = None
 
 
 # ---------------------------------------------------------------------------
@@ -104,8 +147,9 @@ class LRUState(NamedTuple):
     capacity: jnp.ndarray  # () int32
 
 
-def lru_init(capacity: int, key_space: int) -> LRUState:
-    return LRUState(_table_init(capacity, key_space), dlist.empty(capacity),
+def lru_init(capacity: int, key_space: int, pad_to: int | None = None) -> LRUState:
+    pad = _padded(capacity, pad_to)
+    return LRUState(_table_init(pad, key_space), dlist.empty(pad),
                     jnp.int32(capacity))
 
 
@@ -126,28 +170,62 @@ def _fresh_or_tail(table: Table, dl: DList, capacity):
     return lax.cond(table.size < capacity, fresh, evict, (table, dl))
 
 
+def _list_cache_access(table: Table, dl: DList, cap, key, reorder):
+    """Branch-free shared step for the LRU family (LRU / FIFO / Prob-LRU).
+
+    ``reorder`` is a traced bool: promote the key to the head on a hit
+    (True for LRU, False for FIFO, the coin flip for Prob-LRU).  Written
+    without ``lax.cond`` — every update is a predicated
+    gather-select-scatter — because cond boundaries force XLA to copy the
+    whole state per request, which is what made the scan replay slower
+    than the Python oracle on CPU.
+
+    Returns (table, dl, AccessResult).
+    """
+    slot = table.key2slot[key]
+    hit = slot != NIL
+    miss = ~hit
+    full = table.size >= cap
+    evict = miss & full
+    # the slot being touched: the hit slot, else the victim tail, else the
+    # next warmup slot (always < capacity <= pad).
+    s = jnp.where(hit, slot, jnp.where(full, dl.tail, table.size))
+    old_key = table.slot2key[s]
+    evicted = jnp.where(evict, old_key, jnp.int32(NIL))
+
+    # table: only misses mutate it.  Clearing the victim's mapping and
+    # installing the new key collapse into two predicated scatters (on a
+    # non-evicting miss the "clear" targets the new key, which is NIL
+    # already, so it is a natural no-op).
+    idx_clear = jnp.where(evict, jnp.maximum(old_key, 0), key)
+    k2s = table.key2slot.at[idx_clear].set(
+        jnp.where(miss, jnp.int32(NIL), table.key2slot[idx_clear])
+    )
+    k2s = k2s.at[key].set(jnp.where(miss, s, k2s[key]))
+    s2k = table.slot2key.at[s].set(jnp.where(miss, key, table.slot2key[s]))
+    size = jnp.minimum(table.size + miss.astype(jnp.int32), cap)
+
+    # list: delink + re-push whenever anything moves (a fresh warmup slot is
+    # unlinked, so its delink is a structural no-op).
+    act = miss | (hit & reorder)
+    dl = dlist.delink_if(dl, s, act)
+    dl = dlist.push_head_if(dl, s, act)
+
+    promote = hit & reorder
+    ops = OpCounts(
+        delink=promote.astype(jnp.int32),
+        head=act.astype(jnp.int32),
+        tail=evict.astype(jnp.int32),
+        scan=jnp.int32(0),
+    )
+    return Table(k2s, s2k, size), dl, AccessResult(hit, evicted, s, ops)
+
+
 def lru_access(state: LRUState, key, u=0.0):
     del u
     table, dl, cap = state
-    slot = table.key2slot[key]
-    hit = slot != NIL
-
-    def on_hit(args):
-        table, dl = args
-        d2 = dlist.push_head(dlist.delink(dl, slot), slot)
-        return table, d2, slot, jnp.int32(NIL), _ops(delink=1, head=1)
-
-    def on_miss(args):
-        table, dl = args
-        table, dl, new_slot, old_key, ops = _fresh_or_tail(table, dl, cap)
-        dl = dlist.push_head(dl, new_slot)
-        table = _table_assign(table, key, new_slot)
-        table = Table(table.key2slot, table.slot2key,
-                      jnp.minimum(table.size + 1, cap))
-        return table, dl, new_slot, old_key, _ops_add(ops, _ops(head=1))
-
-    table, dl, slot_out, evicted, ops = lax.cond(hit, on_hit, on_miss, (table, dl))
-    return LRUState(table, dl, cap), AccessResult(hit, evicted, slot_out, ops)
+    table, dl, res = _list_cache_access(table, dl, cap, key, jnp.bool_(True))
+    return LRUState(table, dl, cap), res
 
 
 # ---------------------------------------------------------------------------
@@ -158,24 +236,8 @@ def lru_access(state: LRUState, key, u=0.0):
 def fifo_access(state: LRUState, key, u=0.0):
     del u
     table, dl, cap = state
-    slot = table.key2slot[key]
-    hit = slot != NIL
-
-    def on_hit(args):
-        table, dl = args
-        return table, dl, slot, jnp.int32(NIL), _ops()
-
-    def on_miss(args):
-        table, dl = args
-        table, dl, new_slot, old_key, ops = _fresh_or_tail(table, dl, cap)
-        dl = dlist.push_head(dl, new_slot)
-        table = _table_assign(table, key, new_slot)
-        table = Table(table.key2slot, table.slot2key,
-                      jnp.minimum(table.size + 1, cap))
-        return table, dl, new_slot, old_key, _ops_add(ops, _ops(head=1))
-
-    table, dl, slot_out, evicted, ops = lax.cond(hit, on_hit, on_miss, (table, dl))
-    return LRUState(table, dl, cap), AccessResult(hit, evicted, slot_out, ops)
+    table, dl, res = _list_cache_access(table, dl, cap, key, jnp.bool_(False))
+    return LRUState(table, dl, cap), res
 
 
 # ---------------------------------------------------------------------------
@@ -190,27 +252,19 @@ class ProbLRUState(NamedTuple):
     q: jnp.ndarray  # () f32
 
 
-def prob_lru_init(capacity: int, key_space: int, q: float = 0.5) -> ProbLRUState:
-    return ProbLRUState(_table_init(capacity, key_space), dlist.empty(capacity),
+def prob_lru_init(capacity: int, key_space: int, q: float = 0.5,
+                  pad_to: int | None = None) -> ProbLRUState:
+    pad = _padded(capacity, pad_to)
+    return ProbLRUState(_table_init(pad, key_space), dlist.empty(pad),
                         jnp.int32(capacity), jnp.float32(q))
 
 
 def prob_lru_access(state: ProbLRUState, key, u):
     table, dl, cap, q = state
-    inner = LRUState(table, dl, cap)
-    slot = table.key2slot[key]
-    hit = slot != NIL
-    promote = hit & (jnp.float32(u) >= q)
-
-    def do_lru(s):
-        return lru_access(s, key)
-
-    def do_fifo(s):
-        return fifo_access(s, key)
-
     # hit+promote -> LRU behaviour; hit+skip -> no-op; miss -> same either way.
-    (table2, dl2, _), res = lax.cond(promote | ~hit, do_lru, do_fifo, inner)
-    return ProbLRUState(table2, dl2, cap, q), res
+    table, dl, res = _list_cache_access(table, dl, cap, key,
+                                        jnp.float32(u) >= q)
+    return ProbLRUState(table, dl, cap, q), res
 
 
 # ---------------------------------------------------------------------------
@@ -226,9 +280,11 @@ class ClockState(NamedTuple):
     max_scan: jnp.ndarray  # () int32 — paper scans <= 3 before forced evict
 
 
-def clock_init(capacity: int, key_space: int, max_scan: int = 3) -> ClockState:
-    return ClockState(_table_init(capacity, key_space), dlist.empty(capacity),
-                      jnp.zeros((capacity,), bool), jnp.int32(capacity),
+def clock_init(capacity: int, key_space: int, max_scan: int = 3,
+               pad_to: int | None = None) -> ClockState:
+    pad = _padded(capacity, pad_to)
+    return ClockState(_table_init(pad, key_space), dlist.empty(pad),
+                      jnp.zeros((pad,), bool), jnp.int32(capacity),
                       jnp.int32(max_scan))
 
 
@@ -328,12 +384,14 @@ class SLRUState(NamedTuple):
     protected_cap: jnp.ndarray  # () int32
 
 
-def slru_init(capacity: int, key_space: int, protected_frac: float = 0.5) -> SLRUState:
+def slru_init(capacity: int, key_space: int, protected_frac: float = 0.5,
+              pad_to: int | None = None) -> SLRUState:
+    pad = _padded(capacity, pad_to)
     return SLRUState(
-        _table_init(capacity, key_space),
-        dlist.empty(capacity),
-        dlist.empty(capacity),
-        jnp.zeros((capacity,), bool),
+        _table_init(pad, key_space),
+        dlist.empty(pad),
+        dlist.empty(pad),
+        jnp.zeros((pad,), bool),
         jnp.int32(0),
         jnp.int32(capacity),
         jnp.int32(max(1, int(capacity * protected_frac))),
@@ -430,10 +488,11 @@ class S3FIFOState(NamedTuple):
     table: Table
     listS: DList
     listM: DList
-    in_M: jnp.ndarray  # (C,) bool
-    bit: jnp.ndarray  # (C,) bool
-    ghost: jnp.ndarray  # (G,) int32 ring of evicted keys
+    in_M: jnp.ndarray  # (P,) bool
+    bit: jnp.ndarray  # (P,) bool
+    ghost: jnp.ndarray  # (P,) int32 ring of evicted keys; first ghost_cap live
     ghost_pos: jnp.ndarray  # () int32
+    ghost_cap: jnp.ndarray  # () int32 — ring length (traced, <= len(ghost))
     sizeS: jnp.ndarray
     sizeM: jnp.ndarray
     s_cap: jnp.ndarray
@@ -443,17 +502,19 @@ class S3FIFOState(NamedTuple):
 
 
 def s3fifo_init(capacity: int, key_space: int, small_frac: float = 0.1,
-                max_scan: int = 3) -> S3FIFOState:
+                max_scan: int = 3, pad_to: int | None = None) -> S3FIFOState:
+    pad = _padded(capacity, pad_to)
     s_cap = max(1, int(capacity * small_frac))
     m_cap = capacity - s_cap
     return S3FIFOState(
-        table=_table_init(capacity, key_space),
-        listS=dlist.empty(capacity),
-        listM=dlist.empty(capacity),
-        in_M=jnp.zeros((capacity,), bool),
-        bit=jnp.zeros((capacity,), bool),
-        ghost=jnp.full((max(1, m_cap),), NIL, jnp.int32),
+        table=_table_init(pad, key_space),
+        listS=dlist.empty(pad),
+        listM=dlist.empty(pad),
+        in_M=jnp.zeros((pad,), bool),
+        bit=jnp.zeros((pad,), bool),
+        ghost=jnp.full((max(1, pad),), NIL, jnp.int32),
         ghost_pos=jnp.int32(0),
+        ghost_cap=jnp.int32(max(1, m_cap)),
         sizeS=jnp.int32(0),
         sizeM=jnp.int32(0),
         s_cap=jnp.int32(s_cap),
@@ -570,7 +631,7 @@ def s3fifo_access(state: S3FIFOState, key, u=0.0):
                 ghost = st.ghost.at[st.ghost_pos].set(old_key)
                 st = st._replace(
                     table=table, listS=listS, ghost=ghost,
-                    ghost_pos=(st.ghost_pos + 1) % st.ghost.shape[0],
+                    ghost_pos=(st.ghost_pos + 1) % st.ghost_cap,
                     sizeS=st.sizeS - 1,
                 )
                 return st, _ops_add(ops, _ops(tail=1)), old_key
@@ -629,9 +690,10 @@ class SieveState(NamedTuple):
     capacity: jnp.ndarray
 
 
-def sieve_init(capacity: int, key_space: int) -> SieveState:
-    return SieveState(_table_init(capacity, key_space), dlist.empty(capacity),
-                      jnp.zeros((capacity,), bool), jnp.int32(NIL),
+def sieve_init(capacity: int, key_space: int, pad_to: int | None = None) -> SieveState:
+    pad = _padded(capacity, pad_to)
+    return SieveState(_table_init(pad, key_space), dlist.empty(pad),
+                      jnp.zeros((pad,), bool), jnp.int32(NIL),
                       jnp.int32(capacity))
 
 
@@ -695,14 +757,19 @@ def sieve_access(state: SieveState, key, u=0.0):
 # Registry
 # ---------------------------------------------------------------------------
 
+def _policy(name, init, access, lru_like) -> PolicyDef:
+    return PolicyDef(name, init, access, lru_like=lru_like,
+                     batched_init=make_batched_init(init))
+
+
 POLICIES = {
-    "lru": PolicyDef("lru", lru_init, lru_access, lru_like=True),
-    "fifo": PolicyDef("fifo", lru_init, fifo_access, lru_like=False),
-    "prob_lru": PolicyDef("prob_lru", prob_lru_init, prob_lru_access, lru_like=True),
-    "clock": PolicyDef("clock", clock_init, clock_access, lru_like=False),
-    "slru": PolicyDef("slru", slru_init, slru_access, lru_like=True),
-    "s3fifo": PolicyDef("s3fifo", s3fifo_init, s3fifo_access, lru_like=False),
-    "sieve": PolicyDef("sieve", sieve_init, sieve_access, lru_like=False),
+    "lru": _policy("lru", lru_init, lru_access, lru_like=True),
+    "fifo": _policy("fifo", lru_init, fifo_access, lru_like=False),
+    "prob_lru": _policy("prob_lru", prob_lru_init, prob_lru_access, lru_like=True),
+    "clock": _policy("clock", clock_init, clock_access, lru_like=False),
+    "slru": _policy("slru", slru_init, slru_access, lru_like=True),
+    "s3fifo": _policy("s3fifo", s3fifo_init, s3fifo_access, lru_like=False),
+    "sieve": _policy("sieve", sieve_init, sieve_access, lru_like=False),
 }
 
 

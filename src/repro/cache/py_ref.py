@@ -14,6 +14,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class Access:
@@ -109,7 +111,12 @@ class ProbLRU(_ListCache):
 
     def __init__(self, capacity: int, q: float = 0.5):
         super().__init__(capacity)
-        self.q = q
+        # float32 threshold: the jax implementation compares the coin
+        # against float32(q), and the harness coin stream is float32 — a
+        # float64 q here would diverge from the jax backend whenever a
+        # coin lands exactly on float32(q) (non-representable q like
+        # 1 - 1/72 rounds DOWN in float32).
+        self.q = float(np.float32(q))
 
     def access(self, key: int, u: float = 0.0) -> Access:
         if key in self.order:

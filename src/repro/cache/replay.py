@@ -1,0 +1,221 @@
+"""Batched JAX trace-replay engine — the compiled fast path of prong C.
+
+The measurement stack used to replay traces through the pure-Python
+reference caches one request at a time (``repro.core.harness``), looping
+cache sizes and policies in Python on top.  This module runs the *same*
+policies — the jit-compatible pure functions in
+:mod:`repro.cache.policies` — under ``lax.scan`` over the request stream,
+and ``vmap``s that scan over a (capacity x seed) grid so an entire
+cache-size sweep dispatches as ONE compiled program:
+
+    axis 0  capacities — states stacked by ``PolicyDef.batched_init``
+                         (shared ``pad_to`` slot arrays, traced capacity)
+    axis 1  seeds      — independent (trace, coin) streams
+    axis 2  requests   — the ``lax.scan`` carry
+
+Per request it returns the hit flag, the evicted key (-1 when none) and
+the op vector (delink, head, tail, scan) — everything
+``repro.core.harness.empirical_network`` needs to build the
+measured-profile queueing networks, with no Python in the loop.
+
+The Python references stay as the differential oracle:
+``tests/test_replay.py`` pins the scan engine to ``py_ref`` element-wise
+on every policy for a shared (trace, u) sequence.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.cache.policies import POLICIES
+
+
+class ReplayResult(NamedTuple):
+    """Per-request replay outputs (leading axes: [capacity, [seed,]] ).
+
+    ``ops`` columns are (delink, head, tail, scan) — the paper's queue
+    stations, in the same order as ``repro.cache.py_ref.Access.ops``.
+    """
+
+    hits: np.ndarray  # bool   (..., T)
+    evicted: np.ndarray  # int64  (..., T), -1 when none
+    ops: np.ndarray  # int64  (..., T, 4)
+
+
+def _scan_replay(pdef, state, keys, us):
+    """lax.scan a (keys, us) stream through one policy state."""
+
+    def step(state, ku):
+        k, u = ku
+        state, res = pdef.access(state, k, u)
+        return state, (res.hit, res.evicted_key, jnp.stack(res.ops))
+
+    state, (hits, evicted, ops) = lax.scan(step, state, (keys, us))
+    return state, hits, evicted, ops
+
+
+@partial(jax.jit, static_argnames=("policy",))
+def _replay_one(policy: str, state, keys, us):
+    _, hits, evicted, ops = _scan_replay(POLICIES[policy], state, keys, us)
+    return hits, evicted, ops
+
+
+@partial(jax.jit, static_argnames=("policy",))
+def _replay_grid(policy: str, states, keys, us):
+    pdef = POLICIES[policy]
+
+    def one(state, k, u):
+        _, hits, evicted, ops = _scan_replay(pdef, state, k, u)
+        return hits, evicted, ops
+
+    per_seed = jax.vmap(one, in_axes=(None, 0, 0))  # over the seed axis
+    per_cap = jax.vmap(per_seed, in_axes=(0, None, None))  # over capacities
+    return per_cap(states, keys, us)
+
+
+def _as_device(keys, us):
+    keys = np.asarray(keys)
+    us = np.asarray(us)
+    if keys.shape != us.shape:
+        raise ValueError(f"keys {keys.shape} vs us {us.shape} shape mismatch")
+    return jnp.asarray(keys, jnp.int32), jnp.asarray(us, jnp.float32)
+
+
+def _resolve_key_space(keys, key_space) -> int:
+    """Resolve and VALIDATE the key space: out-of-range keys must fail
+    loudly — JAX clamps gather indices and drops out-of-bounds scatters,
+    so they would otherwise alias other keys and silently corrupt the
+    replay (the py_ref oracle, being dict-based, would not notice)."""
+    keys = np.asarray(keys)
+    if keys.size and keys.min() < 0:
+        raise ValueError("trace keys must be non-negative")
+    kmax = int(keys.max()) if keys.size else -1
+    if not key_space:
+        return kmax + 1
+    if kmax >= int(key_space):
+        raise ValueError(f"trace key {kmax} out of range for "
+                         f"key_space={int(key_space)}")
+    return int(key_space)
+
+
+def replay_trace(policy: str, keys, us, capacity: int, *,
+                 key_space: int | None = None, pad_to: int | None = None,
+                 **params) -> ReplayResult:
+    """Replay one trace through one policy instance as a compiled scan.
+
+    ``us`` is the admission-coin stream (uniform [0,1)); pass the same
+    values to the py_ref oracle for element-wise comparison.  ``pad_to``
+    sizes the slot arrays (>= capacity) so differently-sized caches share
+    a compiled program.
+    """
+    key_space = _resolve_key_space(keys, key_space)
+    state = POLICIES[policy].init(int(capacity), key_space, pad_to=pad_to,
+                                  **params)
+    k, u = _as_device(keys, us)
+    hits, evicted, ops = _replay_one(policy, state, k, u)
+    return ReplayResult(np.asarray(hits), np.asarray(evicted, np.int64),
+                        np.asarray(ops, np.int64))
+
+
+def _count_leq_before(x: np.ndarray, span: int) -> np.ndarray:
+    """c[t] = #{s < t : x[s] <= x[t]}, by bottom-up merge counting.
+
+    O(T log^2 T) in vectorized numpy: at each level, elements of every
+    right half-block are ranked into their sorted left half-block with one
+    global ``searchsorted`` (rows made disjoint by adding ``i * span``,
+    which requires every value to sit in [0, span - 1]).
+    """
+    T = len(x)
+    n = 1 << max(1, int(T - 1).bit_length())
+    pad_val = span - 1  # sorts after every real value, never counted
+    xp = np.full(n, pad_val, np.int64)
+    xp[:T] = x
+    counts = np.zeros(n, np.int64)
+    w = 1
+    while w < n:
+        npair = n // (2 * w)
+        blocks = xp.reshape(npair, 2 * w)
+        left_sorted = np.sort(blocks[:, :w], axis=1)
+        offs = np.arange(npair, dtype=np.int64)[:, None] * span
+        flat_left = (left_sorted + offs).ravel()
+        pos = np.searchsorted(flat_left, (blocks[:, w:] + offs).ravel(),
+                              side="right")
+        c = pos - np.repeat(np.arange(npair, dtype=np.int64) * w, w)
+        idx = (np.arange(npair)[:, None] * 2 * w + w
+               + np.arange(w)[None, :]).ravel()
+        counts[idx] += c
+        w *= 2
+    return counts[:T]
+
+
+def lru_sweep(keys, capacities) -> tuple:
+    """Exact LRU replay of one trace at EVERY capacity in one pass.
+
+    LRU is a stack algorithm (Mattson et al. 1970): the cache of size C is
+    always the top C entries of the recency stack, so a request hits at
+    capacity C iff its stack distance d (distinct keys touched since its
+    previous access) satisfies d < C.  One O(T log^2 T) distance
+    computation therefore yields the hit sequence of *all* capacities —
+    the whole cache-size -> hit-ratio sweep without replaying per size.
+
+    With P[t] the previous occurrence of key_t and D_t the number of
+    distinct keys seen before t, ``d_t = D_t - P[t] - 1 + C_t`` where
+    ``C_t = #{s < t : 0 <= P[s] <= P[t]}`` counts stack positions below
+    P[t] that have already expired (their key was re-accessed).  C_t is
+    the merge-count above.
+
+    Returns (hits, ops) shaped (len(capacities), T) / (..., 4), matching
+    the scan engine and py_ref bit for bit (LRU op vectors are determined
+    by hit/miss and warmup: hit -> (1,1,0,0), miss -> (0,1,evict,0)).
+    Evicted keys are not tracked here — use :func:`replay_trace` /
+    :func:`replay_grid` when they matter.
+    """
+    keys = np.asarray(keys, np.int64)
+    T = len(keys)
+    order = np.lexsort((np.arange(T), keys))
+    sk = keys[order]
+    P = np.full(T, -1, np.int64)
+    same = sk[1:] == sk[:-1]
+    P[order[1:][same]] = order[:-1][same]
+    first = P < 0
+    D = np.cumsum(first) - first  # distinct keys seen strictly before t
+    # first occurrences get a sentinel above every real P so they are never
+    # counted as expired stack positions (and never produce hits anyway).
+    x = np.where(first, np.int64(T + 1), P)
+    C = _count_leq_before(x, span=T + 4)
+    d = D - P - 1 + C
+
+    caps = np.asarray(list(capacities), np.int64)[:, None]
+    hits = (~first)[None, :] & (d[None, :] < caps)
+    evict = (~hits) & (D[None, :] >= caps)
+    ops = np.zeros((len(caps), T, 4), np.int64)
+    ops[..., 0] = hits  # delink on every hit
+    ops[..., 1] = 1  # head update on every request
+    ops[..., 2] = evict  # tail update when a miss evicts
+    return hits, ops
+
+
+def replay_grid(policy: str, keys, us, capacities, *,
+                key_space: int | None = None, pad_to: int | None = None,
+                **params) -> ReplayResult:
+    """Replay a (capacity x seed) measurement grid in one dispatch.
+
+    ``keys``/``us`` are (T,) for a single stream or (S, T) for S seed
+    streams; ``capacities`` is the cache-size grid.  Returns arrays shaped
+    (len(capacities), S, T[, 4]) — one full sweep per compiled call.
+    """
+    keys = np.atleast_2d(np.asarray(keys))
+    us = np.atleast_2d(np.asarray(us))
+    key_space = _resolve_key_space(keys, key_space)
+    states = POLICIES[policy].batched_init(capacities, key_space,
+                                           pad_to=pad_to, **params)
+    k, u = _as_device(keys, us)
+    hits, evicted, ops = _replay_grid(policy, states, k, u)
+    return ReplayResult(np.asarray(hits), np.asarray(evicted, np.int64),
+                        np.asarray(ops, np.int64))

@@ -5,17 +5,33 @@ under a closed loop of 72 client threads.  This container has one CPU core,
 so wall-clock lock contention cannot be reproduced; instead we do the
 honest equivalent:
 
-  1. Drive the **actual cache implementation** (repro.cache.py_ref — the
-     same semantics as the jittable versions, property-tested against them)
-     with a Zipf(θ) workload at a given cache size.  This yields the *real*
-     hit/miss sequence and the *real* per-request metadata-op counts — no
-     Bernoulli assumption.
+  1. Drive an **actual cache implementation** with a Zipf(θ) workload at a
+     given cache size.  This yields the *real* hit/miss sequence and the
+     *real* per-request metadata-op counts — no Bernoulli assumption.
   2. Aggregate the observed (hit, op-vector) profiles into an *empirical*
      closed queueing network whose branch probabilities are the measured
      frequencies, and whose station service times are the paper's
      calibrated measurements.
   3. Evaluate that network with the validated event-driven simulator (and
      with the Thm-7.1 bound).
+
+Step 1 has **two backends**, selected by ``backend=`` on
+:func:`run_cache_trace` / :func:`sweep_cache_sizes`:
+
+``"py"``
+    The pure-Python references (:mod:`repro.cache.py_ref`), one request at
+    a time.  Slow, but dead simple — this is the differential *oracle*.
+``"jax"``
+    The compiled trace-replay engine (:mod:`repro.cache.replay`): the
+    jittable policies under ``lax.scan``, ``vmap``-ed over a
+    (capacity x seed) grid so a whole cache-size sweep dispatches as one
+    compiled program; for LRU the sweep further collapses into a single
+    Mattson stack-distance pass covering every capacity at once.
+    Bit-identical to the oracle (tests/test_replay.py) and ~10-80x faster.
+
+Both backends draw the admission coins from an RNG substream independent
+of the trace draws (``np.random.SeedSequence(seed).spawn(2)``), so
+Prob-LRU / S3-FIFO coin flips never correlate with the key sequence.
 
 Step 1 also gives the cache-size → hit-ratio mapping (the paper sweeps
 p_hit the same way — by varying cache size under a fixed Zipf workload).
@@ -28,7 +44,6 @@ queueing model is a faithful representation of the implementation.
 from __future__ import annotations
 
 import dataclasses
-from collections import Counter
 
 import numpy as np
 
@@ -68,15 +83,37 @@ PAPER_SERVICES = {
 }
 
 
+def _seed_streams(seed: int):
+    """Independent substreams for (key trace, admission coins).
+
+    Constructing ``default_rng(seed)`` in both :func:`zipf_trace` and the
+    coin draw made the Prob-LRU/S3-FIFO admission samples share a stream
+    with the trace's permutation/choice draws — the coins were a
+    deterministic function of the key sequence.  Spawning from one
+    ``SeedSequence`` keeps the pairing reproducible but independent.
+    """
+    return np.random.SeedSequence(seed).spawn(2)
+
+
 def zipf_trace(n: int, key_space: int, theta: float = 0.99, seed: int = 0) -> np.ndarray:
     """Zipfian key trace (θ=0.99 — paper Sec. 3.4 workload)."""
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(_seed_streams(seed)[0])
     ranks = np.arange(1, key_space + 1, dtype=np.float64)
     probs = ranks ** (-theta)
     probs /= probs.sum()
     # shuffle key identities so key id != popularity rank
     perm = rng.permutation(key_space)
     return perm[rng.choice(key_space, size=n, p=probs)].astype(np.int64)
+
+
+def coin_stream(n: int, seed: int = 0) -> np.ndarray:
+    """Admission-coin samples u ~ U[0,1), independent of zipf_trace(seed).
+
+    float32 so the py and jax backends compare the *same* values against
+    q thresholds — identical hit sequences bit for bit.
+    """
+    rng = np.random.default_rng(_seed_streams(seed)[1])
+    return rng.random(n, dtype=np.float32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,10 +131,24 @@ class CacheMeasurement:
 
 
 def run_cache_trace(policy: str, capacity: int, trace: np.ndarray, seed: int = 0,
-                    **policy_kwargs):
-    """Replay a trace through the Python reference cache; returns (hits, ops)."""
-    rng = np.random.default_rng(seed)
-    us = rng.random(len(trace))
+                    backend: str = "py", key_space: int | None = None,
+                    pad_to: int | None = None, **policy_kwargs):
+    """Replay a trace through a cache implementation; returns (hits, ops).
+
+    ``backend="py"`` walks the Python reference one request at a time (the
+    oracle); ``backend="jax"`` dispatches the compiled scan engine.  Both
+    consume the same coin substream and return identical arrays.
+    """
+    us = coin_stream(len(trace), seed)
+    if backend == "jax":
+        from repro.cache.replay import replay_trace  # lazy: pulls in jax
+
+        res = replay_trace(policy, trace, us, int(capacity),
+                           key_space=key_space, pad_to=pad_to,
+                           **policy_kwargs)
+        return np.asarray(res.hits), res.ops
+    if backend != "py":
+        raise ValueError(f"unknown backend {backend!r} (want 'py' or 'jax')")
     cache = PY_POLICIES[policy](capacity, **policy_kwargs)
     hits = np.empty(len(trace), dtype=bool)
     ops = np.empty((len(trace), 4), dtype=np.int64)
@@ -125,10 +176,25 @@ def empirical_network(
     service = service or PAPER_SERVICES.get(policy, ServiceTimes())
     w = int(len(hits) * warmup_frac)
     hits_m, ops_m = hits[w:], ops[w:]
-    profiles = Counter(
-        (bool(h), tuple(int(x) for x in o)) for h, o in zip(hits_m, ops_m)
+    # vectorized profile histogram: each (hit, op-vector) row packs into one
+    # int64 (12 bits per op count), so the unique+count is a scalar sort —
+    # a per-request Python Counter (and even np.unique over rows, which
+    # sorts void views) dominated sweep time at 60k requests.
+    ops64 = np.asarray(ops_m, np.int64)
+    if ops64.size and ops64.max() > 0xFFF:
+        raise ValueError("op count exceeds 12-bit profile packing")
+    code = (
+        (np.asarray(hits_m, np.int64) << 48)
+        | (ops64[:, 0] << 36) | (ops64[:, 1] << 24)
+        | (ops64[:, 2] << 12) | ops64[:, 3]
     )
-    total = sum(profiles.values())
+    uniq, counts = np.unique(code, return_counts=True)
+    profiles = {
+        (bool(c >> 48), (int((c >> 36) & 0xFFF), int((c >> 24) & 0xFFF),
+                         int((c >> 12) & 0xFFF), int(c & 0xFFF))): int(n)
+        for c, n in zip(uniq, counts)
+    }
+    total = int(counts.sum())
 
     stations = [
         Station("lookup", THINK, service.lookup, dist="det"),
@@ -158,9 +224,23 @@ def empirical_network(
         f"{policy}-empirical", tuple(stations), tuple(branches), mpl,
         description=f"measured-profile network for {policy}",
     )
-    hit_ratio = float(hits_m.mean())
-    mean_hit = ops_m[hits_m].mean(axis=0) if hits_m.any() else np.zeros(4)
-    mean_miss = ops_m[~hits_m].mean(axis=0) if (~hits_m).any() else np.zeros(4)
+
+    # hit ratio and per-class mean op vectors straight from the histogram
+    # (equivalent to masking the raw arrays, without the large copies)
+    def mean_ops(want_hit: bool) -> np.ndarray:
+        count = sum(c for (h, _), c in profiles.items() if h == want_hit)
+        if not count:
+            return np.zeros(4)
+        acc = np.zeros(4)
+        for (h, vec), c in profiles.items():
+            if h == want_hit:
+                acc += np.asarray(vec, np.float64) * c
+        return acc / count
+
+    n_hits = sum(c for (h, _), c in profiles.items() if h)
+    hit_ratio = n_hits / total if total else 0.0
+    mean_hit = mean_ops(True)
+    mean_miss = mean_ops(False)
     return CacheMeasurement(
         policy=policy, capacity=-1, hit_ratio=hit_ratio,
         mean_ops_hit=mean_hit, mean_ops_miss=mean_miss,
@@ -215,11 +295,14 @@ def measure_cache(
     mpl: int = 72,
     seed: int = 0,
     disk_servers: int = 0,
+    backend: str = "py",
     **policy_kwargs,
 ) -> CacheMeasurement:
     """End-to-end prong C measurement at one cache size."""
     trace = zipf_trace(n_requests, key_space, theta, seed)
-    hits, ops = run_cache_trace(policy, capacity, trace, seed=seed, **policy_kwargs)
+    hits, ops = run_cache_trace(policy, capacity, trace, seed=seed,
+                                backend=backend, key_space=key_space,
+                                **policy_kwargs)
     service = dataclasses.replace(
         PAPER_SERVICES.get(policy, ServiceTimes()), disk=disk_us
     )
@@ -238,21 +321,57 @@ def sweep_cache_sizes(
     mpl: int = 72,
     simulate: bool = False,
     sim_requests: int = 20_000,
+    seed: int = 0,
+    disk_servers: int = 0,
+    backend: str = "jax",
     **policy_kwargs,
 ):
     """Hit-ratio/throughput curve vs cache size — the paper's x-axis sweep.
 
-    Returns dict of np arrays: sizes, p_hit, x_bound, (x_sim if simulate).
+    ``backend="jax"`` (default) replays every size in one compiled
+    dispatch: a single Mattson stack-distance pass for LRU, the vmapped
+    (capacity x seed) scan grid for everything else.  ``backend="py"``
+    keeps the oracle loop.  Returns dict of np arrays: sizes, p_hit,
+    x_bound, (x_sim if simulate).
     """
     from repro.core.simulator import simulate_network  # lazy: pulls in jax
 
+    if backend not in ("py", "jax"):
+        raise ValueError(f"unknown backend {backend!r} (want 'py' or 'jax')")
+    sizes = [int(c) for c in sizes]
     out = {"size": [], "p_hit": [], "x_bound": [], "x_sim": []}
-    for c in sizes:
-        meas = measure_cache(
-            policy, int(c), key_space=key_space, n_requests=n_requests,
-            theta=theta, disk_us=disk_us, mpl=mpl, **policy_kwargs,
+
+    def _measurements():
+        if backend == "py":
+            for c in sizes:
+                yield measure_cache(
+                    policy, c, key_space=key_space, n_requests=n_requests,
+                    theta=theta, disk_us=disk_us, mpl=mpl, seed=seed,
+                    disk_servers=disk_servers, **policy_kwargs,
+                )
+            return
+        trace = zipf_trace(n_requests, key_space, theta, seed)
+        if policy == "lru":
+            from repro.cache.replay import lru_sweep
+
+            hits_g, ops_g = lru_sweep(trace, sizes)
+        else:
+            from repro.cache.replay import replay_grid  # lazy: pulls in jax
+
+            res = replay_grid(policy, trace, coin_stream(n_requests, seed),
+                              sizes, key_space=key_space, **policy_kwargs)
+            hits_g, ops_g = res.hits[:, 0], res.ops[:, 0]
+        service = dataclasses.replace(
+            PAPER_SERVICES.get(policy, ServiceTimes()), disk=disk_us
         )
-        out["size"].append(int(c))
+        for i, c in enumerate(sizes):
+            meas = empirical_network(policy, hits_g[i], ops_g[i],
+                                     service=service, mpl=mpl,
+                                     disk_servers=disk_servers)
+            yield dataclasses.replace(meas, capacity=c)
+
+    for meas in _measurements():
+        out["size"].append(meas.capacity)
         out["p_hit"].append(meas.hit_ratio)
         out["x_bound"].append(float(meas.throughput_bound()))
         if simulate:

@@ -47,6 +47,14 @@ class ServeConfig:
     bypass_fraction: float = 0.0
     max_new_tokens: int = 16
     seed: int = 0
+    # Closed-loop forecast knobs (paper Sec. 6 "future systems"): the pod's
+    # physical core count drives the controller's effective MPL in the p*
+    # forecast (the paper's testbed pinned one client thread per core on a
+    # 72-core Xeon — real pods differ), and disk_servers > 0 models the
+    # backing store / prefill path as a bounded-concurrency queue station
+    # instead of the paper's infinite-server disk.
+    cores: int = 72
+    disk_servers: int = 0
 
 
 @dataclasses.dataclass
@@ -325,3 +333,52 @@ class Engine:
             "bypassed": s.bypassed,
             "pages_free": self.allocator.n_free,
         }
+
+    def forecast_network(self, step_us: float, prefill_us: float,
+                         replicas: int = 1, batched_update: bool = False,
+                         cores: int | None = None):
+        """Closed-network p* forecast for this engine's prefix controller.
+
+        Uses the measured controller op profile plus the ServeConfig
+        deployment knobs: the effective MPL is ``replicas * cores`` (one
+        closed-loop client per physical core, the paper's convention — not
+        the paper's 72-core testbed unless configured so), and
+        ``disk_servers`` bounds the chunk-prefill concurrency when > 0.
+        ``batched_update`` models the TPU-batched LRU sweep (promotions
+        coalesce, so per-access delink/head demand divides by the MPL).
+        ``cores`` overrides ``ServeConfig.cores`` for what-if forecasts —
+        the knob only affects the forecast, so re-running the engine for a
+        different pod shape would measure the identical profile.
+        """
+        from repro.core.harness import PAPER_SERVICES, ServiceTimes
+        from repro.core.queueing import (QUEUE, THINK, Branch, ClosedNetwork,
+                                         Station, disk_station)
+
+        hit_ops, miss_ops = self.prefix.mean_ops_per_chunk()
+        svc = PAPER_SERVICES.get(self.serve.policy, ServiceTimes())
+        mpl = int(replicas) * int(self.serve.cores if cores is None else cores)
+        delink = svc.delink / mpl if batched_update else svc.delink
+        head = svc.head / mpl if batched_update else svc.head
+        disk = disk_station(prefill_us, self.serve.disk_servers)
+        stations = [
+            Station("lookup", THINK, 0.51),
+            disk,  # miss: chunk prefill recompute
+            Station("step", THINK, step_us, dist="det"),
+            Station("delink", QUEUE, delink),
+            Station("head", QUEUE, head),
+            Station("tail", QUEUE, svc.tail, bound="upper"),
+            Station("scan", QUEUE, svc.scan),
+        ]
+
+        def visits(ops, miss):
+            v = ["lookup", "step"] + (["disk"] if miss else [])
+            d, h, t, s = (int(round(x)) for x in ops)
+            return tuple(v + ["delink"] * d + ["head"] * h + ["tail"] * t
+                         + ["scan"] * s)
+
+        branches = [
+            Branch("hit", lambda p: p, visits(hit_ops, False)),
+            Branch("miss", lambda p: 1.0 - p, visits(miss_ops, True)),
+        ]
+        return ClosedNetwork(f"serving-{self.serve.policy}", tuple(stations),
+                             tuple(branches), mpl)

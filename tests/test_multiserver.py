@@ -188,6 +188,50 @@ def test_optimal_bypass_with_queue_station_disk():
     assert x_bypass > x_full
 
 
+# ---------------------------------------------------------------------------
+# Schweitzer / approximate MVA fallback for very large MPL
+# ---------------------------------------------------------------------------
+
+
+def test_amva_within_2pct_of_exact_at_mpl_500():
+    """ROADMAP item: AMVA must track the exact recursion within 2% at
+    MPL=500 (where exact is still affordable to cross-check)."""
+    net = lru_network(disk_us=100.0)
+    for p in (0.3, 0.84, 0.99):
+        exact = net.mva(p, n=500)[0]
+        amva = net.mva(p, n=500, mode="amva")[0]
+        assert abs(amva - exact) / exact < 0.02, (p, exact, amva)
+
+
+def test_amva_multiserver_within_2pct():
+    net = lru_network(disk_us=100.0, cores=64, disk_servers=16)
+    for p in (0.5, 0.9):
+        exact = net.mva(p, n=500)[0]
+        amva = net.mva(p, n=500, mode="amva")[0]
+        assert abs(amva - exact) / exact < 0.02, (p, exact, amva)
+
+
+def test_mva_auto_mode_switches_on_population():
+    """auto == exact at small N; switches to AMVA above the threshold and
+    stays cheap + bound-consistent at MPL = 10^5."""
+    import time
+
+    net = lru_network(disk_us=100.0)
+    p = 0.9
+    assert net.mva(p, n=200, mode="auto")[0] == net.mva(p, n=200)[0]
+    n_big = 100_000
+    t0 = time.time()
+    x_auto = net.mva(p, n=n_big, mode="auto")[0]
+    assert time.time() - t0 < 1.0, "AMVA must be O(1) in the population"
+    assert x_auto == net.mva(p, n=n_big, mode="amva")[0]
+    assert x_auto <= net.throughput_upper(p, tail_mode="nominal") * (1 + 1e-6)
+
+
+def test_mva_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="mva mode"):
+        lru_network().mva(0.5, mode="bogus")
+
+
 def test_future_systems_p_star_shrinks():
     """The paper's closing claim, analytically: more cores + faster disk
     move the critical hit ratio strictly earlier."""

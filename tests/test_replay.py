@@ -1,0 +1,183 @@
+"""Differential tests for the batched trace-replay engine.
+
+The compiled scan engine must be *bit-identical* to the pure-Python
+references on every policy — hits, evicted keys, and op vectors — for a
+shared (trace, u) sequence, including padded states (pad_to > capacity,
+non-power-of-two capacity).  The vmapped (capacity x seed) grid must
+reproduce the per-capacity scans, and the Mattson one-pass LRU sweep must
+agree with both.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cache.policies import POLICIES
+from repro.cache.py_ref import PY_POLICIES
+from repro.cache.replay import lru_sweep, replay_grid, replay_trace
+
+KEY_SPACE = 24
+
+JAX_PARAMS = {
+    "lru": {},
+    "fifo": {},
+    "prob_lru": {"q": 0.5},
+    "clock": {"max_scan": 3},
+    "slru": {"protected_frac": 0.5},
+    "s3fifo": {"small_frac": 0.25, "max_scan": 3},
+    "sieve": {},
+}
+PY_PARAMS = {**JAX_PARAMS, "s3fifo": {"small_frac": 0.25}}
+
+
+def _trace(n=1500, seed=0):
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, KEY_SPACE + 1)
+    probs = (1.0 / ranks**0.99) / np.sum(1.0 / ranks**0.99)
+    keys = rng.choice(KEY_SPACE, size=n, p=probs)
+    us = rng.random(n, dtype=np.float32)
+    return keys, us
+
+
+def _oracle(policy, capacity, keys, us):
+    ref = PY_POLICIES[policy](capacity, **PY_PARAMS[policy])
+    hits, evicted, ops = [], [], []
+    for k, u in zip(keys, us):
+        a = ref.access(int(k), float(u))
+        hits.append(a.hit)
+        evicted.append(a.evicted_key)
+        ops.append(a.ops)
+    return (np.asarray(hits), np.asarray(evicted, np.int64),
+            np.asarray(ops, np.int64))
+
+
+@pytest.mark.parametrize("policy", sorted(PY_POLICIES))
+@pytest.mark.parametrize("capacity,pad_to", [(7, 16), (8, 8)])
+def test_scan_engine_matches_py_ref(policy, capacity, pad_to):
+    """Element-wise identical hit/evicted/op sequences, padded and exact."""
+    keys, us = _trace()
+    res = replay_trace(policy, keys, us, capacity, key_space=KEY_SPACE,
+                       pad_to=pad_to, **JAX_PARAMS[policy])
+    hits, evicted, ops = _oracle(policy, capacity, keys, us)
+    np.testing.assert_array_equal(res.hits, hits, err_msg=f"{policy} hits")
+    np.testing.assert_array_equal(res.evicted, evicted,
+                                  err_msg=f"{policy} evicted")
+    np.testing.assert_array_equal(res.ops, ops, err_msg=f"{policy} ops")
+
+
+@pytest.mark.parametrize("policy", ["lru", "prob_lru", "s3fifo"])
+def test_grid_reproduces_per_capacity(policy):
+    """Stacked capacities under vmap == independent per-capacity scans."""
+    rng = np.random.default_rng(1)
+    S, T = 2, 600
+    keys = rng.integers(0, KEY_SPACE, size=(S, T))
+    us = rng.random((S, T), dtype=np.float32)
+    caps = [5, 8, 12]
+    grid = replay_grid(policy, keys, us, caps, key_space=KEY_SPACE,
+                       pad_to=16, **JAX_PARAMS[policy])
+    assert grid.hits.shape == (len(caps), S, T)
+    assert grid.ops.shape == (len(caps), S, T, 4)
+    for i, c in enumerate(caps):
+        for s in range(S):
+            one = replay_trace(policy, keys[s], us[s], c,
+                               key_space=KEY_SPACE, pad_to=16,
+                               **JAX_PARAMS[policy])
+            np.testing.assert_array_equal(grid.hits[i, s], one.hits)
+            np.testing.assert_array_equal(grid.evicted[i, s], one.evicted)
+            np.testing.assert_array_equal(grid.ops[i, s], one.ops)
+
+
+def test_grid_matches_oracle_across_capacities():
+    """The vmapped grid is oracle-exact at every capacity, not just
+    self-consistent."""
+    keys, us = _trace(800, seed=2)
+    caps = [3, 7, 10]
+    grid = replay_grid("lru", keys, us, caps, key_space=KEY_SPACE)
+    for i, c in enumerate(caps):
+        hits, evicted, ops = _oracle("lru", c, keys, us)
+        np.testing.assert_array_equal(grid.hits[i, 0], hits)
+        np.testing.assert_array_equal(grid.evicted[i, 0], evicted)
+        np.testing.assert_array_equal(grid.ops[i, 0], ops)
+
+
+def test_lru_sweep_matches_scan_and_oracle():
+    """Mattson one-pass sweep == scan engine == py_ref, every capacity."""
+    keys, us = _trace(2000, seed=3)
+    caps = [3, 7, 8, 15]
+    hits_m, ops_m = lru_sweep(keys, caps)
+    for i, c in enumerate(caps):
+        res = replay_trace("lru", keys, us, c, key_space=KEY_SPACE)
+        np.testing.assert_array_equal(hits_m[i], res.hits, err_msg=f"C={c}")
+        np.testing.assert_array_equal(ops_m[i], res.ops, err_msg=f"C={c}")
+        hits, _, ops = _oracle("lru", c, keys, us)
+        np.testing.assert_array_equal(hits_m[i], hits)
+        np.testing.assert_array_equal(ops_m[i], ops)
+
+
+def test_pad_to_validation():
+    with pytest.raises(ValueError, match="pad_to"):
+        POLICIES["lru"].init(8, KEY_SPACE, pad_to=4)
+
+
+def test_out_of_range_keys_rejected():
+    """JAX clamps gathers / drops OOB scatters, so a too-small key_space
+    must raise instead of silently aliasing keys."""
+    keys = np.array([0, 5, 300])
+    us = np.zeros(3, np.float32)
+    with pytest.raises(ValueError, match="out of range"):
+        replay_trace("lru", keys, us, 4, key_space=256)
+    with pytest.raises(ValueError, match="non-negative"):
+        replay_trace("lru", np.array([-1, 2]), us[:2], 4, key_space=256)
+
+
+def test_batched_init_stacks_states():
+    states = POLICIES["lru"].batched_init([4, 8], KEY_SPACE)
+    assert states.table.slot2key.shape == (2, 8)
+    assert states.capacity.tolist() == [4, 8]
+
+
+def test_run_cache_trace_backends_agree():
+    from repro.core.harness import run_cache_trace, zipf_trace
+
+    trace = zipf_trace(4000, 256, 0.99, seed=5)
+    # q = 1 - 1/72 is not float32-representable: regression for the py
+    # oracle comparing the coin against a float64 threshold
+    for policy, kw in [("lru", {}), ("prob_lru", {"q": 0.5}),
+                       ("prob_lru", {"q": 1 - 1 / 72}),
+                       ("s3fifo", {"small_frac": 0.1})]:
+        h_py, o_py = run_cache_trace(policy, 48, trace, seed=5,
+                                     backend="py", **kw)
+        h_jx, o_jx = run_cache_trace(policy, 48, trace, seed=5,
+                                     backend="jax", key_space=256, **kw)
+        np.testing.assert_array_equal(h_py, h_jx, err_msg=policy)
+        np.testing.assert_array_equal(o_py, o_jx, err_msg=policy)
+
+
+def test_sweep_backends_agree():
+    from repro.core.harness import sweep_cache_sizes
+
+    kw = dict(key_space=512, n_requests=6000)
+    for policy in ("lru", "clock"):
+        out_j = sweep_cache_sizes(policy, [16, 64, 128], backend="jax", **kw)
+        out_p = sweep_cache_sizes(policy, [16, 64, 128], backend="py", **kw)
+        np.testing.assert_array_equal(out_j["p_hit"], out_p["p_hit"])
+        np.testing.assert_allclose(out_j["x_bound"], out_p["x_bound"])
+
+
+def test_coin_stream_independent_of_trace():
+    """Regression for the correlated-RNG bug: the admission coins must not
+    reproduce the trace generator's stream."""
+    from repro.core.harness import coin_stream, zipf_trace
+
+    n, seed = 2000, 7
+    us = coin_stream(n, seed)
+    # the old (buggy) coin stream: default_rng(seed).random, the same
+    # stream zipf_trace consumes for its permutation/choice draws
+    old = np.random.default_rng(seed).random(n)
+    assert not np.allclose(us, old.astype(np.float32))
+    # determinism + independence across seeds
+    np.testing.assert_array_equal(us, coin_stream(n, seed))
+    assert not np.array_equal(us, coin_stream(n, seed + 1))
+    # and the trace itself is unchanged by drawing coins
+    t1 = zipf_trace(n, 64, seed=seed)
+    coin_stream(n, seed)
+    np.testing.assert_array_equal(t1, zipf_trace(n, 64, seed=seed))

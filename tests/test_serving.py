@@ -137,3 +137,37 @@ def test_lru_controller_has_hit_path_ops_fifo_does_not(attn_model):
     hit_ops_sieve, _ = stats["sieve"].mean_ops_per_chunk()
     assert hit_ops_lru[0] > 0.9  # ~1 delink per chunk hit (paper hit path)
     assert hit_ops_sieve.sum() == 0  # FIFO-like: silent hits
+
+
+def test_forecast_network_uses_pod_cores(attn_model):
+    """ServeConfig.cores / disk_servers must drive the p* forecast: the MPL
+    is replicas x cores (not the paper's 72-core testbed), and
+    disk_servers > 0 turns the prefill path into a c-server queue station."""
+    cfg, params = attn_model
+    reqs = zipf_request_stream(10, n_prefixes=4, prefix_len=16,
+                               vocab=cfg.vocab, seed=4, new_tokens=4)
+    eng = Engine(cfg, params, ServeConfig(
+        max_seqs=2, max_seq_len=128, page_size=8, n_pages=64,
+        prefix_capacity=32, policy="lru", max_new_tokens=4,
+        cores=16, disk_servers=4))
+    for _, t in reqs:
+        eng.submit(t)
+    eng.run()
+
+    net = eng.forecast_network(step_us=6000.0, prefill_us=40.0, replicas=8)
+    assert net.mpl == 8 * 16
+    disk = net.station("disk")
+    assert disk.kind == "queue" and disk.servers == 4
+    net.validate()
+
+    # more cores -> MPL up -> p* can only move earlier (paper Fig. 12 trend)
+    eng_big = Engine(cfg, params, ServeConfig(
+        max_seqs=2, max_seq_len=128, page_size=8, n_pages=64,
+        prefix_capacity=32, policy="lru", max_new_tokens=4, cores=2048))
+    for _, t in reqs:
+        eng_big.submit(t)
+    eng_big.run()
+    net_big = eng_big.forecast_network(step_us=6000.0, prefill_us=40.0,
+                                       replicas=8)
+    assert net_big.mpl == 8 * 2048
+    assert net_big.p_star() <= net.p_star() + 1e-9
