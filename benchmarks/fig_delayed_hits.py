@@ -1,0 +1,128 @@
+"""Delayed hits & miss coalescing across the three prongs (beyond-paper).
+
+The paper treats every miss as independent: concurrent requests for the
+same missing key each pay a full disk trip and a full pass through the
+miss-path metadata stations.  With an MSHR-style outstanding-miss table
+(Manohar et al. 2020, "delayed hits") the disk instead sees the coalesced
+miss rate X·(1−p)·(1−σ).  This sweep shows how that reshapes the paper's
+headline phenomenon:
+
+* **Prong A** (analytic): LRU's throughput-optimal hit ratio p* shifts
+  measurably DOWN under coalescing — relieving the miss path exposes the
+  hit-path delink bottleneck earlier, so the inversion gets *wider* —
+  while FIFO-like policies stay monotone (p* = 1): the paper's dichotomy
+  survives, amplified.
+* **Prong B** (simulation): with a bounded-I/O-depth disk, parking
+  duplicate misses instead of queueing them recovers large throughput
+  factors; the event-level delayed-hit fraction tracks the analytic σ.
+* **Prong C** (measurement): replaying a Zipf trace through the real LRU
+  structure and classifying each request against an in-flight window
+  (miss latency in requests ≈ X·L) yields the measured σ per cache size,
+  which feeds back into the model as a measured coalesced bound.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import N_SIM_REQUESTS, row, timer
+from repro.core import build, coalesced_network, sigma_of
+from repro.core.harness import sweep_cache_sizes
+from repro.core.simulator import simulate_network
+
+FLOWS = (8, 64)
+DISK_US = 100.0
+IO_DEPTH = 8
+P_SIM = np.array([0.5, 0.8, 0.95])
+SWEEP_CAPS = (96, 384, 1024, 2048)
+PSTAR_GRID = 2001
+
+
+def main() -> dict:
+    out: dict = {}
+
+    # ---- prong A: analytic p* shift ------------------------------------
+    print("# fig_delayed_hits A: analytic p* under coalescing, X in Mreq/s")
+    row("policy", "flows", "p_star", "x_at_pstar", "sigma_at_pstar")
+    pstar = {}
+    for policy in ("lru", "fifo"):
+        base = build(policy, disk_us=DISK_US)
+        p0 = base.p_star(grid=PSTAR_GRID)
+        row(policy, 0, f"{p0:.4f}", f"{float(base.throughput_upper(p0)):.4f}",
+            "0.0000")
+        pstar[(policy, 0)] = p0
+        for flows in FLOWS:
+            net = build(policy, disk_us=DISK_US, coalesce_flows=flows)
+            ps = net.p_star(grid=PSTAR_GRID)
+            row(policy, flows, f"{ps:.4f}",
+                f"{float(net.throughput_upper(ps)):.4f}",
+                f"{sigma_of(net, ps):.4f}")
+            pstar[(policy, flows)] = ps
+    # headline: coalescing shifts LRU's optimum measurably; FIFO untouched.
+    assert pstar[("lru", 8)] < pstar[("lru", 0)] - 0.01, pstar
+    assert pstar[("lru", 64)] < pstar[("lru", 0)] - 0.005, pstar
+    for flows in (0,) + FLOWS:
+        assert pstar[("fifo", flows)] > 0.999, pstar
+    out["pstar"] = {f"{k[0]}@{k[1]}": v for k, v in pstar.items()}
+
+    # ---- prong B: event-level coalescing, bounded I/O depth ------------
+    print("# fig_delayed_hits B: simulated LRU, bounded disk "
+          f"(IO_DEPTH={IO_DEPTH}), flows=16")
+    row("p_hit", "x_plain", "x_coalesced", "gain", "delayed_frac",
+        "sigma_model")
+    net_b = build("lru", disk_us=DISK_US, disk_servers=IO_DEPTH)
+    model_b = coalesced_network(net_b, flows=16)
+    with timer() as t:
+        plain = simulate_network(net_b, P_SIM, n_requests=N_SIM_REQUESTS,
+                                 seeds=(0, 1))
+        co = simulate_network(net_b, P_SIM, n_requests=N_SIM_REQUESTS,
+                              seeds=(0, 1), coalesce_flows=16)
+    gains = co.throughput / plain.throughput
+    for i, p in enumerate(P_SIM):
+        row(f"{p:.2f}", f"{plain.throughput[i]:.4f}",
+            f"{co.throughput[i]:.4f}", f"{gains[i]:.2f}x",
+            f"{co.delayed_frac[i]:.4f}", f"{sigma_of(model_b, p):.4f}")
+    # coalescing can only help a bounded disk; at the congested low-p end
+    # the recovery is large.
+    assert np.all(co.throughput >= plain.throughput - plain.ci95 - co.ci95)
+    assert gains[0] > 1.5, gains
+    # delayed-hit fraction decays as misses thin out
+    assert co.delayed_frac[0] > co.delayed_frac[-1]
+    out["sim"] = dict(p=P_SIM, x_plain=plain.throughput,
+                      x_co=co.throughput, delayed=co.delayed_frac,
+                      sim_seconds=t.elapsed)
+
+    # ---- prong C: measured in-flight-window classification -------------
+    # window in requests: a fetch of L µs spans ~X·L requests at
+    # throughput X (use the plain bound at the measured hit ratio).  The
+    # probe sweep calibrates one window per size; the second sweep then
+    # classifies with those per-size windows — two Mattson passes total.
+    probe = sweep_cache_sizes("lru", SWEEP_CAPS, key_space=4096,
+                              n_requests=40_000, disk_us=DISK_US,
+                              backend="jax")
+    windows = np.maximum(
+        1, np.round(probe["x_bound"] * DISK_US).astype(int))
+    print("# fig_delayed_hits C: measured LRU trace, window ~= X*L requests")
+    row("size", "window_req", "p_hit", "p_true_hit", "p_delayed", "sigma",
+        "x_bound", "x_bound_coalesced")
+    sw = sweep_cache_sizes("lru", SWEEP_CAPS, key_space=4096,
+                           n_requests=40_000, disk_us=DISK_US,
+                           backend="jax", miss_latency_requests=windows)
+    rows = [{k: float(v[i]) for k, v in sw.items()} for i in
+            range(len(SWEEP_CAPS))]
+    for r, cap, w in zip(rows, SWEEP_CAPS, windows):
+        r["window"] = int(w)
+        row(cap, int(w), f"{r['p_hit']:.4f}", f"{r['p_true_hit']:.4f}",
+            f"{r['p_delayed']:.4f}", f"{r['sigma']:.4f}",
+            f"{r['x_bound']:.4f}", f"{r['x_bound_coalesced']:.4f}")
+    sigmas = np.array([r["sigma"] for r in rows])
+    # measured coalescing is real at small caches and dies off as the hit
+    # ratio climbs (fewer fetches in flight)
+    assert sigmas[0] > sigmas[-1] >= 0.0, sigmas
+    assert all(r["x_bound_coalesced"] >= r["x_bound"] - 1e-9 for r in rows)
+    out["measured"] = rows
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ BENCHES = [
     "fig12_slru",  # Fig. 12 (disk x MPL trends)
     "fig14_s3fifo",  # Fig. 14
     "fig_future_systems",  # Sec. 6: cores x disk speed, c-server disk
+    "fig_delayed_hits",  # beyond-paper: miss coalescing / delayed hits
     "table2_classify",  # Tables 1-2
     "bypass_mitigation",  # Sec. 5.2
     "serving_integration",  # beyond-paper: prefix-cache controller at pod scale

@@ -16,10 +16,21 @@ measurement harness.  The linked-list primitives in
 """
 
 from repro.cache.policies import POLICIES, AccessResult, OpCounts, run_trace
-from repro.cache.py_ref import PY_POLICIES
-from repro.cache.replay import ReplayResult, lru_sweep, replay_grid, replay_trace
+from repro.cache.py_ref import PY_POLICIES, classify_inflight_py
+from repro.cache.replay import (
+    DELAYED_HIT,
+    TRUE_HIT,
+    TRUE_MISS,
+    ReplayResult,
+    classify_inflight,
+    lru_sweep,
+    replay_grid,
+    replay_trace,
+)
 
 __all__ = [
     "POLICIES", "PY_POLICIES", "AccessResult", "OpCounts", "run_trace",
     "ReplayResult", "lru_sweep", "replay_grid", "replay_trace",
+    "classify_inflight", "classify_inflight_py",
+    "TRUE_MISS", "TRUE_HIT", "DELAYED_HIT",
 ]

@@ -125,8 +125,19 @@ def make_batched_init(init: Callable[..., Any]) -> Callable[..., Any]:
 class PolicyDef:
     """A policy as a pair of pure functions (init, access).
 
-    ``batched_init`` stacks per-capacity states (shared ``pad_to`` slot
-    arrays) for vmapped replay — see :func:`make_batched_init`.
+    ``init(capacity, key_space, pad_to=None, **params)`` builds the array
+    state; ``access(state, key, u) -> (state, AccessResult)`` is jit/scan
+    compatible and consumes one admission coin ``u`` in [0, 1) per request
+    (ignored by deterministic policies, but always threaded so every
+    policy shares one replay signature).
+
+    ``batched_init(capacities, key_space, pad_to=None, **params)`` stacks
+    per-capacity states along a leading axis for ``jax.vmap``: every state
+    is built with one shared ``pad_to`` slot-array size (default: the max
+    capacity) while its *traced* capacity scalar bounds warmup and
+    eviction, so differently-sized caches share a single pytree shape —
+    and therefore a single compiled replay program (see
+    :func:`make_batched_init` and :mod:`repro.cache.replay`).
     """
 
     name: str

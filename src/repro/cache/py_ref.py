@@ -336,3 +336,30 @@ PY_POLICIES = {
     "s3fifo": S3FIFO,
     "sieve": Sieve,
 }
+
+
+def classify_inflight_py(keys, hits, window: int) -> np.ndarray:
+    """Reference for :func:`repro.cache.replay.classify_inflight` (one lane).
+
+    Same in-flight-window semantics — a true miss on key k at index t
+    starts a fetch outstanding through index t + window; any request for k
+    inside that window is a delayed hit — as a dict walk instead of a
+    vmapped scan.  Differential oracle for the JAX classifier.
+    """
+    keys = np.asarray(keys)
+    hits = np.asarray(hits, bool)
+    if keys.shape != hits.shape or keys.ndim != 1:
+        raise ValueError("keys and hits must be matching 1-D arrays")
+    from repro.cache.replay import DELAYED_HIT, TRUE_HIT, TRUE_MISS
+
+    last_fetch: dict = {}
+    out = np.empty(len(keys), np.int8)
+    for t, (k, h) in enumerate(zip(keys.tolist(), hits.tolist())):
+        if k in last_fetch and t - last_fetch[k] <= window:
+            out[t] = DELAYED_HIT
+        elif h:
+            out[t] = TRUE_HIT
+        else:
+            out[t] = TRUE_MISS
+            last_fetch[k] = t
+    return out

@@ -219,3 +219,103 @@ def replay_grid(policy: str, keys, us, capacities, *,
     hits, evicted, ops = _replay_grid(policy, states, k, u)
     return ReplayResult(np.asarray(hits), np.asarray(evicted, np.int64),
                         np.asarray(ops, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Delayed-hit (in-flight window) classification — prong C of the
+# miss-coalescing scenario.
+# ---------------------------------------------------------------------------
+
+TRUE_MISS, TRUE_HIT, DELAYED_HIT = 0, 1, 2
+_FAR_PAST = np.int32(-(2**30))  # "no fetch ever" sentinel for last-fetch times
+
+
+def _classify_lane(keys, hits, window, key_space_arr):
+    """Scan one (T,) lane: per-request {true miss, true hit, delayed hit}."""
+    T = keys.shape[0]
+
+    def step(last_fetch, x):
+        t, k, h = x
+        outstanding = (t - last_fetch[k]) <= window
+        cls = jnp.where(outstanding, DELAYED_HIT,
+                        jnp.where(h, TRUE_HIT, TRUE_MISS))
+        starts_fetch = (~outstanding) & (~h)
+        last_fetch = jnp.where(
+            starts_fetch, last_fetch.at[k].set(t), last_fetch
+        )
+        return last_fetch, cls.astype(jnp.int8)
+
+    last0 = jnp.full_like(key_space_arr, _FAR_PAST)
+    ts = jnp.arange(T, dtype=jnp.int32)
+    _, cls = lax.scan(step, last0, (ts, keys, hits))
+    return cls
+
+
+_classify_grid = jax.jit(jax.vmap(_classify_lane, in_axes=(0, 0, None, None)))
+
+
+def classify_inflight(keys, hits, window: int,
+                      key_space: int | None = None) -> np.ndarray:
+    """Classify each replayed request as true hit / delayed hit / true miss.
+
+    Overlays an MSHR-style in-flight window on an *already replayed* trace:
+    a miss at request index ``t`` initiates a backing-store fetch that
+    stays outstanding for the next ``window`` requests (``window`` is the
+    miss latency expressed in requests — in a closed system running at
+    throughput X with fetch latency L, ``window ~= X * L``).  Any request
+    for the same key at index ``s`` with ``s - t <= window`` — whether the
+    policy calls it a hit (the fill has not landed yet, so the "hit" in
+    fact waits on the in-flight fetch) or a miss (the key was already
+    re-evicted: the would-be second I/O coalesces onto the outstanding
+    one) — is a **delayed hit** (Manohar et al. 2020).  Requests outside
+    any window keep their policy classification: hit → ``TRUE_HIT``,
+    miss → ``TRUE_MISS`` (and each true miss starts a fresh fetch).
+
+    The classification is a pure post-pass: the policy's cache state and
+    hit sequence are exactly those of :func:`replay_trace` /
+    :func:`replay_grid` (which insert at miss time), so with ``window=0``
+    the classes reduce bit-identically to the plain hit/miss split.
+
+    ``keys`` is (T,) or (S, T); ``hits`` is (..., T) with any leading grid
+    axes (e.g. the (capacity, seed, T) output of :func:`replay_grid` —
+    when ``keys`` is (S, T) the second-to-last hits axis must be S).  All
+    lanes classify in one vmapped dispatch.  Returns int8 classes shaped
+    like ``hits`` with values {TRUE_MISS=0, TRUE_HIT=1, DELAYED_HIT=2}.
+
+    The per-window coalescing factor sigma — the fraction of
+    fill-requiring requests that found a fetch in flight, i.e.
+    ``n_delayed / (n_delayed + n_true_miss)`` — plugs directly into
+    :func:`repro.core.queueing.coalesced_network` as the measured
+    ``sigma``, with the *true-hit* ratio as its ``p_hit``.
+    """
+    keys = np.asarray(keys)
+    hits_np = np.asarray(hits)
+    if window < 0:
+        raise ValueError("window must be >= 0")
+    key_space = _resolve_key_space(keys, key_space)
+    if keys.ndim == 1:
+        keys2 = keys[None, :]
+    elif keys.ndim == 2:
+        keys2 = keys
+    else:
+        raise ValueError(f"keys must be (T,) or (S, T), got {keys.shape}")
+    if hits_np.shape[-1] != keys2.shape[-1]:
+        raise ValueError(f"hits {hits_np.shape} vs keys {keys.shape}: "
+                         "trailing request axes differ")
+    S = keys2.shape[0]
+    flat = hits_np.reshape(-1, hits_np.shape[-1])
+    if S > 1:
+        if hits_np.ndim < 2 or hits_np.shape[-2] != S:
+            raise ValueError(f"hits {hits_np.shape} second-to-last axis "
+                             f"must match {S} key streams")
+        key_lane = np.tile(np.arange(S), len(flat) // S)
+    else:
+        key_lane = np.zeros(len(flat), np.int64)
+
+    kj = jnp.asarray(keys2, jnp.int32)
+    hj = jnp.asarray(flat, bool)
+    lanes = _classify_grid(
+        kj[jnp.asarray(key_lane)], hj, jnp.int32(window),
+        jnp.zeros((key_space,), jnp.int32),
+    )
+    return np.asarray(lanes).reshape(hits_np.shape)

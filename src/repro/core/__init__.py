@@ -15,8 +15,10 @@ from repro.core.queueing import (
     ClosedNetwork,
     Station,
     bypass_network,
+    coalesced_network,
     exponential_analogue,
     optimal_bypass_beta,
+    sigma_of,
 )
 from repro.core.policy_models import (
     POLICY_BUILDERS,
@@ -42,7 +44,8 @@ from repro.core.classify import (
 
 __all__ = [
     "QUEUE", "THINK", "Branch", "ClosedNetwork", "Station",
-    "bypass_network", "exponential_analogue", "optimal_bypass_beta",
+    "bypass_network", "coalesced_network", "exponential_analogue",
+    "optimal_bypass_beta", "sigma_of",
     "POLICY_BUILDERS", "build",
     "lru_network", "fifo_network", "prob_lru_network", "clock_network",
     "slru_network", "s3fifo_network",

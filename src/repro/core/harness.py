@@ -125,9 +125,43 @@ class CacheMeasurement:
     mean_ops_miss: np.ndarray  # ... on misses
     profiles: dict  # (hit, ops) -> frequency
     network: ClosedNetwork  # empirical-profile network
+    # delayed-hit classification under an in-flight window of
+    # ``miss_latency_requests`` requests (0 = classification disabled):
+    # post-warmup fractions of (true miss, true hit, delayed hit).
+    miss_latency_requests: int = 0
+    class_fracs: np.ndarray | None = None
 
     def throughput_bound(self, p=None):
         return self.network.throughput_upper(self.hit_ratio if p is None else p)
+
+    @property
+    def coalesce_sigma(self) -> float:
+        """Measured coalescing factor: of the requests that needed a fill
+        (delayed + true miss), the fraction that found one in flight."""
+        if self.class_fracs is None:
+            return 0.0
+        miss, _, delayed = (float(x) for x in self.class_fracs)
+        return delayed / (delayed + miss) if (delayed + miss) > 0 else 0.0
+
+    @property
+    def true_hit_ratio(self) -> float:
+        """Hit ratio with delayed hits reclassified out of the hit count."""
+        if self.class_fracs is None:
+            return self.hit_ratio
+        return float(self.class_fracs[1])
+
+    def coalesced_throughput_bound(self, p=None):
+        """Thm-7.1 bound of the measured-profile network with the measured
+        coalescing factor applied (delayed hits skip the disk and the fill
+        metadata).  Falls back to the plain bound when classification is
+        off or found no coalescing."""
+        sig = self.coalesce_sigma
+        if sig <= 0.0:
+            return self.throughput_bound(p)
+        from repro.core.queueing import coalesced_network
+
+        net = coalesced_network(self.network, sigma=sig)
+        return net.throughput_upper(self.hit_ratio if p is None else p)
 
 
 def run_cache_trace(policy: str, capacity: int, trace: np.ndarray, seed: int = 0,
@@ -135,9 +169,23 @@ def run_cache_trace(policy: str, capacity: int, trace: np.ndarray, seed: int = 0
                     pad_to: int | None = None, **policy_kwargs):
     """Replay a trace through a cache implementation; returns (hits, ops).
 
-    ``backend="py"`` walks the Python reference one request at a time (the
-    oracle); ``backend="jax"`` dispatches the compiled scan engine.  Both
-    consume the same coin substream and return identical arrays.
+    The two backends are contractually interchangeable:
+
+    ``backend="py"``
+        walks the Python reference (:mod:`repro.cache.py_ref`) one request
+        at a time.  Slow and dead simple — this is the differential
+        *oracle*, and the only backend that never imports jax.
+    ``backend="jax"``
+        dispatches the compiled ``lax.scan`` engine
+        (:mod:`repro.cache.replay`).  ``key_space`` bounds the key-indexed
+        arrays (inferred from the trace when omitted) and ``pad_to`` sizes
+        the slot arrays so different capacities share a compiled program.
+
+    Both consume the same float32 coin substream (admission randomness
+    independent of the trace stream) and must return bit-identical
+    (hits, ops) arrays — ``tests/test_replay.py`` pins that contract
+    element-wise for every policy, which is what keeps py_ref usable as
+    the differential oracle for any new replay feature.
     """
     us = coin_stream(len(trace), seed)
     if backend == "jax":
@@ -285,6 +333,24 @@ def parameterized_network(
                          tuple(branches), mpl)
 
 
+def _classify(trace, hits, window: int, key_space: int, backend: str,
+              warmup_frac: float = 0.25) -> np.ndarray:
+    """Post-warmup (true miss, true hit, delayed hit) fractions."""
+    if backend == "jax":
+        from repro.cache.replay import classify_inflight  # lazy: pulls in jax
+
+        cls = classify_inflight(trace, hits, window, key_space=key_space)
+    else:
+        from repro.cache.py_ref import classify_inflight_py
+
+        cls = classify_inflight_py(trace, hits, window)
+    w = int(cls.shape[-1] * warmup_frac)
+    cls_m = cls[..., w:]
+    return np.stack(
+        [(cls_m == c).mean(axis=-1) for c in range(3)], axis=-1
+    )
+
+
 def measure_cache(
     policy: str,
     capacity: int,
@@ -296,9 +362,19 @@ def measure_cache(
     seed: int = 0,
     disk_servers: int = 0,
     backend: str = "py",
+    miss_latency_requests: int = 0,
     **policy_kwargs,
 ) -> CacheMeasurement:
-    """End-to-end prong C measurement at one cache size."""
+    """End-to-end prong C measurement at one cache size.
+
+    ``miss_latency_requests > 0`` additionally classifies every request
+    against an in-flight-miss window of that many requests (see
+    :func:`repro.cache.replay.classify_inflight`): the resulting
+    ``class_fracs`` / ``coalesce_sigma`` on the returned measurement feed
+    the delayed-hits variants of the model (prong A) and simulator
+    (prong B).  With 0 the measurement is bit-identical to the
+    non-coalesced path.
+    """
     trace = zipf_trace(n_requests, key_space, theta, seed)
     hits, ops = run_cache_trace(policy, capacity, trace, seed=seed,
                                 backend=backend, key_space=key_space,
@@ -308,7 +384,15 @@ def measure_cache(
     )
     meas = empirical_network(policy, hits, ops, service=service, mpl=mpl,
                              disk_servers=disk_servers)
-    return dataclasses.replace(meas, capacity=capacity)
+    meas = dataclasses.replace(meas, capacity=capacity)
+    if miss_latency_requests:
+        fracs = _classify(trace, hits, miss_latency_requests, key_space,
+                          backend)
+        meas = dataclasses.replace(
+            meas, miss_latency_requests=int(miss_latency_requests),
+            class_fracs=fracs,
+        )
+    return meas
 
 
 def sweep_cache_sizes(
@@ -324,6 +408,7 @@ def sweep_cache_sizes(
     seed: int = 0,
     disk_servers: int = 0,
     backend: str = "jax",
+    miss_latency_requests: int = 0,
     **policy_kwargs,
 ):
     """Hit-ratio/throughput curve vs cache size — the paper's x-axis sweep.
@@ -331,23 +416,42 @@ def sweep_cache_sizes(
     ``backend="jax"`` (default) replays every size in one compiled
     dispatch: a single Mattson stack-distance pass for LRU, the vmapped
     (capacity x seed) scan grid for everything else.  ``backend="py"``
-    keeps the oracle loop.  Returns dict of np arrays: sizes, p_hit,
-    x_bound, (x_sim if simulate).
+    keeps the oracle loop (~10-80x slower, zero jax imports) — the two
+    backends consume identical trace/coin streams and return identical
+    arrays, so either can cross-check the other.
+
+    ``miss_latency_requests`` — a scalar, or one window per size (in a
+    closed system the window ~= X·L *depends on the operating point*, so
+    per-size windows let one sweep carry its own calibration) — turns on
+    delayed-hit classification and adds per-size columns: ``p_true_hit``,
+    ``p_delayed``, ``sigma`` (measured coalescing factor) and
+    ``x_bound_coalesced`` (the bound with delayed hits skipping the disk
+    and fill metadata).
+
+    Returns dict of np arrays: size, p_hit, x_bound, (x_sim if simulate,
+    delayed-hit columns if enabled).
     """
     from repro.core.simulator import simulate_network  # lazy: pulls in jax
 
     if backend not in ("py", "jax"):
         raise ValueError(f"unknown backend {backend!r} (want 'py' or 'jax')")
     sizes = [int(c) for c in sizes]
-    out = {"size": [], "p_hit": [], "x_bound": [], "x_sim": []}
+    windows = (list(np.broadcast_to(miss_latency_requests, len(sizes))
+                    .astype(int)))
+    classify = any(w > 0 for w in windows)
+    out: dict = {"size": [], "p_hit": [], "x_bound": [], "x_sim": [],
+                 "p_true_hit": [], "p_delayed": [], "sigma": [],
+                 "x_bound_coalesced": []}
 
     def _measurements():
         if backend == "py":
-            for c in sizes:
+            for c, w in zip(sizes, windows):
                 yield measure_cache(
                     policy, c, key_space=key_space, n_requests=n_requests,
                     theta=theta, disk_us=disk_us, mpl=mpl, seed=seed,
-                    disk_servers=disk_servers, **policy_kwargs,
+                    disk_servers=disk_servers,
+                    miss_latency_requests=w,
+                    **policy_kwargs,
                 )
             return
         trace = zipf_trace(n_requests, key_space, theta, seed)
@@ -364,16 +468,33 @@ def sweep_cache_sizes(
         service = dataclasses.replace(
             PAPER_SERVICES.get(policy, ServiceTimes()), disk=disk_us
         )
-        for i, c in enumerate(sizes):
+        for i, (c, w) in enumerate(zip(sizes, windows)):
             meas = empirical_network(policy, hits_g[i], ops_g[i],
                                      service=service, mpl=mpl,
                                      disk_servers=disk_servers)
-            yield dataclasses.replace(meas, capacity=c)
+            meas = dataclasses.replace(meas, capacity=c)
+            if w:
+                fracs = _classify(trace, np.asarray(hits_g[i]), w,
+                                  key_space, backend)
+                meas = dataclasses.replace(
+                    meas, miss_latency_requests=int(w), class_fracs=fracs,
+                )
+            yield meas
 
     for meas in _measurements():
         out["size"].append(meas.capacity)
         out["p_hit"].append(meas.hit_ratio)
         out["x_bound"].append(float(meas.throughput_bound()))
+        if classify:
+            out["p_true_hit"].append(meas.true_hit_ratio)
+            out["p_delayed"].append(
+                float(meas.class_fracs[2])
+                if meas.class_fracs is not None else 0.0
+            )
+            out["sigma"].append(meas.coalesce_sigma)
+            out["x_bound_coalesced"].append(
+                float(meas.coalesced_throughput_bound())
+            )
         if simulate:
             res = simulate_network(
                 meas.network, [meas.hit_ratio], n_requests=sim_requests, seeds=(0,)

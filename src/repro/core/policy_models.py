@@ -37,6 +37,7 @@ from repro.core.queueing import (
     Branch,
     ClosedNetwork,
     Station,
+    coalesced_network,
     disk_station,
 )
 
@@ -328,8 +329,25 @@ POLICY_BUILDERS = {
 }
 
 
-def build(policy: str, disk_us: float = 100.0, mpl: int = 72, **kw) -> ClosedNetwork:
-    return POLICY_BUILDERS[policy](disk_us=disk_us, mpl=mpl, **kw)
+def build(policy: str, disk_us: float = 100.0, mpl: int = 72,
+          coalesce_flows: int = 0, coalesce_window_us=None,
+          coalesce_sigma=None, **kw) -> ClosedNetwork:
+    """Build a policy network, optionally with miss coalescing applied.
+
+    ``coalesce_flows > 0`` wraps the network in
+    :func:`repro.core.queueing.coalesced_network`: concurrent misses on the
+    same (hot) key share one backing-store fetch, so the disk sees the
+    coalesced miss rate X·(1-p)·(1-σ).  ``coalesce_window_us`` overrides
+    the in-flight window (default: the disk service time itself) and
+    ``coalesce_sigma`` pins the coalescing factor (e.g. to a prong-C
+    measured value) instead of solving it from the window.
+    """
+    net = POLICY_BUILDERS[policy](disk_us=disk_us, mpl=mpl, **kw)
+    if coalesce_flows:
+        net = coalesced_network(net, flows=coalesce_flows,
+                                window_us=coalesce_window_us,
+                                sigma=coalesce_sigma)
+    return net
 
 
 def paper_lru_bound(p, disk_us: float = 100.0, mpl: int = 72):

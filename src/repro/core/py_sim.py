@@ -3,6 +3,12 @@
 Oracle for the JAX simulator in :mod:`repro.core.simulator` — same network
 semantics, independent implementation.  Used by tests and for debugging;
 ~100x slower than the jitted simulator, so keep ``n_requests`` modest.
+
+Supports the same miss-coalescing (delayed hits) semantics as the JAX
+simulator: with ``coalesce_flows > 0`` a job arriving at the ``disk``
+station samples a flow (hot key); if a fetch for that flow is already in
+flight it parks on an outstanding-miss table — no duplicate disk I/O, no
+bounded-``disk_servers`` slot — and completes when the fill lands.
 """
 
 from __future__ import annotations
@@ -22,12 +28,19 @@ def simulate_py(
     n_requests: int = 20_000,
     seed: int = 0,
     warmup_frac: float = 0.25,
-) -> float:
+    coalesce_flows: int = 0,
+    full: bool = False,
+):
     """Simulate and return throughput in requests/µs.
 
     Service distributions: det and exp are honored; bounded-Pareto stations
     are sampled at their mean (det) — the paper (and our tests) show the
     throughput is insensitive to this.
+
+    With ``full=True`` returns a dict with ``x`` (throughput),
+    ``delayed_frac`` (fraction of measured completions that were delayed
+    hits) and ``delayed`` (their count); the bare float return stays the
+    default for backward compatibility.
     """
     rng = random.Random(seed)
     spec = compile_network(net, p_hit)
@@ -37,8 +50,11 @@ def simulate_py(
     cum = np.asarray(spec.branch_cum)
     visits = np.asarray(spec.visits)
     servers = np.asarray(spec.servers)
+    disk_idx = int(spec.disk_idx)
     K = len(is_q)
     N = net.mpl
+    if coalesce_flows and disk_idx < 0:
+        raise ValueError(f"{net.name} has no 'disk' station to coalesce on")
 
     def sample(k: int) -> float:
         if dist[k] == 1:
@@ -53,6 +69,10 @@ def simulate_py(
     # busy count per queue station: jobs in service, <= servers[k] (matches
     # the JAX simulator's busy-count semantics; c-server FCFS).
     busy = {k: 0 for k in range(K) if is_q[k]}
+    # outstanding-miss table: flow -> leader job; parked jobs ride along.
+    leader: dict = {}
+    parked: dict = {}  # flow -> [job ids]
+    job_flow = [-1] * N
     job_branch = [0] * N
     job_pos = [0] * N
     for j in range(N):
@@ -63,10 +83,36 @@ def simulate_py(
 
     t = 0.0
     done = 0
+    delayed = 0
     warm_target = int(n_requests * warmup_frac)
     warm_t = warm_c = None
+    warm_d = 0
+
+    def complete(j: int, now: float) -> None:
+        """Finish j's request and start a fresh one at a think station."""
+        nonlocal done, warm_c, warm_t, warm_d
+        done += 1
+        if warm_c is None and done >= warm_target:
+            warm_c, warm_t, warm_d = done, now, delayed
+        b = new_branch()
+        job_branch[j] = b
+        job_pos[j] = 0
+        k0 = int(visits[b, 0])
+        heapq.heappush(heap, (now + sample(k0), j, k0))
+
     while done < n_requests:
         t, j, k = heapq.heappop(heap)
+
+        # MSHR fill: j's fetch landed — wake everyone parked on its flow.
+        if coalesce_flows and k == disk_idx and job_flow[j] >= 0:
+            f = job_flow[j]
+            for w in parked.pop(f, []):
+                delayed += 1
+                job_flow[w] = -1
+                complete(w, t)
+            del leader[f]
+            job_flow[j] = -1
+
         if is_q[k]:
             if queues[k]:
                 w = queues[k].pop(0)  # waiter takes over the freed server
@@ -76,14 +122,17 @@ def simulate_py(
         b = job_branch[j]
         pos = job_pos[j] + 1
         if pos >= visits.shape[1] or visits[b, pos] < 0:
-            done += 1
-            if warm_c is None and done >= warm_target:
-                warm_c, warm_t = done, t
-            b = new_branch()
-            job_branch[j] = b
-            pos = 0
+            complete(j, t)
+            continue
         job_pos[j] = pos
         k2 = int(visits[b, pos])
+        if coalesce_flows and k2 == disk_idx:
+            f = rng.randrange(coalesce_flows)
+            job_flow[j] = f
+            if f in leader:  # fetch already in flight: park, no new I/O
+                parked.setdefault(f, []).append(j)
+                continue
+            leader[f] = j
         if is_q[k2]:
             if busy[k2] >= servers[k2]:
                 queues[k2].append(j)
@@ -91,4 +140,12 @@ def simulate_py(
             busy[k2] += 1
         heapq.heappush(heap, (t + sample(k2), j, k2))
 
-    return (done - warm_c) / (t - warm_t)
+    n_meas = done - warm_c
+    x = n_meas / (t - warm_t)
+    if not full:
+        return x
+    return {
+        "x": x,
+        "delayed": delayed - warm_d,
+        "delayed_frac": (delayed - warm_d) / n_meas,
+    }

@@ -401,6 +401,160 @@ def exponential_analogue(net: ClosedNetwork) -> ClosedNetwork:
 
 
 # --------------------------------------------------------------------------
+# Delayed hits / miss coalescing (Manohar et al. 2020; MSHR-style fill table).
+# --------------------------------------------------------------------------
+
+INFLIGHT = "inflight"
+
+
+def _disk_branches(net: ClosedNetwork, disk_name: str):
+    return [b for b in net.branches if disk_name in b.visits]
+
+
+def sigma_of(net: ClosedNetwork, p_hit: float) -> float:
+    """Recover the coalescing factor sigma(p) of a coalesced network.
+
+    Reads the probability mass of the ``*_delayed`` branches that
+    :func:`coalesced_network` creates, relative to all fill-requiring
+    traffic (delayed + leader/disk branches).  Returns 0 for a network
+    without coalescing.  Lives here so the ``_delayed`` naming convention
+    stays private to this module.
+    """
+    delayed = sum(
+        b.probability(p_hit) for b in net.branches
+        if b.name.endswith("_delayed")
+    )
+    fills = delayed + sum(
+        b.probability(p_hit) for b in _disk_branches(net, "disk")
+    )
+    return delayed / fills if fills > 0 else 0.0
+
+
+def coalesced_network(
+    net: ClosedNetwork,
+    flows: int = 64,
+    window_us: ServiceFn | None = None,
+    sigma: ProbFn | None = None,
+    disk_name: str = "disk",
+) -> ClosedNetwork:
+    """Miss-coalescing transform: concurrent misses on one key share a fetch.
+
+    The base model treats every miss as independent — each pays a full
+    backing-store trip and a full pass through the miss-path metadata
+    stations.  Real caches keep an outstanding-miss table (MSHRs): a
+    request that misses on a key whose fetch is already *in flight* parks
+    until the fill lands (a "delayed hit" — Manohar et al. 2020) and issues
+    no second I/O and no second insertion.  The disk therefore sees the
+    *coalesced* miss rate ``X (1-p) (1-sigma)`` instead of ``X (1-p)``.
+
+    Every branch of ``net`` that visits ``disk_name`` splits in two:
+
+    * the **leader** (probability scaled by ``1 - sigma(p)``) — the request
+      that initiates the fetch; it follows the original route, including
+      the post-disk fill/eviction metadata stations;
+    * the **delayed hit** (probability scaled by ``sigma(p)``) — it keeps
+      the pre-disk visits, then parks on a new infinite-server ``inflight``
+      station for the *residual* window (window/2 for a deterministic
+      fetch latency under a uniformly-positioned arrival) and completes
+      without touching the disk or the fill metadata.
+
+    ``window_us`` is the in-flight window — how long a fetch stays
+    outstanding; it defaults to the disk station's own mean service time
+    (a fetch is in flight exactly while the disk serves it).  May be a
+    callable of ``p_hit`` like every other service time.
+
+    ``sigma`` is the coalescing factor — the fraction of would-be misses
+    that find a fetch for their key already in flight.  Pass a constant or
+    a callable (e.g. the measured fraction from prong C's
+    :func:`repro.cache.replay.classify_inflight`); when omitted it is
+    solved self-consistently from the in-flight window: per-flow misses
+    initiate fetches as a renewal process (window ``L`` then an idle gap),
+    giving
+
+        sigma(p) = mu L / (1 + mu L)
+
+    with the per-flow miss rate ``mu = X(p) * P{miss}(p) / flows`` and
+    ``L`` the window; ``X`` is the coalesced
+    network's own throughput bound — a contraction solved by fixed-point
+    iteration and memoized per ``p``.  ``flows`` is the effective number
+    of concurrently-missed hot keys the miss stream spreads over (fewer
+    flows => more collisions => more coalescing).
+
+    With ``window_us = 0`` (or ``sigma = 0``) the transform is exact
+    identity on every demand and think time: sigma solves to 0, the
+    delayed branches carry probability 0, and bounds/MVA/simulation all
+    reduce to the base network's values.
+    """
+    if not _disk_branches(net, disk_name):
+        raise ValueError(f"{net.name} has no branch visiting {disk_name!r}")
+    if flows < 1:
+        raise ValueError("flows must be >= 1")
+    disk = net.station(disk_name)
+    window_fn = _as_fn(window_us) if window_us is not None else disk.mean_service
+
+    def build(sigma_fn: Callable[[float], float]) -> ClosedNetwork:
+        stations = net.stations + (
+            Station(INFLIGHT, THINK, lambda p: 0.5 * window_fn(p), dist="exp"),
+        )
+        branches = []
+        for b in net.branches:
+            if disk_name not in b.visits:
+                branches.append(b)
+                continue
+            pf = _as_fn(b.prob)
+            pre = b.visits[: b.visits.index(disk_name)]
+            branches.append(
+                dataclasses.replace(
+                    b, prob=lambda p, pf=pf: pf(p) * (1.0 - sigma_fn(p))
+                )
+            )
+            branches.append(
+                Branch(
+                    b.name + "_delayed",
+                    lambda p, pf=pf: pf(p) * sigma_fn(p),
+                    pre + (INFLIGHT,),
+                )
+            )
+        return dataclasses.replace(
+            net,
+            name=net.name + "+coalesce",
+            stations=stations,
+            branches=tuple(branches),
+        )
+
+    if sigma is not None:
+        return build(_as_fn(sigma))
+
+    def miss_share(p: float) -> float:
+        return sum(b.probability(p) for b in _disk_branches(net, disk_name))
+
+    memo: dict = {}
+
+    def sigma_fn(p: float) -> float:
+        key = round(float(p), 12)
+        if key in memo:
+            return memo[key]
+        L = float(window_fn(p))
+        m = miss_share(p)
+        s = 0.0
+        if L > 0.0 and m > 0.0:
+            for _ in range(100):
+                X = float(
+                    build(lambda _p, s=s: s).throughput_upper(p, tail_mode="zero")
+                )
+                mu = X * m / flows
+                s_new = mu * L / (1.0 + mu * L)
+                if abs(s_new - s) < 1e-12:
+                    s = s_new
+                    break
+                s = s_new
+        memo[key] = s
+        return s
+
+    return build(sigma_fn)
+
+
+# --------------------------------------------------------------------------
 # Mitigation (paper §5.2): bypass the cache under load.
 # --------------------------------------------------------------------------
 

@@ -23,8 +23,15 @@ Design notes
 * **Distributions.**  det / exp / bounded-Pareto, all rescaled to the
   station's mean (the paper reports insensitivity to the service
   distribution; tests confirm).
+* **Miss coalescing** (``coalesce_flows > 0``).  An MSHR-style
+  outstanding-miss table over F hot-key "flows": a job arriving at the
+  ``disk`` station whose flow already has a fetch in flight parks (no
+  duplicate I/O, no bounded-depth slot) and completes when the fill
+  lands — the event-level counterpart of
+  :func:`repro.core.queueing.coalesced_network`.
 
-One loop iteration processes exactly one event (a service completion).
+One loop iteration processes exactly one event (a service completion);
+a disk completion may additionally retire any parked delayed hits.
 """
 
 from __future__ import annotations
@@ -56,6 +63,7 @@ class SimSpec(NamedTuple):
     branch_cum: jax.Array  # (B,) f32 cumulative branch probabilities
     visits: jax.Array  # (B, L) i32 station indices, -1 padded
     servers: jax.Array  # (K,) i32 FCFS server count (1 for think stations)
+    disk_idx: jax.Array  # () i32 backing-store station index, -1 if none
     mpl: int
 
 
@@ -116,6 +124,7 @@ def compile_network(net: ClosedNetwork, p_hit: float) -> SimSpec:
         branch_cum=jnp.asarray(branch_cum),
         visits=jnp.asarray(visits),
         servers=jnp.asarray(servers),
+        disk_idx=jnp.int32(idx.get("disk", -1)),
         mpl=net.mpl,
     )
 
@@ -154,7 +163,7 @@ def _sample_service_ns(key, spec: SimSpec, k) -> jnp.ndarray:
 
 class _SimState(NamedTuple):
     key: jax.Array
-    ready_ns: jax.Array  # (N,) i32, INF when waiting in a queue
+    ready_ns: jax.Array  # (N,) i32, INF when waiting in a queue (or parked)
     station: jax.Array  # (N,) i32
     branch: jax.Array  # (N,) i32
     pos: jax.Array  # (N,) i32
@@ -165,12 +174,20 @@ class _SimState(NamedTuple):
     elapsed_us: jax.Array  # f32
     warm_completed: jax.Array  # i32
     warm_elapsed_us: jax.Array  # f32
+    # --- outstanding-miss (MSHR) table, used only when n_flows > 0 ---
+    flow: jax.Array  # (N,) i32 flow a job fetches/parks on, -1 otherwise
+    leader: jax.Array  # (F,) i32 job id leading each flow's fetch, -1 idle
+    delayed: jax.Array  # i32 completed requests that were delayed hits
+    warm_delayed: jax.Array  # i32 `delayed` at the warmup crossing
 
 
-@partial(jax.jit, static_argnames=("n_requests", "warmup", "mpl", "max_events"))
+@partial(jax.jit,
+         static_argnames=("n_requests", "warmup", "mpl", "max_events",
+                          "n_flows"))
 def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
-              max_events: int) -> tuple:
+              max_events: int, n_flows: int = 0) -> tuple:
     N = mpl
+    F = max(n_flows, 1)  # leader-table shape must be static even when unused
     key = jax.random.PRNGKey(seed)
 
     def sample_branch(key):
@@ -199,6 +216,10 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         elapsed_us=jnp.float32(0.0),
         warm_completed=jnp.int32(-1),
         warm_elapsed_us=jnp.float32(0.0),
+        flow=jnp.full((N,), -1, jnp.int32),
+        leader=jnp.full((F,), -1, jnp.int32),
+        delayed=jnp.int32(0),
+        warm_delayed=jnp.int32(0),
     )
 
     def cond(carry):
@@ -207,7 +228,11 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
 
     def body(carry):
         state, events = carry
-        key, k_svc1, k_svc2, k_branch = jax.random.split(state.key, 4)
+        if n_flows:
+            (key, k_svc1, k_svc2, k_branch, k_flow, k_wake_b,
+             k_wake_s) = jax.random.split(state.key, 7)
+        else:
+            key, k_svc1, k_svc2, k_branch = jax.random.split(state.key, 4)
 
         j = jnp.argmin(state.ready_ns).astype(jnp.int32)
         t = state.ready_ns[j]
@@ -218,11 +243,46 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         k_cur = state.station[j]
         busy_count = state.busy_count
         enq_seq = state.enq_seq
+        station = state.station
+        branch = state.branch
+        pos = state.pos
+        flow = state.flow
+        leader = state.leader
+        completed = state.completed
+        delayed = state.delayed
+
+        # ---- MSHR fill: j's fetch landed — wake every request parked on it.
+        # Parked jobs are NOT in the disk queue (ready=INF but enq_seq=BIG),
+        # so they never hold an I/O-depth slot and the FIFO release below
+        # can never mistake them for queue waiters.  A delayed hit skips the
+        # fill metadata: it completes its request on the spot and starts a
+        # fresh one at a first (think) station.
+        if n_flows:
+            f_cur = flow[j]
+            fill = (k_cur == spec.disk_idx) & (f_cur >= 0)
+            woken = (flow == f_cur) & fill
+            woken = woken.at[j].set(False)
+            wake_branch = jax.vmap(sample_branch)(jax.random.split(k_wake_b, N))
+            wake_station = spec.visits[wake_branch, 0]
+            wake_svc = jax.vmap(lambda k, s: _sample_service_ns(k, spec, s))(
+                jax.random.split(k_wake_s, N), wake_station
+            )
+            ready = jnp.where(woken, wake_svc, ready)
+            station = jnp.where(woken, wake_station, station)
+            branch = jnp.where(woken, wake_branch, branch)
+            pos = jnp.where(woken, 0, pos)
+            n_woken = woken.sum().astype(jnp.int32)
+            completed = completed + n_woken
+            delayed = delayed + n_woken
+            leader = jnp.where(
+                fill, leader.at[jnp.maximum(f_cur, 0)].set(-1), leader
+            )
+            flow = jnp.where(woken | ((jnp.arange(N) == j) & fill), -1, flow)
 
         # ---- hand the server job j held (if any) to its FIFO successor.
         def release(args):
             ready, busy_count, enq_seq = args
-            waiting = (state.station == k_cur) & (ready == INF_NS)
+            waiting = (station == k_cur) & (ready == INF_NS)
             waiting = waiting.at[j].set(False)
             seqs = jnp.where(waiting, enq_seq, BIG_SEQ)
             w = jnp.argmin(seqs).astype(jnp.int32)
@@ -243,38 +303,54 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         )
 
         # ---- advance job j along its route (or complete + start new request).
-        nxt_pos = state.pos[j] + 1
+        nxt_pos = pos[j] + 1
         L = spec.visits.shape[1]
-        route_next = jnp.where(nxt_pos < L, spec.visits[state.branch[j], nxt_pos % L], -1)
+        route_next = jnp.where(nxt_pos < L, spec.visits[branch[j], nxt_pos % L], -1)
         done = route_next < 0
 
         new_branch = sample_branch(k_branch)
-        branch_j = jnp.where(done, new_branch, state.branch[j])
+        branch_j = jnp.where(done, new_branch, branch[j])
         pos_j = jnp.where(done, 0, nxt_pos)
         k_next = jnp.where(done, spec.visits[new_branch, 0], route_next)
-        completed = state.completed + done.astype(jnp.int32)
+        completed = completed + done.astype(jnp.int32)
 
         # ---- place j at k_next.
         svc_next = _sample_service_ns(k_svc2, spec, k_next)
         is_q = spec.is_queue[k_next]
         has_slot = busy_count[k_next] < spec.servers[k_next]
-        starts_now = (~is_q) | has_slot
+        if n_flows:
+            # Arriving at the backing store: sample which (hot) key this
+            # miss fetches.  If a fetch for that key is already in flight,
+            # park on the outstanding-miss table — no duplicate disk I/O,
+            # no I/O-depth slot, no queue position.
+            at_disk = k_next == spec.disk_idx
+            f_new = jax.random.randint(k_flow, (), 0, n_flows)
+            parks = at_disk & (leader[f_new] >= 0)
+            starts_now = ((~is_q) | has_slot) & ~parks
+            waits = is_q & ~has_slot & ~parks
+            leader = jnp.where(at_disk & ~parks, leader.at[f_new].set(j),
+                               leader)
+            flow = flow.at[j].set(jnp.where(at_disk, f_new, flow[j]))
+        else:
+            starts_now = (~is_q) | has_slot
+            waits = ~starts_now
         ready = ready.at[j].set(jnp.where(starts_now, svc_next, INF_NS))
-        enq_seq = enq_seq.at[j].set(jnp.where(starts_now, BIG_SEQ, state.seq_ctr))
-        seq_ctr = state.seq_ctr + (~starts_now).astype(jnp.int32)
+        enq_seq = enq_seq.at[j].set(jnp.where(waits, state.seq_ctr, BIG_SEQ))
+        seq_ctr = state.seq_ctr + waits.astype(jnp.int32)
         busy_count = busy_count.at[k_next].add((is_q & starts_now).astype(jnp.int32))
 
         # ---- warmup bookkeeping.
         warm_now = (completed >= warmup) & (state.warm_completed < 0)
         warm_completed = jnp.where(warm_now, completed, state.warm_completed)
         warm_elapsed_us = jnp.where(warm_now, elapsed_us, state.warm_elapsed_us)
+        warm_delayed = jnp.where(warm_now, delayed, state.warm_delayed)
 
         new_state = _SimState(
             key=key,
             ready_ns=ready,
-            station=state.station.at[j].set(k_next),
-            branch=state.branch.at[j].set(branch_j),
-            pos=state.pos.at[j].set(pos_j),
+            station=station.at[j].set(k_next),
+            branch=branch.at[j].set(branch_j),
+            pos=pos.at[j].set(pos_j),
             enq_seq=enq_seq,
             busy_count=busy_count,
             seq_ctr=seq_ctr,
@@ -282,6 +358,10 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             elapsed_us=elapsed_us,
             warm_completed=warm_completed,
             warm_elapsed_us=warm_elapsed_us,
+            flow=flow,
+            leader=leader,
+            delayed=delayed,
+            warm_delayed=warm_delayed,
         )
         return new_state, events + 1
 
@@ -290,7 +370,11 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
     n_measured = state.completed - state.warm_completed
     t_measured = state.elapsed_us - state.warm_elapsed_us
     x = n_measured.astype(jnp.float32) / jnp.maximum(t_measured, 1e-6)
-    return x, state.completed, events
+    delayed_frac = (
+        (state.delayed - state.warm_delayed).astype(jnp.float32)
+        / jnp.maximum(n_measured, 1).astype(jnp.float32)
+    )
+    return x, state.completed, events, delayed_frac
 
 
 @dataclasses.dataclass(frozen=True)
@@ -299,6 +383,9 @@ class SimResult:
     throughput: np.ndarray  # requests/µs == M req/s
     ci95: np.ndarray  # 95% CI half-width across seeds
     n_requests: int
+    # fraction of measured completions that were delayed hits (coalesced
+    # onto an in-flight fetch); zeros unless coalesce_flows > 0.
+    delayed_frac: np.ndarray | None = None
 
 
 def simulate_network(
@@ -307,12 +394,22 @@ def simulate_network(
     n_requests: int = 40_000,
     seeds=(0, 1, 2),
     warmup_frac: float = 0.25,
+    coalesce_flows: int = 0,
 ) -> SimResult:
     """Simulate ``net`` over a grid of hit ratios.
 
     The full (p_hit × seed) grid dispatches as ONE vmapped, jitted program:
     the per-p_hit spec arrays are tiled across seeds so every (p, seed) cell
     is an independent lane of the same kernel.
+
+    ``coalesce_flows > 0`` turns on miss coalescing (delayed hits): a job
+    arriving at the ``disk`` station samples one of ``coalesce_flows`` hot
+    keys; if a fetch for that key is already outstanding the job parks on
+    an MSHR-style table (issuing no duplicate I/O and holding no bounded
+    ``disk_servers`` slot) and completes when the fill lands.  This is the
+    event-level counterpart of
+    :func:`repro.core.queueing.coalesced_network`; 0 leaves the compiled
+    program bit-identical to the non-coalesced simulator.
     """
     p_hits = np.atleast_1d(np.asarray(p_hits, dtype=np.float64))
     spec = stack_specs([compile_network(net, float(p)) for p in p_hits])
@@ -324,7 +421,8 @@ def simulate_network(
         lambda sp, seed: _simulate(
             SimSpec(*sp, mpl=net.mpl), seed, n_requests=n_requests,
             warmup=warmup, mpl=net.mpl, max_events=max_events,
-        )[0],
+            n_flows=coalesce_flows,
+        ),
         in_axes=(0, 0),
     )
     P, S = len(p_hits), len(seeds)
@@ -336,7 +434,10 @@ def simulate_network(
         [jnp.full((P,), s, jnp.int32) * 1000 + jnp.arange(P, dtype=jnp.int32)
          for s in seeds]
     )
-    xs = np.asarray(runner(spec_arrays, seed_v)).reshape(S, P)
+    out = runner(spec_arrays, seed_v)
+    xs = np.asarray(out[0]).reshape(S, P)
+    dl = np.asarray(out[3]).reshape(S, P)
     mean = xs.mean(axis=0)
     ci = 1.96 * xs.std(axis=0, ddof=1) / math.sqrt(len(seeds)) if len(seeds) > 1 else np.zeros_like(mean)
-    return SimResult(p_hit=p_hits, throughput=mean, ci95=ci, n_requests=n_requests)
+    return SimResult(p_hit=p_hits, throughput=mean, ci95=ci,
+                     n_requests=n_requests, delayed_frac=dl.mean(axis=0))

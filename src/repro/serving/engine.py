@@ -336,7 +336,8 @@ class Engine:
 
     def forecast_network(self, step_us: float, prefill_us: float,
                          replicas: int = 1, batched_update: bool = False,
-                         cores: int | None = None):
+                         cores: int | None = None,
+                         coalesce_flows: int = 0):
         """Closed-network p* forecast for this engine's prefix controller.
 
         Uses the measured controller op profile plus the ServeConfig
@@ -349,10 +350,16 @@ class Engine:
         ``cores`` overrides ``ServeConfig.cores`` for what-if forecasts —
         the knob only affects the forecast, so re-running the engine for a
         different pod shape would measure the identical profile.
+        ``coalesce_flows > 0`` models prefill deduplication (concurrent
+        misses on the same hot chunk share one recompute — the serving
+        analogue of MSHR miss coalescing) over that many hot chunks, via
+        :func:`repro.core.queueing.coalesced_network` with the prefill
+        latency as the in-flight window.
         """
         from repro.core.harness import PAPER_SERVICES, ServiceTimes
         from repro.core.queueing import (QUEUE, THINK, Branch, ClosedNetwork,
-                                         Station, disk_station)
+                                         Station, coalesced_network,
+                                         disk_station)
 
         hit_ops, miss_ops = self.prefix.mean_ops_per_chunk()
         svc = PAPER_SERVICES.get(self.serve.policy, ServiceTimes())
@@ -380,5 +387,9 @@ class Engine:
             Branch("hit", lambda p: p, visits(hit_ops, False)),
             Branch("miss", lambda p: 1.0 - p, visits(miss_ops, True)),
         ]
-        return ClosedNetwork(f"serving-{self.serve.policy}", tuple(stations),
-                             tuple(branches), mpl)
+        net = ClosedNetwork(f"serving-{self.serve.policy}", tuple(stations),
+                            tuple(branches), mpl)
+        if coalesce_flows:
+            net = coalesced_network(net, flows=coalesce_flows,
+                                    window_us=prefill_us)
+        return net
