@@ -8,7 +8,9 @@ are asserted inside each benchmark).
 
 ``--json`` writes the perf-trajectory artifact: replay throughput
 (requests/s, py vs jax backend, from replay_bench) plus per-bench wall
-times.  CI uploads it on every run.
+times, and — when fig_latency ran — the latency-prong summary (operating
+points, sim-vs-analytic sojourns, SLO capacities).  CI uploads
+BENCH_replay.json and BENCH_latency.json on every run.
 """
 
 from __future__ import annotations
@@ -29,6 +31,7 @@ BENCHES = [
     "fig14_s3fifo",  # Fig. 14
     "fig_future_systems",  # Sec. 6: cores x disk speed, c-server disk
     "fig_delayed_hits",  # beyond-paper: miss coalescing / delayed hits
+    "fig_latency",  # beyond-paper: open-loop response time / SLO p*
     "table2_classify",  # Tables 1-2
     "bypass_mitigation",  # Sec. 5.2
     "serving_integration",  # beyond-paper: prefix-cache controller at pod scale
@@ -51,6 +54,7 @@ def main() -> None:
     failures = []
     bench_seconds = {}
     replay = None
+    latency = None
     for name in BENCHES:
         if only and name not in only:
             continue
@@ -62,6 +66,8 @@ def main() -> None:
             bench_seconds[name] = time.time() - t0
             if name == "replay_bench":
                 replay = result
+            if name == "fig_latency":
+                latency = result
             print(f"[{name}: ok in {bench_seconds[name]:.1f}s]", flush=True)
         except Exception:
             bench_seconds[name] = time.time() - t0
@@ -72,6 +78,8 @@ def main() -> None:
         payload = {"bench_seconds": bench_seconds, "failures": failures}
         if replay is not None:
             payload["replay"] = replay
+        if latency is not None:
+            payload["latency"] = latency
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"\n[wrote {args.json}]")

@@ -338,28 +338,34 @@ PY_POLICIES = {
 }
 
 
-def classify_inflight_py(keys, hits, window: int) -> np.ndarray:
+def classify_inflight_py(keys, hits, window) -> np.ndarray:
     """Reference for :func:`repro.cache.replay.classify_inflight` (one lane).
 
     Same in-flight-window semantics — a true miss on key k at index t
     starts a fetch outstanding through index t + window; any request for k
     inside that window is a delayed hit — as a dict walk instead of a
-    vmapped scan.  Differential oracle for the JAX classifier.
+    vmapped scan.  ``window`` is a scalar or a (T,) array of per-request
+    windows (each true miss's fetch carries its own latency).
+    Differential oracle for the JAX classifier.
     """
     keys = np.asarray(keys)
     hits = np.asarray(hits, bool)
     if keys.shape != hits.shape or keys.ndim != 1:
         raise ValueError("keys and hits must be matching 1-D arrays")
+    windows = np.broadcast_to(np.asarray(window, np.int64), keys.shape)
+    if np.any(windows < 0):
+        raise ValueError("window must be >= 0")
     from repro.cache.replay import DELAYED_HIT, TRUE_HIT, TRUE_MISS
 
-    last_fetch: dict = {}
+    expiry: dict = {}  # key -> last index its outstanding fetch covers
     out = np.empty(len(keys), np.int8)
-    for t, (k, h) in enumerate(zip(keys.tolist(), hits.tolist())):
-        if k in last_fetch and t - last_fetch[k] <= window:
+    for t, (k, h, w) in enumerate(zip(keys.tolist(), hits.tolist(),
+                                      windows.tolist())):
+        if k in expiry and t <= expiry[k]:
             out[t] = DELAYED_HIT
         elif h:
             out[t] = TRUE_HIT
         else:
             out[t] = TRUE_MISS
-            last_fetch[k] = t
+            expiry[k] = t + w
     return out

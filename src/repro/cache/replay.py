@@ -230,31 +230,38 @@ TRUE_MISS, TRUE_HIT, DELAYED_HIT = 0, 1, 2
 _FAR_PAST = np.int32(-(2**30))  # "no fetch ever" sentinel for last-fetch times
 
 
-def _classify_lane(keys, hits, window, key_space_arr):
-    """Scan one (T,) lane: per-request {true miss, true hit, delayed hit}."""
+def _classify_lane(keys, hits, windows, key_space_arr):
+    """Scan one (T,) lane: per-request {true miss, true hit, delayed hit}.
+
+    The carried state is the per-key fetch *expiry* index (the fetch that
+    started at t with window w stays outstanding through t + w) — for a
+    scalar window this is exactly the original last-fetch-time semantics,
+    and it lets every true miss carry its own window (per-request miss
+    latencies drawn from the disk service distribution).
+    """
     T = keys.shape[0]
 
-    def step(last_fetch, x):
-        t, k, h = x
-        outstanding = (t - last_fetch[k]) <= window
+    def step(expiry, x):
+        t, k, h, w = x
+        outstanding = t <= expiry[k]
         cls = jnp.where(outstanding, DELAYED_HIT,
                         jnp.where(h, TRUE_HIT, TRUE_MISS))
         starts_fetch = (~outstanding) & (~h)
-        last_fetch = jnp.where(
-            starts_fetch, last_fetch.at[k].set(t), last_fetch
+        expiry = jnp.where(
+            starts_fetch, expiry.at[k].set(t + w), expiry
         )
-        return last_fetch, cls.astype(jnp.int8)
+        return expiry, cls.astype(jnp.int8)
 
-    last0 = jnp.full_like(key_space_arr, _FAR_PAST)
+    exp0 = jnp.full_like(key_space_arr, _FAR_PAST)
     ts = jnp.arange(T, dtype=jnp.int32)
-    _, cls = lax.scan(step, last0, (ts, keys, hits))
+    _, cls = lax.scan(step, exp0, (ts, keys, hits, windows))
     return cls
 
 
 _classify_grid = jax.jit(jax.vmap(_classify_lane, in_axes=(0, 0, None, None)))
 
 
-def classify_inflight(keys, hits, window: int,
+def classify_inflight(keys, hits, window,
                       key_space: int | None = None) -> np.ndarray:
     """Classify each replayed request as true hit / delayed hit / true miss.
 
@@ -262,7 +269,11 @@ def classify_inflight(keys, hits, window: int,
     a miss at request index ``t`` initiates a backing-store fetch that
     stays outstanding for the next ``window`` requests (``window`` is the
     miss latency expressed in requests — in a closed system running at
-    throughput X with fetch latency L, ``window ~= X * L``).  Any request
+    throughput X with fetch latency L, ``window ~= X * L``).  ``window``
+    is a scalar, or a ``(T,)`` array of per-request windows (each true
+    miss's fetch carries its own latency, e.g. drawn from the disk service
+    distribution via ``repro.core.harness.miss_window_stream``); an
+    all-``W`` array classifies identically to the scalar ``W``.  Any request
     for the same key at index ``s`` with ``s - t <= window`` — whether the
     policy calls it a hit (the fill has not landed yet, so the "hit" in
     fact waits on the in-flight fetch) or a miss (the key was already
@@ -290,8 +301,15 @@ def classify_inflight(keys, hits, window: int,
     """
     keys = np.asarray(keys)
     hits_np = np.asarray(hits)
-    if window < 0:
+    windows = np.asarray(window, dtype=np.int32)
+    if windows.ndim > 1:
+        raise ValueError(f"window must be a scalar or (T,), got {windows.shape}")
+    if np.any(windows < 0):
         raise ValueError("window must be >= 0")
+    if windows.ndim == 1 and windows.shape[0] != keys.shape[-1]:
+        raise ValueError(f"per-request windows {windows.shape} vs "
+                         f"{keys.shape[-1]} requests")
+    windows = np.broadcast_to(windows, (keys.shape[-1],))
     key_space = _resolve_key_space(keys, key_space)
     if keys.ndim == 1:
         keys2 = keys[None, :]
@@ -315,7 +333,7 @@ def classify_inflight(keys, hits, window: int,
     kj = jnp.asarray(keys2, jnp.int32)
     hj = jnp.asarray(flat, bool)
     lanes = _classify_grid(
-        kj[jnp.asarray(key_lane)], hj, jnp.int32(window),
+        kj[jnp.asarray(key_lane)], hj, jnp.asarray(windows, jnp.int32),
         jnp.zeros((key_space,), jnp.int32),
     )
     return np.asarray(lanes).reshape(hits_np.shape)

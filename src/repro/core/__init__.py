@@ -19,6 +19,7 @@ from repro.core.queueing import (
     exponential_analogue,
     optimal_bypass_beta,
     sigma_of,
+    zipf_flow_weights,
 )
 from repro.core.policy_models import (
     POLICY_BUILDERS,
@@ -45,7 +46,7 @@ from repro.core.classify import (
 __all__ = [
     "QUEUE", "THINK", "Branch", "ClosedNetwork", "Station",
     "bypass_network", "coalesced_network", "exponential_analogue",
-    "optimal_bypass_beta", "sigma_of",
+    "optimal_bypass_beta", "sigma_of", "zipf_flow_weights",
     "POLICY_BUILDERS", "build",
     "lru_network", "fifo_network", "prob_lru_network", "clock_network",
     "slru_network", "s3fifo_network",

@@ -116,6 +116,24 @@ def coin_stream(n: int, seed: int = 0) -> np.ndarray:
     return rng.random(n, dtype=np.float32)
 
 
+def miss_window_stream(n: int, mean_requests: float, seed: int = 0,
+                       dist: str = "exp") -> np.ndarray:
+    """Per-request in-flight windows (miss latencies in requests) drawn
+    from the disk service distribution: ``dist="exp"`` samples
+    Exp(mean_requests) rounded to whole requests, ``"det"`` pins every
+    window at the mean (equivalent to the scalar ``miss_latency_requests``
+    path).  Third ``SeedSequence(seed)`` substream, so the draws are
+    independent of both the trace and the admission coins while staying
+    reproducible alongside them.
+    """
+    rng = np.random.default_rng(np.random.SeedSequence(seed).spawn(3)[2])
+    if dist == "det":
+        return np.full(n, int(round(mean_requests)), dtype=np.int64)
+    if dist != "exp":
+        raise ValueError(f"unknown window dist {dist!r} (want 'exp' or 'det')")
+    return np.round(rng.exponential(mean_requests, n)).astype(np.int64)
+
+
 @dataclasses.dataclass(frozen=True)
 class CacheMeasurement:
     policy: str
@@ -126,7 +144,8 @@ class CacheMeasurement:
     profiles: dict  # (hit, ops) -> frequency
     network: ClosedNetwork  # empirical-profile network
     # delayed-hit classification under an in-flight window of
-    # ``miss_latency_requests`` requests (0 = classification disabled):
+    # ``miss_latency_requests`` requests (0 = classification disabled;
+    # the mean window when per-request windows were used):
     # post-warmup fractions of (true miss, true hit, delayed hit).
     miss_latency_requests: int = 0
     class_fracs: np.ndarray | None = None
@@ -333,9 +352,12 @@ def parameterized_network(
                          tuple(branches), mpl)
 
 
-def _classify(trace, hits, window: int, key_space: int, backend: str,
+def _classify(trace, hits, window, key_space: int, backend: str,
               warmup_frac: float = 0.25) -> np.ndarray:
-    """Post-warmup (true miss, true hit, delayed hit) fractions."""
+    """Post-warmup (true miss, true hit, delayed hit) fractions.
+
+    ``window`` is a scalar or a (T,) per-request array — passed straight
+    to the classifiers, which share the fetch-expiry semantics."""
     if backend == "jax":
         from repro.cache.replay import classify_inflight  # lazy: pulls in jax
 
@@ -372,8 +394,11 @@ def measure_cache(
     :func:`repro.cache.replay.classify_inflight`): the resulting
     ``class_fracs`` / ``coalesce_sigma`` on the returned measurement feed
     the delayed-hits variants of the model (prong A) and simulator
-    (prong B).  With 0 the measurement is bit-identical to the
-    non-coalesced path.
+    (prong B).  A ``(n_requests,)`` array gives every request its own
+    window (per-request miss latencies, e.g. from
+    :func:`miss_window_stream`); the stored ``miss_latency_requests``
+    then records the mean.  With 0 the measurement is bit-identical to
+    the non-coalesced path.
     """
     trace = zipf_trace(n_requests, key_space, theta, seed)
     hits, ops = run_cache_trace(policy, capacity, trace, seed=seed,
@@ -385,11 +410,13 @@ def measure_cache(
     meas = empirical_network(policy, hits, ops, service=service, mpl=mpl,
                              disk_servers=disk_servers)
     meas = dataclasses.replace(meas, capacity=capacity)
-    if miss_latency_requests:
+    if np.any(miss_latency_requests):
         fracs = _classify(trace, hits, miss_latency_requests, key_space,
                           backend)
         meas = dataclasses.replace(
-            meas, miss_latency_requests=int(miss_latency_requests),
+            meas,
+            miss_latency_requests=int(round(float(
+                np.mean(miss_latency_requests)))),
             class_fracs=fracs,
         )
     return meas
@@ -420,9 +447,11 @@ def sweep_cache_sizes(
     backends consume identical trace/coin streams and return identical
     arrays, so either can cross-check the other.
 
-    ``miss_latency_requests`` — a scalar, or one window per size (in a
+    ``miss_latency_requests`` — a scalar, one window per size (in a
     closed system the window ~= X·L *depends on the operating point*, so
-    per-size windows let one sweep carry its own calibration) — turns on
+    per-size windows let one sweep carry its own calibration), or one
+    window per *request* (an ``(n_requests,)`` array, e.g. from
+    :func:`miss_window_stream`, applied to every size) — turns on
     delayed-hit classification and adds per-size columns: ``p_true_hit``,
     ``p_delayed``, ``sigma`` (measured coalescing factor) and
     ``x_bound_coalesced`` (the bound with delayed hits skipping the disk
@@ -436,9 +465,17 @@ def sweep_cache_sizes(
     if backend not in ("py", "jax"):
         raise ValueError(f"unknown backend {backend!r} (want 'py' or 'jax')")
     sizes = [int(c) for c in sizes]
-    windows = (list(np.broadcast_to(miss_latency_requests, len(sizes))
-                    .astype(int)))
-    classify = any(w > 0 for w in windows)
+    mlr = np.asarray(miss_latency_requests)
+    if mlr.ndim == 1 and mlr.size == n_requests:
+        if mlr.size == len(sizes):
+            raise ValueError(
+                f"ambiguous miss_latency_requests: length {mlr.size} matches "
+                "both len(sizes) (per-size windows) and n_requests "
+                "(per-request windows) — change one of them")
+        windows = [mlr] * len(sizes)  # per-request windows, every size
+    else:
+        windows = list(np.broadcast_to(mlr, len(sizes)).astype(int))
+    classify = any(np.any(w) for w in windows)
     out: dict = {"size": [], "p_hit": [], "x_bound": [], "x_sim": [],
                  "p_true_hit": [], "p_delayed": [], "sigma": [],
                  "x_bound_coalesced": []}
@@ -473,11 +510,13 @@ def sweep_cache_sizes(
                                      service=service, mpl=mpl,
                                      disk_servers=disk_servers)
             meas = dataclasses.replace(meas, capacity=c)
-            if w:
+            if np.any(w):
                 fracs = _classify(trace, np.asarray(hits_g[i]), w,
                                   key_space, backend)
                 meas = dataclasses.replace(
-                    meas, miss_latency_requests=int(w), class_fracs=fracs,
+                    meas,
+                    miss_latency_requests=int(round(float(np.mean(w)))),
+                    class_fracs=fracs,
                 )
             yield meas
 

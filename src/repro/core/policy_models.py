@@ -331,7 +331,8 @@ POLICY_BUILDERS = {
 
 def build(policy: str, disk_us: float = 100.0, mpl: int = 72,
           coalesce_flows: int = 0, coalesce_window_us=None,
-          coalesce_sigma=None, **kw) -> ClosedNetwork:
+          coalesce_sigma=None, coalesce_window_mode: str = "service",
+          coalesce_flow_theta: float = 0.0, **kw) -> ClosedNetwork:
     """Build a policy network, optionally with miss coalescing applied.
 
     ``coalesce_flows > 0`` wraps the network in
@@ -341,12 +342,19 @@ def build(policy: str, disk_us: float = 100.0, mpl: int = 72,
     the in-flight window (default: the disk service time itself) and
     ``coalesce_sigma`` pins the coalescing factor (e.g. to a prong-C
     measured value) instead of solving it from the window.
+    ``coalesce_window_mode="mva"`` extends the default window to the
+    disk's MVA residence (service + estimated wait — what a bounded
+    ``disk_servers`` fetch actually stays outstanding for), and
+    ``coalesce_flow_theta`` skews the hot-key flow ensemble Zipf-style to
+    match a trace's popularity skew.
     """
     net = POLICY_BUILDERS[policy](disk_us=disk_us, mpl=mpl, **kw)
     if coalesce_flows:
         net = coalesced_network(net, flows=coalesce_flows,
                                 window_us=coalesce_window_us,
-                                sigma=coalesce_sigma)
+                                sigma=coalesce_sigma,
+                                window_mode=coalesce_window_mode,
+                                flow_theta=coalesce_flow_theta)
     return net
 
 

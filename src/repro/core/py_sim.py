@@ -6,9 +6,16 @@ semantics, independent implementation.  Used by tests and for debugging;
 
 Supports the same miss-coalescing (delayed hits) semantics as the JAX
 simulator: with ``coalesce_flows > 0`` a job arriving at the ``disk``
-station samples a flow (hot key); if a fetch for that flow is already in
-flight it parks on an outstanding-miss table — no duplicate disk I/O, no
-bounded-``disk_servers`` slot — and completes when the fill lands.
+station samples a flow (hot key, uniformly or Zipf(``coalesce_theta``)-
+weighted); if a fetch for that flow is already in flight it parks on an
+outstanding-miss table — no duplicate disk I/O, no bounded-``disk_servers``
+slot — and completes when the fill lands.
+
+Supports the open-loop latency mode as well (``arrival_rate`` set):
+Poisson arrivals into a bounded pool of ``max_in_system`` job slots, with
+per-request sojourns and true-hit / true-miss / delayed-hit classes
+recorded per completion — the differential twin of
+``simulate_network(arrival_rate=...)``.
 """
 
 from __future__ import annotations
@@ -18,8 +25,23 @@ import random
 
 import numpy as np
 
-from repro.core.queueing import ClosedNetwork
-from repro.core.simulator import compile_network
+from repro.core.queueing import ClosedNetwork, zipf_flow_weights
+from repro.core.simulator import (
+    CLS_DELAYED,
+    CLS_HIT,
+    CLS_MISS,
+    compile_network,
+)
+
+
+def _flow_sampler(rng: random.Random, flows: int, theta: float):
+    """Uniform (theta=0) or Zipf(theta)-weighted flow draw, cf.
+    simulator._sample_flow — same weight convention as the model's
+    queueing.zipf_flow_weights."""
+    if theta == 0.0:
+        return lambda: rng.randrange(flows)
+    cum = np.cumsum(zipf_flow_weights(flows, theta))
+    return lambda: int(np.searchsorted(cum, rng.random()))
 
 
 def simulate_py(
@@ -29,7 +51,10 @@ def simulate_py(
     seed: int = 0,
     warmup_frac: float = 0.25,
     coalesce_flows: int = 0,
+    coalesce_theta: float = 0.0,
     full: bool = False,
+    arrival_rate: float | None = None,
+    max_in_system: int = 128,
 ):
     """Simulate and return throughput in requests/µs.
 
@@ -41,6 +66,14 @@ def simulate_py(
     ``delayed_frac`` (fraction of measured completions that were delayed
     hits) and ``delayed`` (their count); the bare float return stays the
     default for backward compatibility.
+
+    With ``arrival_rate`` set the loop runs **open**: Poisson arrivals at
+    that rate (requests/µs) enter a pool of ``max_in_system`` slots
+    (arrivals beyond it are dropped and counted), each completion records
+    its sojourn and class, and the return value is always a dict with the
+    sojourn statistics (``sojourn_mean``/``sojourn_p50``/``sojourn_p99``,
+    ``class_frac``, ``class_sojourn``, ``drop_frac`` — the oracle twin of
+    :class:`repro.core.simulator.OpenSimResult`).
     """
     rng = random.Random(seed)
     spec = compile_network(net, p_hit)
@@ -52,9 +85,12 @@ def simulate_py(
     servers = np.asarray(spec.servers)
     disk_idx = int(spec.disk_idx)
     K = len(is_q)
-    N = net.mpl
     if coalesce_flows and disk_idx < 0:
         raise ValueError(f"{net.name} has no 'disk' station to coalesce on")
+    sample_flow = (
+        _flow_sampler(rng, coalesce_flows, coalesce_theta)
+        if coalesce_flows else None
+    )
 
     def sample(k: int) -> float:
         if dist[k] == 1:
@@ -64,6 +100,14 @@ def simulate_py(
     def new_branch() -> int:
         return int(np.searchsorted(cum, rng.random()))
 
+    if arrival_rate is not None:
+        return _simulate_py_open(
+            rng, is_q, svc, dist, cum, visits, servers, disk_idx, sample,
+            new_branch, sample_flow, n_requests, warmup_frac,
+            coalesce_flows, float(arrival_rate), max_in_system,
+        )
+
+    N = net.mpl
     heap: list = []
     queues = {k: [] for k in range(K) if is_q[k]}
     # busy count per queue station: jobs in service, <= servers[k] (matches
@@ -127,7 +171,7 @@ def simulate_py(
         job_pos[j] = pos
         k2 = int(visits[b, pos])
         if coalesce_flows and k2 == disk_idx:
-            f = rng.randrange(coalesce_flows)
+            f = sample_flow()
             job_flow[j] = f
             if f in leader:  # fetch already in flight: park, no new I/O
                 parked.setdefault(f, []).append(j)
@@ -148,4 +192,119 @@ def simulate_py(
         "x": x,
         "delayed": delayed - warm_d,
         "delayed_frac": (delayed - warm_d) / n_meas,
+    }
+
+
+def _simulate_py_open(
+    rng, is_q, svc, dist, cum, visits, servers, disk_idx, sample,
+    new_branch, sample_flow, n_requests, warmup_frac, coalesce_flows,
+    arrival_rate, max_in_system,
+):
+    """Open-loop heapq twin of simulator._simulate_open (same semantics:
+    Poisson arrivals into a bounded slot pool, sojourn + class records per
+    completion, parked delayed hits completing at fill time)."""
+    K = len(is_q)
+    N = max_in_system
+    branch_has_disk = (visits == disk_idx).any(axis=1) & (disk_idx >= 0)
+
+    heap: list = []  # (t, j, k); j == -1 marks an arrival event
+    queues = {k: [] for k in range(K) if is_q[k]}
+    busy = {k: 0 for k in range(K) if is_q[k]}
+    leader: dict = {}
+    parked: dict = {}
+    job_flow = [-1] * N
+    job_branch = [0] * N
+    job_pos = [0] * N
+    arrive_t = [0.0] * N
+    free = list(range(N))
+
+    records: list = []  # (sojourn, class) in completion order
+    done = 0
+    delayed = 0
+    dropped = 0
+    warm_target = int(n_requests * warmup_frac)
+    warm_c = warm_t = None
+
+    def record(j: int, now: float, c: int) -> None:
+        nonlocal done, warm_c, warm_t
+        done += 1
+        records.append((now - arrive_t[j], c))
+        free.append(j)
+        if warm_c is None and done >= warm_target:
+            warm_c, warm_t = done, now
+
+    heapq.heappush(heap, (rng.expovariate(arrival_rate), -1, -1))
+    t = 0.0
+    while done < n_requests:
+        t, j, k = heapq.heappop(heap)
+
+        if j < 0:  # Poisson arrival
+            heapq.heappush(heap, (t + rng.expovariate(arrival_rate), -1, -1))
+            if not free:
+                dropped += 1
+                continue
+            s = free.pop(0)
+            b = new_branch()
+            job_branch[s] = b
+            job_pos[s] = 0
+            arrive_t[s] = t
+            k0 = int(visits[b, 0])  # think station by network validation
+            heapq.heappush(heap, (t + sample(k0), s, k0))
+            continue
+
+        # MSHR fill: parked delayed hits complete with the fill.
+        if coalesce_flows and k == disk_idx and job_flow[j] >= 0:
+            f = job_flow[j]
+            for w in parked.pop(f, []):
+                delayed += 1
+                job_flow[w] = -1
+                record(w, t, CLS_DELAYED)
+            del leader[f]
+            job_flow[j] = -1
+
+        if is_q[k]:
+            if queues[k]:
+                w = queues[k].pop(0)
+                heapq.heappush(heap, (t + sample(k), w, k))
+            else:
+                busy[k] -= 1
+        b = job_branch[j]
+        pos = job_pos[j] + 1
+        if pos >= visits.shape[1] or visits[b, pos] < 0:
+            record(j, t, CLS_MISS if branch_has_disk[b] else CLS_HIT)
+            continue
+        job_pos[j] = pos
+        k2 = int(visits[b, pos])
+        if coalesce_flows and k2 == disk_idx:
+            f = sample_flow()
+            job_flow[j] = f
+            if f in leader:
+                parked.setdefault(f, []).append(j)
+                continue
+            leader[f] = j
+        if is_q[k2]:
+            if busy[k2] >= servers[k2]:
+                queues[k2].append(j)
+                continue
+            busy[k2] += 1
+        heapq.heappush(heap, (t + sample(k2), j, k2))
+
+    n_meas = done - warm_c
+    soj = np.array([r[0] for r in records[warm_c:]])
+    cls = np.array([r[1] for r in records[warm_c:]])
+    class_frac = np.array([(cls == c).mean() for c in range(3)])
+    class_soj = np.array([
+        soj[cls == c].mean() if (cls == c).any() else np.nan
+        for c in range(3)
+    ])
+    return {
+        "x": n_meas / (t - warm_t),
+        "sojourn_mean": float(soj.mean()),
+        "sojourn_p50": float(np.percentile(soj, 50)),
+        "sojourn_p99": float(np.percentile(soj, 99)),
+        "class_frac": class_frac,
+        "class_sojourn": class_soj,
+        "delayed_frac": float((cls == CLS_DELAYED).mean()),
+        "dropped": dropped,
+        "drop_frac": dropped / max(done + dropped, 1),
     }

@@ -430,12 +430,29 @@ def sigma_of(net: ClosedNetwork, p_hit: float) -> float:
     return delayed / fills if fills > 0 else 0.0
 
 
+def zipf_flow_weights(flows: int, theta: float = 0.0) -> np.ndarray:
+    """Per-flow popularity weights of the coalescing hot-key ensemble.
+
+    ``w_f ∝ (f+1)^-theta`` normalized to sum 1 (descending); theta=0 is the
+    uniform ensemble the original fixed point assumed.  Matching theta to a
+    trace's Zipf skew makes the analytic sigma predictable from the per-key
+    miss spectrum instead of an effective flow count — the weights are the
+    miss-probability shares of the hot keys.
+    """
+    if flows < 1:
+        raise ValueError("flows must be >= 1")
+    w = np.arange(1, flows + 1, dtype=np.float64) ** (-float(theta))
+    return w / w.sum()
+
+
 def coalesced_network(
     net: ClosedNetwork,
     flows: int = 64,
     window_us: ServiceFn | None = None,
     sigma: ProbFn | None = None,
     disk_name: str = "disk",
+    window_mode: str = "service",
+    flow_theta: float = 0.0,
 ) -> ClosedNetwork:
     """Miss-coalescing transform: concurrent misses on one key share a fetch.
 
@@ -463,6 +480,20 @@ def coalesced_network(
     (a fetch is in flight exactly while the disk serves it).  May be a
     callable of ``p_hit`` like every other service time.
 
+    ``window_mode="mva"`` makes the default window *queueing-aware*: with a
+    bounded-I/O-depth disk (``disk_servers`` > 0) a fetch stays outstanding
+    through its queueing delay too, so the window becomes the disk's
+    per-visit MVA residence time (service + estimated wait, re-solved
+    inside the sigma fixed point) instead of the bare service.  With the
+    paper's infinite-server disk the residence equals the service and the
+    mode changes nothing.  An explicit ``window_us`` always wins.
+
+    ``flow_theta`` skews the hot-key flow ensemble Zipf(theta)-style (see
+    :func:`zipf_flow_weights`): the fixed point becomes the weight-mixture
+    ``sigma = sum_f w_f * mu_f L / (1 + mu_f L)`` with per-flow miss rate
+    ``mu_f = X * P{miss} * w_f``.  theta=0 reproduces the original uniform
+    formula exactly.
+
     ``sigma`` is the coalescing factor — the fraction of would-be misses
     that find a fetch for their key already in flight.  Pass a constant or
     a callable (e.g. the measured fraction from prong C's
@@ -487,14 +518,17 @@ def coalesced_network(
     """
     if not _disk_branches(net, disk_name):
         raise ValueError(f"{net.name} has no branch visiting {disk_name!r}")
-    if flows < 1:
-        raise ValueError("flows must be >= 1")
+    if window_mode not in ("service", "mva"):
+        raise ValueError(f"unknown window_mode {window_mode!r}")
+    weights = zipf_flow_weights(flows, flow_theta)
     disk = net.station(disk_name)
     window_fn = _as_fn(window_us) if window_us is not None else disk.mean_service
+    use_mva = window_mode == "mva" and window_us is None
 
-    def build(sigma_fn: Callable[[float], float]) -> ClosedNetwork:
+    def build(sigma_fn: Callable[[float], float],
+              window_eff: Callable[[float], float]) -> ClosedNetwork:
         stations = net.stations + (
-            Station(INFLIGHT, THINK, lambda p: 0.5 * window_fn(p), dist="exp"),
+            Station(INFLIGHT, THINK, lambda p: 0.5 * window_eff(p), dist="exp"),
         )
         branches = []
         for b in net.branches:
@@ -522,36 +556,71 @@ def coalesced_network(
             branches=tuple(branches),
         )
 
+    def mva_window(p: float, net_s: ClosedNetwork, base_L: float) -> float:
+        """Per-visit disk residence (service + estimated wait) of the
+        coalesced network at its current sigma — the queueing-aware
+        in-flight window.  A think-station disk has no queueing term, so
+        this degenerates to the base window."""
+        v = net_s.visit_counts(p).get(disk_name, 0.0)
+        if v <= 0.0:
+            return base_L
+        X, Q, _ = net_s.mva(p, mode="auto")
+        if disk_name not in Q or X <= 0.0:
+            return base_L
+        # Little's law per visit: residence = Q_disk / (X * V_disk).
+        return max(base_L, Q[disk_name] / (X * v))
+
     if sigma is not None:
-        return build(_as_fn(sigma))
+        sfn = _as_fn(sigma)
+        if not use_mva:
+            return build(sfn, window_fn)
+        memo_w: dict = {}
+
+        def window_eff(p: float) -> float:
+            key = round(float(p), 12)
+            if key not in memo_w:
+                memo_w[key] = mva_window(
+                    float(p), build(sfn, window_fn), float(window_fn(p))
+                )
+            return memo_w[key]
+
+        return build(sfn, window_eff)
 
     def miss_share(p: float) -> float:
         return sum(b.probability(p) for b in _disk_branches(net, disk_name))
 
-    memo: dict = {}
+    memo: dict = {}  # p -> (sigma, effective window)
 
-    def sigma_fn(p: float) -> float:
+    def solve(p: float) -> tuple:
         key = round(float(p), 12)
         if key in memo:
             return memo[key]
-        L = float(window_fn(p))
+        base_L = float(window_fn(p))
+        L = base_L
         m = miss_share(p)
         s = 0.0
-        if L > 0.0 and m > 0.0:
+        if base_L > 0.0 and m > 0.0:
             for _ in range(100):
-                X = float(
-                    build(lambda _p, s=s: s).throughput_upper(p, tail_mode="zero")
-                )
-                mu = X * m / flows
-                s_new = mu * L / (1.0 + mu * L)
+                net_s = build(lambda _p, s=s: s, lambda _p, L=L: L)
+                X = float(net_s.throughput_upper(p, tail_mode="zero"))
+                if use_mva:
+                    L = mva_window(p, net_s, base_L)
+                if flow_theta == 0.0:
+                    mu = X * m / flows
+                    s_new = mu * L / (1.0 + mu * L)
+                else:
+                    mu_f = X * m * weights
+                    s_new = float((weights * mu_f * L / (1.0 + mu_f * L)).sum())
                 if abs(s_new - s) < 1e-12:
                     s = s_new
                     break
-                s = s_new
-        memo[key] = s
-        return s
+                # the MVA window couples L to sigma; damp that richer fixed
+                # point (plain iteration stays exact for the service window)
+                s = 0.5 * (s + s_new) if use_mva else s_new
+        memo[key] = (s, L)
+        return memo[key]
 
-    return build(sigma_fn)
+    return build(lambda p: solve(p)[0], lambda p: solve(p)[1])
 
 
 # --------------------------------------------------------------------------

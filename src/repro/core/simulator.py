@@ -32,6 +32,19 @@ Design notes
 
 One loop iteration processes exactly one event (a service completion);
 a disk completion may additionally retire any parked delayed hits.
+
+* **Open loop** (``arrival_rate`` set on :func:`simulate_network`).  The
+  same networks under Poisson arrivals: jobs enter at rate lambda, flow
+  through their branch route, and *leave* — the latency prong's
+  arrival-driven mode.  Every completion records a per-request sojourn
+  (arrival to completion, including time parked on the MSHR table) and a
+  class (true hit / true miss / delayed hit), carried through the scan in
+  a fixed record buffer, so the simulator returns mean/percentile response
+  times and per-class latency breakdowns instead of just throughput.
+  Jobs live in a pool of ``max_in_system`` slots; an arrival finding no
+  free slot is counted as dropped (finite-capacity system — keep
+  ``drop_frac`` at 0 by sizing the pool, or you are measuring admission
+  control, not the queue).
 """
 
 from __future__ import annotations
@@ -51,6 +64,12 @@ INF_NS = np.int32(2**31 - 1)
 BIG_SEQ = np.int32(2**31 - 1)
 
 _DIST_IDS = {"det": 0, "exp": 1, "pareto": 2}
+
+# Sojourn classes, value-compatible with repro.cache.replay's classifier
+# (TRUE_MISS/TRUE_HIT/DELAYED_HIT) so prong B and prong C breakdowns line up.
+CLS_MISS = 0
+CLS_HIT = 1
+CLS_DELAYED = 2
 
 
 class SimSpec(NamedTuple):
@@ -161,6 +180,24 @@ def _sample_service_ns(key, spec: SimSpec, k) -> jnp.ndarray:
     return jnp.maximum(jnp.round(unit * mean), 1.0).astype(jnp.int32)
 
 
+def _sample_flow(key, n_flows: int, theta: float):
+    """Sample the hot-key flow a miss fetches.  theta=0 keeps the original
+    uniform ``randint`` draw (bit-identical RNG stream); theta>0 samples
+    Zipf(theta)-weighted flows via inverse CDF over the model's own weight
+    vector (queueing.zipf_flow_weights) — the ensemble matched to a skewed
+    trace, so measured coalescing is predictable from the per-key miss
+    spectrum.  ``n_flows``/``theta`` are static, so the CDF constant-folds
+    into the compiled kernel."""
+    if theta == 0.0:
+        return jax.random.randint(key, (), 0, n_flows)
+    from repro.core.queueing import zipf_flow_weights
+
+    cum = jnp.asarray(np.cumsum(zipf_flow_weights(n_flows, theta)),
+                      jnp.float32)
+    u = jax.random.uniform(key, ())
+    return jnp.searchsorted(cum, u).astype(jnp.int32)
+
+
 class _SimState(NamedTuple):
     key: jax.Array
     ready_ns: jax.Array  # (N,) i32, INF when waiting in a queue (or parked)
@@ -183,9 +220,10 @@ class _SimState(NamedTuple):
 
 @partial(jax.jit,
          static_argnames=("n_requests", "warmup", "mpl", "max_events",
-                          "n_flows"))
+                          "n_flows", "flow_theta"))
 def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
-              max_events: int, n_flows: int = 0) -> tuple:
+              max_events: int, n_flows: int = 0,
+              flow_theta: float = 0.0) -> tuple:
     N = mpl
     F = max(n_flows, 1)  # leader-table shape must be static even when unused
     key = jax.random.PRNGKey(seed)
@@ -324,7 +362,7 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             # park on the outstanding-miss table — no duplicate disk I/O,
             # no I/O-depth slot, no queue position.
             at_disk = k_next == spec.disk_idx
-            f_new = jax.random.randint(k_flow, (), 0, n_flows)
+            f_new = _sample_flow(k_flow, n_flows, flow_theta)
             parks = at_disk & (leader[f_new] >= 0)
             starts_now = ((~is_q) | has_slot) & ~parks
             waits = is_q & ~has_slot & ~parks
@@ -377,6 +415,266 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
     return x, state.completed, events, delayed_frac
 
 
+class _OpenState(NamedTuple):
+    key: jax.Array
+    ready_ns: jax.Array  # (N,) i32, INF when idle / waiting / parked
+    station: jax.Array  # (N,) i32, -1 marks a free slot
+    branch: jax.Array  # (N,) i32
+    pos: jax.Array  # (N,) i32
+    enq_seq: jax.Array  # (N,) i32, BIG when not waiting
+    busy_count: jax.Array  # (K,) i32
+    seq_ctr: jax.Array  # i32
+    next_arrival_ns: jax.Array  # i32, rebased with the job clocks
+    age_us: jax.Array  # (N,) f32 time the slot's job has been in system
+    completed: jax.Array  # i32
+    elapsed_us: jax.Array  # f32
+    warm_completed: jax.Array  # i32
+    warm_elapsed_us: jax.Array  # f32
+    dropped: jax.Array  # i32 arrivals that found no free slot
+    flow: jax.Array  # (N,) i32 MSHR flow, -1 otherwise
+    leader: jax.Array  # (F,) i32
+    delayed: jax.Array  # i32
+    warm_delayed: jax.Array  # i32
+    soj_us: jax.Array  # (R,) f32 per-completion sojourn records
+    cls: jax.Array  # (R,) i8 per-completion class records
+
+
+@partial(jax.jit,
+         static_argnames=("n_requests", "warmup", "max_in_system",
+                          "max_events", "n_flows", "flow_theta"))
+def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
+                   warmup: int, max_in_system: int, max_events: int,
+                   n_flows: int = 0, flow_theta: float = 0.0) -> tuple:
+    """Arrival-driven (open-loop) twin of :func:`_simulate`.
+
+    One extra event type — a Poisson arrival — competes with service
+    completions in the same min-reduction; a completing request *leaves*
+    (its slot frees) instead of restarting, and its sojourn + class land in
+    a fixed record buffer indexed by completion order.  MSHR semantics
+    match the closed kernel: parked delayed hits complete at fill time,
+    with the parked interval included in their recorded sojourn.
+
+    Sojourns are accumulated per slot as a sum of event increments (like
+    the global elapsed clock) rather than as differences of absolute f32
+    timestamps — the increments are O(service time), so the error stays
+    ~1e-4 *relative* to the sojourn regardless of how long the run gets.
+    """
+    N = max_in_system
+    F = max(n_flows, 1)
+    R = n_requests + N  # a fill can complete up to N-1 parked jobs past n_requests
+    key = jax.random.PRNGKey(seed)
+    branch_has_disk = (
+        (spec.visits == spec.disk_idx).any(axis=1) & (spec.disk_idx >= 0)
+    )
+
+    def sample_branch(key):
+        u = jax.random.uniform(key, ())
+        return jnp.searchsorted(spec.branch_cum, u).astype(jnp.int32)
+
+    def interarrival(key):
+        u = jax.random.uniform(key, (), minval=1e-7, maxval=1.0 - 1e-7)
+        return jnp.maximum(
+            jnp.round(-jnp.log(u) * arrival_mean_ns), 1.0
+        ).astype(jnp.int32)
+
+    key, k0 = jax.random.split(key)
+    state = _OpenState(
+        key=key,
+        ready_ns=jnp.full((N,), INF_NS),
+        station=jnp.full((N,), -1, jnp.int32),
+        branch=jnp.zeros((N,), jnp.int32),
+        pos=jnp.zeros((N,), jnp.int32),
+        enq_seq=jnp.full((N,), BIG_SEQ),
+        busy_count=jnp.zeros(spec.is_queue.shape, jnp.int32),
+        seq_ctr=jnp.int32(0),
+        next_arrival_ns=interarrival(k0),
+        age_us=jnp.zeros((N,), jnp.float32),
+        completed=jnp.int32(0),
+        elapsed_us=jnp.float32(0.0),
+        warm_completed=jnp.int32(-1),
+        warm_elapsed_us=jnp.float32(0.0),
+        dropped=jnp.int32(0),
+        flow=jnp.full((N,), -1, jnp.int32),
+        leader=jnp.full((F,), -1, jnp.int32),
+        delayed=jnp.int32(0),
+        warm_delayed=jnp.int32(0),
+        soj_us=jnp.zeros((R,), jnp.float32),
+        cls=jnp.zeros((R,), jnp.int8),
+    )
+
+    def cond(carry):
+        state, events = carry
+        return (state.completed < n_requests) & (events < max_events)
+
+    def body(carry):
+        state, events = carry
+        n_keys = 7 if n_flows else 6
+        keys = jax.random.split(state.key, n_keys)
+        key, k_svc1, k_svc2, k_branch, k_svc0, k_ia = keys[:6]
+        k_flow = keys[6] if n_flows else None
+
+        j = jnp.argmin(state.ready_ns).astype(jnp.int32)
+        t_dep = state.ready_ns[j]
+        is_arrival = state.next_arrival_ns <= t_dep
+        t = jnp.minimum(state.next_arrival_ns, t_dep)
+        finite = state.ready_ns < INF_NS
+        ready = jnp.where(finite, state.ready_ns - t, INF_NS)
+        dt_us = t.astype(jnp.float32) * 1e-3
+        elapsed_us = state.elapsed_us + dt_us
+        state = state._replace(
+            key=key, ready_ns=ready,
+            next_arrival_ns=state.next_arrival_ns - t,
+            elapsed_us=elapsed_us,
+            # jobs in system (incl. waiting and MSHR-parked) age by dt
+            age_us=jnp.where(state.station >= 0, state.age_us + dt_us,
+                             state.age_us),
+        )
+
+        def arrive(s: _OpenState) -> _OpenState:
+            free = s.station < 0
+            admit = free.any()
+            slot = jnp.argmax(free).astype(jnp.int32)
+            b = sample_branch(k_branch)
+            st0 = spec.visits[b, 0]  # think station by network validation
+            svc = _sample_service_ns(k_svc0, spec, st0)
+            return s._replace(
+                ready_ns=jnp.where(admit, s.ready_ns.at[slot].set(svc),
+                                   s.ready_ns),
+                station=jnp.where(admit, s.station.at[slot].set(st0),
+                                  s.station),
+                branch=jnp.where(admit, s.branch.at[slot].set(b), s.branch),
+                pos=jnp.where(admit, s.pos.at[slot].set(0), s.pos),
+                age_us=jnp.where(admit, s.age_us.at[slot].set(0.0),
+                                 s.age_us),
+                dropped=s.dropped + (~admit).astype(jnp.int32),
+                next_arrival_ns=interarrival(k_ia),
+            )
+
+        def depart(s: _OpenState) -> _OpenState:
+            ready, station, branch = s.ready_ns, s.station, s.branch
+            pos, enq_seq, busy_count = s.pos, s.enq_seq, s.busy_count
+            flow, leader = s.flow, s.leader
+            completed, delayed = s.completed, s.delayed
+            soj_us, cls = s.soj_us, s.cls
+            k_cur = station[j]
+            now_soj = s.age_us  # (N,) valid for live jobs
+
+            # ---- MSHR fill: parked delayed hits complete at fill time.
+            if n_flows:
+                f_cur = flow[j]
+                fill = (k_cur == spec.disk_idx) & (f_cur >= 0)
+                woken = (flow == f_cur) & fill
+                woken = woken.at[j].set(False)
+                widx = jnp.where(woken, completed + jnp.cumsum(woken) - 1, R)
+                soj_us = soj_us.at[widx].set(now_soj)  # OOB rows dropped
+                cls = cls.at[widx].set(jnp.int8(CLS_DELAYED))
+                n_woken = woken.sum().astype(jnp.int32)
+                completed = completed + n_woken
+                delayed = delayed + n_woken
+                ready = jnp.where(woken, INF_NS, ready)
+                station = jnp.where(woken, -1, station)
+                leader = jnp.where(
+                    fill, leader.at[jnp.maximum(f_cur, 0)].set(-1), leader
+                )
+                flow = jnp.where(
+                    woken | ((jnp.arange(N) == j) & fill), -1, flow
+                )
+
+            # ---- hand the server job j held (if any) to its FIFO successor.
+            def release(args):
+                ready, busy_count, enq_seq = args
+                waiting = (station == k_cur) & (ready == INF_NS)
+                waiting = waiting.at[j].set(False)
+                seqs = jnp.where(waiting, enq_seq, BIG_SEQ)
+                w = jnp.argmin(seqs).astype(jnp.int32)
+                has_waiter = seqs[w] < BIG_SEQ
+                svc = _sample_service_ns(k_svc1, spec, k_cur)
+                ready = jnp.where(has_waiter, ready.at[w].set(svc), ready)
+                enq_seq = jnp.where(has_waiter, enq_seq.at[w].set(BIG_SEQ),
+                                    enq_seq)
+                busy_count = busy_count.at[k_cur].add(
+                    jnp.where(has_waiter, 0, -1).astype(jnp.int32)
+                )
+                return ready, busy_count, enq_seq
+
+            ready, busy_count, enq_seq = jax.lax.cond(
+                spec.is_queue[k_cur], release, lambda a: a,
+                (ready, busy_count, enq_seq),
+            )
+
+            # ---- advance along the route, or record the finished request.
+            nxt_pos = pos[j] + 1
+            L = spec.visits.shape[1]
+            route_next = jnp.where(
+                nxt_pos < L, spec.visits[branch[j], nxt_pos % L], -1
+            )
+            done = route_next < 0
+            jdx = jnp.where(done, completed, R)
+            soj_us = soj_us.at[jdx].set(now_soj[j])
+            cls = cls.at[jdx].set(
+                jnp.where(branch_has_disk[branch[j]], CLS_MISS,
+                          CLS_HIT).astype(jnp.int8)
+            )
+            completed = completed + done.astype(jnp.int32)
+
+            # ---- place j at its next station (no-op masks when done).
+            k_next = jnp.maximum(route_next, 0)
+            svc_next = _sample_service_ns(k_svc2, spec, k_next)
+            is_q = spec.is_queue[k_next] & ~done
+            has_slot = busy_count[k_next] < spec.servers[k_next]
+            if n_flows:
+                at_disk = (route_next == spec.disk_idx) & ~done
+                f_new = _sample_flow(k_flow, n_flows, flow_theta)
+                parks = at_disk & (leader[f_new] >= 0)
+                starts_now = ((~is_q) | has_slot) & ~parks & ~done
+                waits = is_q & ~has_slot & ~parks
+                leader = jnp.where(at_disk & ~parks,
+                                   leader.at[f_new].set(j), leader)
+                flow = flow.at[j].set(jnp.where(at_disk, f_new, flow[j]))
+            else:
+                starts_now = ((~is_q) | has_slot) & ~done
+                waits = is_q & ~has_slot
+            ready = ready.at[j].set(jnp.where(starts_now, svc_next, INF_NS))
+            enq_seq = enq_seq.at[j].set(
+                jnp.where(waits, s.seq_ctr, BIG_SEQ)
+            )
+            seq_ctr = s.seq_ctr + waits.astype(jnp.int32)
+            busy_count = busy_count.at[k_next].add(
+                (is_q & starts_now).astype(jnp.int32)
+            )
+            station = station.at[j].set(jnp.where(done, -1, route_next))
+            pos = pos.at[j].set(jnp.where(done, 0, nxt_pos))
+
+            warm_now = (completed >= warmup) & (s.warm_completed < 0)
+            return s._replace(
+                ready_ns=ready, station=station, branch=branch, pos=pos,
+                enq_seq=enq_seq, busy_count=busy_count, seq_ctr=seq_ctr,
+                completed=completed,
+                warm_completed=jnp.where(warm_now, completed,
+                                         s.warm_completed),
+                warm_elapsed_us=jnp.where(warm_now, s.elapsed_us,
+                                          s.warm_elapsed_us),
+                flow=flow, leader=leader, delayed=delayed,
+                warm_delayed=jnp.where(warm_now, delayed, s.warm_delayed),
+                soj_us=soj_us, cls=cls,
+            )
+
+        new_state = jax.lax.cond(is_arrival, arrive, depart, state)
+        return new_state, events + 1
+
+    state, events = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+
+    n_measured = state.completed - state.warm_completed
+    t_measured = state.elapsed_us - state.warm_elapsed_us
+    x = n_measured.astype(jnp.float32) / jnp.maximum(t_measured, 1e-6)
+    delayed_frac = (
+        (state.delayed - state.warm_delayed).astype(jnp.float32)
+        / jnp.maximum(n_measured, 1).astype(jnp.float32)
+    )
+    return (x, state.completed, events, delayed_frac, state.dropped,
+            state.soj_us, state.cls)
+
+
 @dataclasses.dataclass(frozen=True)
 class SimResult:
     p_hit: np.ndarray
@@ -388,6 +686,36 @@ class SimResult:
     delayed_frac: np.ndarray | None = None
 
 
+@dataclasses.dataclass(frozen=True)
+class OpenSimResult:
+    """Open-loop (arrival-driven) simulation result — the latency prong.
+
+    All sojourn statistics are computed over post-warmup completions;
+    percentiles pool the per-request records of every seed, while
+    ``sojourn_ci95`` is the seed-to-seed CI of the mean.  ``class_*``
+    columns are indexed [true miss, true hit, delayed hit] (the
+    :data:`CLS_MISS`/:data:`CLS_HIT`/:data:`CLS_DELAYED` order, matching
+    the prong-C classifier); ``class_sojourn`` is NaN for an empty class.
+    """
+
+    p_hit: np.ndarray
+    arrival_rate: np.ndarray  # (P,) offered Poisson rate, requests/µs
+    throughput: np.ndarray  # measured completion rate (== arrival_rate
+    ci95: np.ndarray        # when stable and drop-free)
+    sojourn_mean: np.ndarray  # (P,) µs
+    sojourn_ci95: np.ndarray
+    sojourn_p50: np.ndarray
+    sojourn_p99: np.ndarray
+    class_frac: np.ndarray  # (P, 3)
+    class_sojourn: np.ndarray  # (P, 3) mean µs per class
+    delayed_frac: np.ndarray
+    drop_frac: np.ndarray  # arrivals refused for want of a job slot
+    # lanes that exhausted the event budget before completing n_requests
+    # (deep overload): their statistics cover fewer completions than asked.
+    truncated: np.ndarray
+    n_requests: int
+
+
 def simulate_network(
     net: ClosedNetwork,
     p_hits,
@@ -395,7 +723,10 @@ def simulate_network(
     seeds=(0, 1, 2),
     warmup_frac: float = 0.25,
     coalesce_flows: int = 0,
-) -> SimResult:
+    coalesce_theta: float = 0.0,
+    arrival_rate=None,
+    max_in_system: int = 128,
+):
     """Simulate ``net`` over a grid of hit ratios.
 
     The full (p_hit × seed) grid dispatches as ONE vmapped, jitted program:
@@ -410,6 +741,17 @@ def simulate_network(
     event-level counterpart of
     :func:`repro.core.queueing.coalesced_network`; 0 leaves the compiled
     program bit-identical to the non-coalesced simulator.
+    ``coalesce_theta > 0`` samples the hot-key flow Zipf(theta)-weighted
+    instead of uniformly (0 keeps the exact original RNG stream).
+
+    ``arrival_rate`` switches to the **open-loop** latency mode: Poisson
+    arrivals at that rate (a scalar, or one rate per ``p_hits`` entry —
+    e.g. a fixed fraction of the stability boundary) instead of the closed
+    MPL loop, returning an :class:`OpenSimResult` with per-request sojourn
+    statistics (mean / p50 / p99, per-class breakdown including the time
+    delayed hits spend parked on the MSHR table).  ``max_in_system`` sizes
+    the job-slot pool; arrivals beyond it are counted in ``drop_frac``
+    (keep it 0 — size the pool generously relative to lambda·R).
     """
     p_hits = np.atleast_1d(np.asarray(p_hits, dtype=np.float64))
     spec = stack_specs([compile_network(net, float(p)) for p in p_hits])
@@ -417,27 +759,115 @@ def simulate_network(
     # one event per station visit; bound with headroom
     max_events = int(n_requests * (spec.visits.shape[-1] + 2) * 3)
 
-    runner = jax.vmap(
-        lambda sp, seed: _simulate(
-            SimSpec(*sp, mpl=net.mpl), seed, n_requests=n_requests,
-            warmup=warmup, mpl=net.mpl, max_events=max_events,
-            n_flows=coalesce_flows,
-        ),
-        in_axes=(0, 0),
-    )
     P, S = len(p_hits), len(seeds)
-    # strip the static mpl field for vmap; tile (P, ...) -> (S*P, ...)
-    spec_arrays = tuple(
-        jnp.concatenate([a] * S, axis=0) if S > 1 else a for a in spec[:-1]
-    )
+
+    def tile(arrays):
+        # strip the static mpl field for vmap; tile (P, ...) -> (S*P, ...)
+        return tuple(
+            jnp.concatenate([a] * S, axis=0) if S > 1 else a for a in arrays
+        )
+
+    spec_arrays = tile(spec[:-1])
     seed_v = jnp.concatenate(
         [jnp.full((P,), s, jnp.int32) * 1000 + jnp.arange(P, dtype=jnp.int32)
          for s in seeds]
     )
-    out = runner(spec_arrays, seed_v)
-    xs = np.asarray(out[0]).reshape(S, P)
-    dl = np.asarray(out[3]).reshape(S, P)
-    mean = xs.mean(axis=0)
-    ci = 1.96 * xs.std(axis=0, ddof=1) / math.sqrt(len(seeds)) if len(seeds) > 1 else np.zeros_like(mean)
-    return SimResult(p_hit=p_hits, throughput=mean, ci95=ci,
-                     n_requests=n_requests, delayed_frac=dl.mean(axis=0))
+
+    if arrival_rate is None:
+        runner = jax.vmap(
+            lambda sp, seed: _simulate(
+                SimSpec(*sp, mpl=net.mpl), seed, n_requests=n_requests,
+                warmup=warmup, mpl=net.mpl, max_events=max_events,
+                n_flows=coalesce_flows, flow_theta=coalesce_theta,
+            ),
+            in_axes=(0, 0),
+        )
+        out = runner(spec_arrays, seed_v)
+        xs = np.asarray(out[0]).reshape(S, P)
+        dl = np.asarray(out[3]).reshape(S, P)
+        mean = xs.mean(axis=0)
+        ci = 1.96 * xs.std(axis=0, ddof=1) / math.sqrt(len(seeds)) if len(seeds) > 1 else np.zeros_like(mean)
+        return SimResult(p_hit=p_hits, throughput=mean, ci95=ci,
+                         n_requests=n_requests, delayed_frac=dl.mean(axis=0))
+
+    lam = np.broadcast_to(
+        np.asarray(arrival_rate, dtype=np.float64), (P,)
+    ).copy()
+    if np.any(lam <= 0.0):
+        raise ValueError("arrival_rate must be > 0")
+    # arrivals add ~one event per admitted request on top of the visits
+    max_events = int(n_requests * (spec.visits.shape[-1] + 3) * 3)
+    mean_ns = jnp.asarray(
+        np.concatenate([1e3 / lam] * S), jnp.float32
+    ) if S > 1 else jnp.asarray(1e3 / lam, jnp.float32)
+    runner = jax.vmap(
+        lambda sp, seed, m: _simulate_open(
+            SimSpec(*sp, mpl=net.mpl), seed, m, n_requests=n_requests,
+            warmup=warmup, max_in_system=max_in_system,
+            max_events=max_events, n_flows=coalesce_flows,
+            flow_theta=coalesce_theta,
+        ),
+        in_axes=(0, 0, 0),
+    )
+    x, completed, _events, delayed, dropped, soj, cls = runner(
+        spec_arrays, seed_v, mean_ns
+    )
+    xs = np.asarray(x).reshape(S, P)
+    comp = np.asarray(completed).reshape(S, P)
+    dl = np.asarray(delayed).reshape(S, P)
+    drop = np.asarray(dropped).reshape(S, P)
+    soj = np.asarray(soj).reshape(S, P, -1)
+    cls = np.asarray(cls).reshape(S, P, -1)
+
+    mean = np.empty(P)
+    m_ci = np.empty(P)
+    p50 = np.empty(P)
+    p99 = np.empty(P)
+    cfrac = np.zeros((P, 3))
+    csoj = np.full((P, 3), np.nan)
+    for i in range(P):
+        pooled = []
+        per_seed_mean = []
+        for s in range(S):
+            rec = soj[s, i, warmup:comp[s, i]]
+            pooled.append(rec)
+            per_seed_mean.append(rec.mean() if rec.size else np.nan)
+        rec = np.concatenate(pooled)
+        all_cls = np.concatenate(
+            [cls[s, i, warmup:comp[s, i]] for s in range(S)]
+        )
+        mean[i] = rec.mean() if rec.size else np.nan
+        p50[i] = np.percentile(rec, 50) if rec.size else np.nan
+        p99[i] = np.percentile(rec, 99) if rec.size else np.nan
+        m_ci[i] = (
+            1.96 * np.nanstd(per_seed_mean, ddof=1) / math.sqrt(S)
+            if S > 1 else 0.0
+        )
+        for c in range(3):
+            sel = all_cls == c
+            if rec.size:
+                cfrac[i, c] = sel.mean()
+            if sel.any():
+                csoj[i, c] = rec[sel].mean()
+
+    ci = 1.96 * xs.std(axis=0, ddof=1) / math.sqrt(S) if S > 1 else np.zeros(P)
+    total_arrivals = comp.sum(axis=0) + drop.sum(axis=0)
+    truncated = (comp < n_requests).any(axis=0)
+    if truncated.any():
+        import warnings
+
+        warnings.warn(
+            "open-loop simulation exhausted its event budget before "
+            f"completing n_requests at p_hit={p_hits[truncated]} "
+            "(offered rate far past the stability boundary?); statistics "
+            "cover fewer completions than requested", RuntimeWarning,
+            stacklevel=2)
+    return OpenSimResult(
+        p_hit=p_hits, arrival_rate=lam, throughput=xs.mean(axis=0), ci95=ci,
+        sojourn_mean=mean, sojourn_ci95=m_ci, sojourn_p50=p50,
+        sojourn_p99=p99, class_frac=cfrac, class_sojourn=csoj,
+        delayed_frac=dl.mean(axis=0),
+        drop_frac=drop.sum(axis=0) / np.maximum(total_arrivals, 1),
+        truncated=truncated,
+        n_requests=n_requests,
+    )

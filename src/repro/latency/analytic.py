@@ -1,0 +1,201 @@
+"""Open queueing-network response-time analysis — the analytic latency prong.
+
+The closed-loop model (:mod:`repro.core.queueing`) fixes the *population*
+(MPL) and solves for throughput; response time only appears as the cycle
+time N/X.  Real cache front-ends are open-loop: requests arrive at some
+rate lambda regardless of how many are already in the system, and the
+quantity that matters is the *sojourn* (response) time R(p, lambda).
+
+This module evaluates the same :class:`~repro.core.queueing.ClosedNetwork`
+definitions (stations, branches, p_hit-parameterized services and
+probabilities — the MPL field is simply ignored) as an open Jackson/BCMP
+network under Poisson(lambda) arrivals:
+
+* **think stations** (infinite-server): pure delay, per-visit sojourn equals
+  the mean service time regardless of load or distribution.
+* **queue stations** (c-server FCFS): per-visit sojourn is the M/M/c value
+  ``S + C(c, a) * S / (c - a)`` with offered load ``a = lambda_k * S`` and
+  ``C`` the Erlang-C waiting probability.  For the exponential analogue of
+  a network this is exact (BCMP: FCFS stations with class-independent
+  exponential service); for the paper's det/pareto services it is the same
+  kind of insensitivity approximation the closed-loop MVA already leans on.
+
+The **stability boundary** ``lambda_max(p) = min_k c_k / D_k`` is exactly
+the saturated term of the closed-loop Thm-7.1 bound, so the open-loop
+knee — the hit ratio beyond which the sustainable arrival rate *drops* —
+coincides with the closed-loop p*.  That is the paper's phenomenon restated
+in latency terms: past the knee, a higher hit ratio buys you a *lower*
+ceiling and, at fixed lambda, a *longer* response time.
+
+Tails use an exponential-mixture approximation: each branch's sojourn is
+approximated as exponential at its mean, and the overall sojourn CDF is the
+probability-weighted mixture — exact for single-visit M/M/1 routes,
+conservative ordering elsewhere.  Units are microseconds and requests/µs
+throughout, matching :mod:`repro.core.queueing`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.queueing import QUEUE, ClosedNetwork
+
+
+def erlang_c(c: int, a: float) -> float:
+    """Erlang-C waiting probability P{wait > 0} for M/M/c at offered load
+    ``a = lambda * S`` erlangs.  Requires ``a < c`` (an overloaded queue
+    has no steady state); the Erlang-B recursion keeps it numerically
+    stable for large ``c``."""
+    if a <= 0.0:
+        return 0.0
+    if c < 1:
+        raise ValueError("c must be >= 1")
+    if a >= c:
+        raise ValueError(f"offered load a={a} must be < c={c} servers")
+    b = 1.0
+    for k in range(1, c + 1):
+        b = a * b / (k + a * b)
+    rho = a / c
+    return b / (1.0 - rho * (1.0 - b))
+
+
+def lambda_max(net: ClosedNetwork, p_hit, tail_mode: str = "zero"):
+    """Open-loop stability boundary: the largest Poisson arrival rate the
+    network can sustain at hit ratio p, ``min_k c_k / D_k`` over queue
+    stations.  This is exactly the saturated (second) term of the
+    closed-loop Thm-7.1 bound, so its knee recovers the closed-loop p*.
+    Vectorized over ``p_hit``; +inf for a network with no queue demand."""
+    servers = net.queue_servers()
+    p_arr = np.atleast_1d(np.asarray(p_hit, dtype=np.float64))
+    out = np.empty_like(p_arr)
+    for i, p in enumerate(p_arr):
+        d = net.demands(float(p), tail_mode=tail_mode)
+        terms = [servers[k] / dk for k, dk in d.items() if dk > 0.0]
+        out[i] = min(terms) if terms else math.inf
+    return out if np.ndim(p_hit) else float(out[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class OpenAnalysis:
+    """One (p_hit, lambda) operating point of the open network.
+
+    ``station_time`` maps each station to its per-visit sojourn (wait +
+    service); ``branches`` carries (name, probability, mean response) per
+    route — the exponential-mixture components behind :meth:`percentile`.
+    An unstable point (some queue station with offered load >= c) has
+    ``stable=False`` and infinite means.
+    """
+
+    p_hit: float
+    arrival_rate: float
+    stable: bool
+    mean: float
+    utilization: Dict[str, float]
+    station_time: Dict[str, float]
+    branches: Tuple[tuple, ...]  # (name, prob, mean_response)
+
+    def percentile(self, q: float = 0.99) -> float:
+        """Sojourn-time percentile via the exponential-mixture tail
+        approximation: F(t) = sum_b p_b (1 - exp(-t / R_b)), solved by
+        bisection.  Exact when every branch's sojourn is exponential
+        (e.g. a single M/M/1 visit); an approximation otherwise."""
+        if not 0.0 < q < 1.0:
+            raise ValueError("percentile q must be in (0, 1)")
+        if not self.stable:
+            return math.inf
+        comps = [(pb, rb) for _, pb, rb in self.branches if pb > 0.0]
+        if not comps:
+            return 0.0
+
+        def cdf(t: float) -> float:
+            return sum(pb * -math.expm1(-t / rb) if rb > 0.0 else pb
+                       for pb, rb in comps)
+
+        hi = max(rb for _, rb in comps) + 1e-12
+        while cdf(hi) < q:
+            hi *= 2.0
+        lo = 0.0
+        for _ in range(200):
+            mid = 0.5 * (lo + hi)
+            if cdf(mid) < q:
+                lo = mid
+            else:
+                hi = mid
+        return 0.5 * (lo + hi)
+
+
+def analyze_open(net: ClosedNetwork, p_hit: float, arrival_rate: float,
+                 tail_mode: str = "nominal") -> OpenAnalysis:
+    """Solve the open network at one (p_hit, lambda) point.
+
+    ``tail_mode`` follows the closed-loop convention: ``"nominal"``
+    (default, matching MVA) charges ``bound="upper"`` stations their stated
+    upper-bound service — pessimistic but physical; ``"zero"`` drops them
+    (matching the throughput upper bound).
+    """
+    if arrival_rate < 0.0:
+        raise ValueError("arrival_rate must be >= 0")
+    p = float(p_hit)
+    counts = net.visit_counts(p)
+    station_time: Dict[str, float] = {}
+    util: Dict[str, float] = {}
+    stable = True
+    for s in net.stations:
+        svc = s.mean_service(p)
+        if s.bound == "upper" and tail_mode == "zero":
+            svc = 0.0
+        if s.kind != QUEUE:
+            station_time[s.name] = svc
+            continue
+        lam_k = arrival_rate * counts[s.name]
+        a = lam_k * svc
+        c = int(s.servers)
+        util[s.name] = a / c
+        if a >= c:
+            stable = False
+            station_time[s.name] = math.inf
+            continue
+        wait = erlang_c(c, a) * svc / (c - a) if svc > 0.0 else 0.0
+        station_time[s.name] = svc + wait
+
+    branches = []
+    mean = 0.0
+    for b in net.branches:
+        pb = b.probability(p)
+        rb = sum(station_time[v] for v in b.visits)
+        branches.append((b.name, pb, rb))
+        mean += pb * rb
+    return OpenAnalysis(
+        p_hit=p, arrival_rate=float(arrival_rate), stable=stable,
+        mean=mean if stable else math.inf, utilization=util,
+        station_time=station_time, branches=tuple(branches),
+    )
+
+
+def response_time(net: ClosedNetwork, p_hit, arrival_rate: float,
+                  tail_mode: str = "nominal"):
+    """Mean end-to-end response time R(p, lambda); +inf where unstable.
+    Vectorized over ``p_hit``."""
+    p_arr = np.atleast_1d(np.asarray(p_hit, dtype=np.float64))
+    out = np.array([
+        analyze_open(net, float(p), arrival_rate, tail_mode=tail_mode).mean
+        for p in p_arr
+    ])
+    return out if np.ndim(p_hit) else float(out[0])
+
+
+def response_percentile(net: ClosedNetwork, p_hit, arrival_rate: float,
+                        q: float = 0.99, tail_mode: str = "nominal"):
+    """Sojourn percentile (exponential-mixture approximation); +inf where
+    unstable.  Vectorized over ``p_hit``."""
+    p_arr = np.atleast_1d(np.asarray(p_hit, dtype=np.float64))
+    out = np.array([
+        analyze_open(net, float(p), arrival_rate,
+                     tail_mode=tail_mode).percentile(q)
+        for p in p_arr
+    ])
+    return out if np.ndim(p_hit) else float(out[0])

@@ -393,3 +393,25 @@ class Engine:
             net = coalesced_network(net, flows=coalesce_flows,
                                     window_us=prefill_us)
         return net
+
+    def forecast_slo(self, step_us: float, prefill_us: float,
+                     arrival_rate: float, slo_us: float,
+                     percentile: float = 0.99, p_grid=None, **net_kwargs):
+        """Open-loop SLO forecast for this engine's prefix controller.
+
+        Builds the same measured-profile network as
+        :meth:`forecast_network` (all of whose kwargs pass through), then
+        evaluates it under Poisson arrivals at ``arrival_rate`` requests/µs
+        via :func:`repro.latency.slo_forecast`: mean and ``percentile``
+        tail response across the hit-ratio grid, the stability boundary
+        lambda_max(p), and the three operating points — throughput-optimal
+        p* (the closed-loop knee), latency-optimal p* at the offered rate,
+        and SLO-capacity-optimal p* (argmax of the largest arrival rate
+        whose tail still meets ``slo_us``).  This is the "should this pod
+        chase a higher hit ratio" answer in the units users feel.
+        """
+        from repro.latency import slo_forecast
+
+        net = self.forecast_network(step_us, prefill_us, **net_kwargs)
+        return slo_forecast(net, arrival_rate, slo_us,
+                            percentile=percentile, p_grid=p_grid)

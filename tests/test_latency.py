@@ -1,0 +1,440 @@
+"""Open-loop latency prong (PR 4).
+
+Analytic: the Erlang-C layer against M/M/c closed forms, the stability
+boundary against the closed-loop knee, and the latency inversion /
+operating-point divergence.  Simulation: the arrival-driven JAX simulator
+against the heapq oracle (sojourns, classes) and against the analytics at
+low utilization.  Satellites: the queueing-aware (MVA) in-flight window,
+Zipf-weighted coalescing flows, and per-request classifier windows.
+"""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    build,
+    exponential_analogue,
+    fifo_network,
+    lru_network,
+    sigma_of,
+    zipf_flow_weights,
+)
+from repro.core.queueing import QUEUE, THINK, Branch, ClosedNetwork, Station
+from repro.latency import (
+    analyze_open,
+    erlang_c,
+    lambda_max,
+    max_arrival_for_slo,
+    response_percentile,
+    response_time,
+    slo_forecast,
+)
+
+
+def _mm1(service: float) -> ClosedNetwork:
+    return ClosedNetwork(
+        "mm1",
+        (Station("z", THINK, 0.0), Station("q", QUEUE, service, dist="exp")),
+        (Branch("all", 1.0, ("z", "q")),),
+        mpl=1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic layer
+# ---------------------------------------------------------------------------
+
+
+def test_mm1_closed_form():
+    """Single M/M/1 visit: R = S/(1-rho) and an exactly exponential sojourn."""
+    s, lam = 2.0, 0.3
+    a = analyze_open(_mm1(s), 0.5, lam)
+    rho = lam * s
+    assert a.mean == pytest.approx(s / (1.0 - rho), rel=1e-12)
+    want_p99 = -s / (1.0 - rho) * math.log(0.01)
+    assert a.percentile(0.99) == pytest.approx(want_p99, rel=1e-6)
+
+
+def test_erlang_c_known_values():
+    assert erlang_c(1, 0.5) == pytest.approx(0.5)  # M/M/1: P{wait} = rho
+    assert erlang_c(2, 1.0) == pytest.approx(1.0 / 3.0)  # classic c=2 value
+    assert erlang_c(4, 0.0) == 0.0
+
+
+def test_mmc_wait_formula():
+    """c-server station: W = C(c,a)·S/(c-a) + S, via a 2-server network."""
+    net = ClosedNetwork(
+        "mm2",
+        (Station("z", THINK, 0.0),
+         Station("q", QUEUE, 1.0, dist="exp", servers=2)),
+        (Branch("all", 1.0, ("z", "q")),),
+        mpl=1,
+    )
+    lam = 1.0  # a = 1.0 on 2 servers
+    a = analyze_open(net, 0.5, lam)
+    assert a.mean == pytest.approx(erlang_c(2, 1.0) * 1.0 / (2 - 1) + 1.0)
+
+
+def test_lambda_max_is_closed_saturated_bound():
+    """lambda_max(p) = min_k c_k/D_k — the Thm-7.1 saturated term."""
+    for policy in ("lru", "fifo", "s3fifo"):
+        net = build(policy, disk_us=100.0, disk_servers=4)
+        for p in (0.3, 0.7, 0.95):
+            d = net.demands(p)
+            servers = net.queue_servers()
+            want = min(servers[k] / dk for k, dk in d.items() if dk > 0)
+            assert lambda_max(net, p) == pytest.approx(want, rel=1e-12)
+
+
+def test_stability_knee_recovers_closed_pstar():
+    """The open-loop knee (largest p maximizing lambda_max) is the
+    closed-loop p* for both dichotomy poles."""
+    grid = np.linspace(0.0, 1.0, 2001)
+    for policy in ("lru", "fifo"):
+        net = build(policy, disk_us=100.0)
+        f = slo_forecast(net, arrival_rate=0.5, slo_us=1e4, p_grid=grid)
+        assert f.p_star_throughput == pytest.approx(
+            net.p_star(grid=2001), abs=1e-3)
+
+
+def test_unstable_point_is_inf():
+    net = lru_network(disk_us=100.0)
+    lmax = lambda_max(net, 0.99)
+    a = analyze_open(net, 0.99, 1.1 * lmax)
+    assert not a.stable and math.isinf(a.mean)
+    assert math.isinf(a.percentile(0.99))
+    assert math.isinf(response_time(net, 0.99, 1.1 * lmax))
+
+
+def test_response_monotone_in_lambda():
+    net = lru_network(disk_us=100.0)
+    lams = np.array([0.2, 0.6, 1.0, 1.3]) * lambda_max(net, 0.8)
+    rs = [response_time(net, 0.8, float(l)) for l in lams[:-1]]
+    assert np.all(np.diff(rs) > 0)
+
+
+def test_latency_inversion_and_pstar_divergence():
+    """At a fixed high load, LRU's mean/tail response RISES past the
+    latency-optimal hit ratio, which sits away from the throughput-optimal
+    knee; FIFO stays monotone with every optimum at p=1."""
+    grid = np.linspace(0.0, 1.0, 201)
+    lru = lru_network(disk_us=100.0)
+    lam = 0.85 * float(np.max(lambda_max(lru, grid)))
+    f = slo_forecast(lru, lam, slo_us=250.0, p_grid=grid)
+    assert 0.5 < f.p_star_latency < 0.999
+    assert abs(f.p_star_latency - f.p_star_throughput) > 0.02
+    i_lat = int(np.argmin(np.abs(grid - f.p_star_latency)))
+    i_hi = int(np.argmin(np.abs(grid - 0.98)))
+    assert f.r_mean[i_hi] > 1.2 * f.r_mean[i_lat]
+    assert f.r_tail[i_hi] > 1.2 * f.r_tail[i_lat]
+
+    ff = slo_forecast(fifo_network(disk_us=100.0), lam, slo_us=250.0,
+                      p_grid=grid)
+    fin = np.isfinite(ff.r_mean)
+    assert np.all(np.diff(ff.r_mean[fin]) <= 1e-9)
+    assert ff.p_star_latency == 1.0 and ff.p_star_slo == 1.0
+
+
+def test_percentiles_ordered():
+    a = analyze_open(lru_network(disk_us=100.0), 0.8, 1.0)
+    assert 0 < a.percentile(0.5) < a.percentile(0.9) < a.percentile(0.99)
+
+
+def test_max_arrival_for_slo():
+    net = lru_network(disk_us=100.0)
+    # infeasible SLO (below the bare no-wait response) -> 0
+    assert max_arrival_for_slo(net, 0.5, 1.0) == 0.0
+    lam = max_arrival_for_slo(net, 0.95, 400.0)
+    assert 0.0 < lam < lambda_max(net, 0.95)
+    assert analyze_open(net, 0.95, lam).percentile(0.99) <= 400.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Open-loop simulation: JAX vs heapq oracle vs analytics
+# ---------------------------------------------------------------------------
+
+DISK_TIERS = [
+    {"disk_us": 100.0, "disk_servers": 0},  # paper's infinite-server disk
+    {"disk_us": 500.0, "disk_servers": 8},  # bounded I/O depth
+]
+
+
+def _open_rate(net, p, frac):
+    return frac * float(lambda_max(net, p, tail_mode="nominal"))
+
+
+@pytest.mark.parametrize("policy", ["lru", "fifo", "clock"])
+@pytest.mark.parametrize("tier", range(len(DISK_TIERS)))
+def test_open_sim_matches_oracle(policy, tier):
+    """The acceptance differential: arrival-driven JAX simulator vs the
+    independent heapq oracle agree on throughput and mean sojourn."""
+    from repro.core.py_sim import simulate_py
+    from repro.core.simulator import simulate_network
+
+    net = exponential_analogue(build(policy, **DISK_TIERS[tier]))
+    p = 0.7
+    lam = _open_rate(net, p, 0.55)
+    py = [simulate_py(net, p, n_requests=5_000, seed=s, arrival_rate=lam)
+          for s in (3, 4)]
+    x_py = np.mean([r["x"] for r in py])
+    r_py = np.mean([r["sojourn_mean"] for r in py])
+    jx = simulate_network(net, [p], arrival_rate=lam, n_requests=10_000,
+                          seeds=(0, 1, 2))
+    assert np.all(jx.drop_frac == 0.0)
+    assert all(r["drop_frac"] == 0.0 for r in py)
+    assert abs(x_py - jx.throughput[0]) / x_py < 0.06, (x_py, jx.throughput)
+    assert abs(r_py - jx.sojourn_mean[0]) / r_py < 0.12, (
+        policy, tier, r_py, jx.sojourn_mean[0])
+
+
+def test_open_sim_matches_analytic_at_low_utilization():
+    from repro.core.simulator import simulate_network
+
+    net = exponential_analogue(lru_network(disk_us=100.0))
+    p = np.array([0.4, 0.8])
+    lam = _open_rate(net, 0.8, 0.35)
+    jx = simulate_network(net, p, arrival_rate=lam, n_requests=20_000,
+                          seeds=(0, 1))
+    want = response_time(net, p, lam)
+    rel = np.abs(jx.sojourn_mean - want) / want
+    assert np.all(rel < 0.08), (jx.sojourn_mean, want)
+    # throughput == offered rate in a stable drop-free system
+    assert np.all(np.abs(jx.throughput - lam) / lam < 0.05)
+    assert np.all(jx.sojourn_p99 > jx.sojourn_mean)
+
+
+def test_open_sim_class_breakdown_and_parked_sojourns():
+    """Delayed hits carry the parked interval in their sojourn: slower than
+    true hits, faster than true misses when the fetch is deterministic."""
+    from repro.core.simulator import simulate_network
+
+    net = lru_network(disk_us=100.0, disk_servers=8)
+    net = dataclasses.replace(net, stations=tuple(
+        dataclasses.replace(s, dist="det") if s.name == "disk" else s
+        for s in net.stations))
+    jx = simulate_network(net, [0.5], arrival_rate=0.1, n_requests=10_000,
+                          seeds=(0, 1), coalesce_flows=16, max_in_system=256)
+    assert jx.class_frac[0].sum() == pytest.approx(1.0)
+    assert jx.class_frac[0, 2] > 0.03  # delayed hits present
+    assert jx.delayed_frac[0] == pytest.approx(jx.class_frac[0, 2], abs=1e-6)
+    hit, miss, delayed = (jx.class_sojourn[0, 1], jx.class_sojourn[0, 0],
+                          jx.class_sojourn[0, 2])
+    assert hit < delayed < miss, jx.class_sojourn
+
+
+def test_open_sim_oracle_agrees_with_coalescing():
+    from repro.core.py_sim import simulate_py
+    from repro.core.simulator import simulate_network
+
+    net = exponential_analogue(lru_network(disk_us=100.0, disk_servers=8))
+    lam = 0.1
+    py = simulate_py(net, 0.5, n_requests=5_000, seed=5, arrival_rate=lam,
+                     coalesce_flows=16)
+    jx = simulate_network(net, [0.5], arrival_rate=lam, n_requests=10_000,
+                          seeds=(0, 1, 2), coalesce_flows=16,
+                          max_in_system=256)
+    assert abs(py["sojourn_mean"] - jx.sojourn_mean[0]) / py["sojourn_mean"] \
+        < 0.15, (py["sojourn_mean"], jx.sojourn_mean)
+    assert abs(py["delayed_frac"] - jx.delayed_frac[0]) < 0.05
+
+
+def test_open_sim_deterministic_given_seed():
+    from repro.core.simulator import simulate_network
+
+    net = lru_network(disk_us=100.0)
+    a = simulate_network(net, [0.8], arrival_rate=1.0, n_requests=3_000,
+                         seeds=(7,))
+    b = simulate_network(net, [0.8], arrival_rate=1.0, n_requests=3_000,
+                         seeds=(7,))
+    np.testing.assert_array_equal(a.sojourn_mean, b.sojourn_mean)
+    np.testing.assert_array_equal(a.throughput, b.throughput)
+
+
+def test_open_sim_rejects_bad_rate():
+    from repro.core.simulator import simulate_network
+
+    with pytest.raises(ValueError):
+        simulate_network(lru_network(), [0.5], arrival_rate=0.0,
+                         n_requests=100)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: queueing-aware (MVA) in-flight window
+# ---------------------------------------------------------------------------
+
+
+def test_mva_window_identity_on_think_disk():
+    """With the paper's infinite-server disk there is no queueing wait, so
+    the mva window must not change anything."""
+    a = build("lru", disk_us=100.0, coalesce_flows=16)
+    b = build("lru", disk_us=100.0, coalesce_flows=16,
+              coalesce_window_mode="mva")
+    P = np.linspace(0.05, 0.95, 7)
+    np.testing.assert_allclose(a.throughput_upper(P), b.throughput_upper(P),
+                               rtol=1e-12)
+
+
+def test_mva_window_closes_simulator_gap():
+    """ROADMAP gap: at p=0.5 with a saturated IO_DEPTH=8 disk the simulator
+    shows ~0.42 delayed completions but the service-window sigma predicts
+    only ~0.25 — the fetch stays outstanding through its queueing delay.
+    The MVA window must land much closer to the simulator."""
+    from repro.core.simulator import simulate_network
+
+    p = 0.5
+    net = lru_network(disk_us=500.0, disk_servers=8)
+    sim = simulate_network(net, [p], n_requests=12_000, seeds=(0, 1, 2),
+                           coalesce_flows=16).delayed_frac[0]
+    kw = dict(disk_us=500.0, disk_servers=8, coalesce_flows=16)
+    pred_svc = sigma_of(build("lru", **kw), p) * (1 - p)
+    pred_mva = sigma_of(
+        build("lru", coalesce_window_mode="mva", **kw), p) * (1 - p)
+    assert abs(pred_mva - sim) < abs(pred_svc - sim)
+    assert abs(pred_mva - sim) < 0.08, (pred_mva, sim)
+
+
+def test_mva_window_with_pinned_sigma_validates():
+    net = build("lru", disk_us=500.0, disk_servers=8, coalesce_flows=16,
+                coalesce_sigma=0.4, coalesce_window_mode="mva")
+    net.validate()
+    assert sigma_of(net, 0.5) == pytest.approx(0.4)
+    # the inflight park time reflects the queueing-aware window: longer
+    # than half the bare service
+    assert net.station("inflight").mean_service(0.5) > 0.5 * 500.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: Zipf-weighted coalescing flows
+# ---------------------------------------------------------------------------
+
+
+def test_zipf_flow_weights_basics():
+    w = zipf_flow_weights(64, 0.9)
+    assert w.shape == (64,) and w.sum() == pytest.approx(1.0)
+    assert np.all(np.diff(w) < 0)  # descending popularity
+    np.testing.assert_allclose(zipf_flow_weights(8, 0.0), np.full(8, 1 / 8))
+
+
+def test_zipf_theta_zero_matches_uniform_fixed_point():
+    a = build("lru", disk_us=100.0, coalesce_flows=32)
+    b = build("lru", disk_us=100.0, coalesce_flows=32,
+              coalesce_flow_theta=0.0)
+    for p in (0.3, 0.7):
+        assert sigma_of(a, p) == sigma_of(b, p)
+
+
+def test_zipf_flows_increase_sigma_and_predict_simulator():
+    """Skewed flows collide more; the weighted fixed point predicts the
+    simulator's delayed fraction about as well as the uniform one does for
+    uniform flows (same known model bias, same direction)."""
+    from repro.core.simulator import simulate_network
+
+    p, flows, theta = 0.5, 64, 0.9
+    net = lru_network(disk_us=100.0)
+    uni = simulate_network(net, [p], n_requests=12_000, seeds=(0, 1, 2),
+                           coalesce_flows=flows).delayed_frac[0]
+    zipf = simulate_network(net, [p], n_requests=12_000, seeds=(0, 1, 2),
+                            coalesce_flows=flows,
+                            coalesce_theta=theta).delayed_frac[0]
+    assert zipf > uni + 0.02  # skew -> more coalescing, event level
+    m_uni = sigma_of(build("lru", disk_us=100.0, coalesce_flows=flows), p) \
+        * (1 - p)
+    m_zipf = sigma_of(build("lru", disk_us=100.0, coalesce_flows=flows,
+                            coalesce_flow_theta=theta), p) * (1 - p)
+    assert m_zipf > m_uni  # model moves the same direction
+    assert abs(m_zipf - zipf) / zipf < 0.2, (m_zipf, zipf)
+
+
+def test_py_oracle_zipf_flows_agree():
+    from repro.core.py_sim import simulate_py
+    from repro.core.simulator import simulate_network
+
+    net = lru_network(disk_us=100.0)
+    py = simulate_py(net, 0.5, n_requests=8_000, seed=3, coalesce_flows=64,
+                     coalesce_theta=0.9, full=True)
+    jx = simulate_network(net, [0.5], n_requests=12_000, seeds=(0, 1, 2),
+                          coalesce_flows=64, coalesce_theta=0.9)
+    assert abs(py["delayed_frac"] - jx.delayed_frac[0]) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-request classifier windows
+# ---------------------------------------------------------------------------
+
+
+def test_classifier_per_request_windows_match_py_reference():
+    from repro.cache import classify_inflight, classify_inflight_py
+    from repro.core.harness import miss_window_stream
+
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 97, 4_000)
+    hits = rng.random(4_000) < 0.6
+    wins = miss_window_stream(4_000, 25.0, seed=3)
+    np.testing.assert_array_equal(
+        classify_inflight(keys, hits, wins),
+        classify_inflight_py(keys, hits, wins),
+    )
+
+
+def test_classifier_constant_array_equals_scalar():
+    from repro.cache import classify_inflight
+
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 50, 2_000)
+    hits = rng.random(2_000) < 0.5
+    for w in (0, 9, 33):
+        np.testing.assert_array_equal(
+            classify_inflight(keys, hits, w),
+            classify_inflight(keys, hits, np.full(2_000, w)),
+        )
+
+
+def test_classifier_zero_windows_bit_identical_to_hits():
+    from repro.cache import DELAYED_HIT, TRUE_HIT, classify_inflight
+    from repro.core.harness import coin_stream, zipf_trace
+    from repro.cache.replay import replay_trace
+
+    trace = zipf_trace(6_000, 1024, seed=2)
+    res = replay_trace("lru", trace, coin_stream(6_000, 2), 128,
+                       key_space=1024)
+    cls = classify_inflight(trace, res.hits, np.zeros(6_000, np.int64),
+                            key_space=1024)
+    assert not np.any(cls == DELAYED_HIT)
+    np.testing.assert_array_equal(cls == TRUE_HIT, res.hits)
+
+
+def test_classifier_rejects_bad_windows():
+    from repro.cache import classify_inflight
+
+    keys = np.zeros(10, np.int64)
+    hits = np.zeros(10, bool)
+    with pytest.raises(ValueError):
+        classify_inflight(keys, hits, np.full(10, -1))
+    with pytest.raises(ValueError):
+        classify_inflight(keys, hits, np.zeros(7, np.int64))
+
+
+def test_measure_and_sweep_accept_window_streams():
+    from repro.core.harness import (measure_cache, miss_window_stream,
+                                    sweep_cache_sizes)
+
+    wins = miss_window_stream(10_000, 40.0, seed=0)
+    m = measure_cache("lru", 128, key_space=1024, n_requests=10_000,
+                      backend="jax", miss_latency_requests=wins)
+    assert m.class_fracs is not None
+    assert 0.0 < m.coalesce_sigma < 1.0
+    assert m.miss_latency_requests == int(round(float(wins.mean())))
+    out = sweep_cache_sizes("lru", [64, 512], key_space=1024,
+                            n_requests=10_000, miss_latency_requests=wins)
+    assert out["sigma"][0] > out["sigma"][-1] >= 0.0
+    # py/jax backends classify per-request windows identically
+    a = measure_cache("clock", 64, key_space=512, n_requests=5_000,
+                      backend="py",
+                      miss_latency_requests=miss_window_stream(5_000, 20.0))
+    b = measure_cache("clock", 64, key_space=512, n_requests=5_000,
+                      backend="jax",
+                      miss_latency_requests=miss_window_stream(5_000, 20.0))
+    np.testing.assert_allclose(a.class_fracs, b.class_fracs)
