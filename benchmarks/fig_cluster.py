@@ -1,0 +1,200 @@
+"""Sharded cache-cluster prong: cluster-level p* forecasts (beyond-paper).
+
+The paper's analysis is single-node; a production deployment serves the
+same workload from N cache shards behind a consistent-hash router.  Two
+cluster effects reshape the throughput-vs-hit-ratio tradeoff:
+
+* **Load imbalance**: hashing Zipf-popular keys leaves one shard with the
+  hottest keys, so the cluster saturates when the *hot shard* does —
+  well below N x the single-node peak.
+* **Local operating points**: the hot shard's substream is more
+  concentrated, so at any global hit ratio its *local* hit ratio runs
+  higher — its LRU hit-path metadata (delink/head) saturates while the
+  cluster average still looks safe.
+
+Headline (asserted below): at Zipf theta >= 0.8 with >= 8 shards, the
+cluster-level LRU p* — the argmax of summed per-shard throughput — sits
+strictly BELOW the single-node forecast, while FIFO's cluster throughput
+stays monotone in p.  Sections:
+
+* **A (routing)**: measured imbalance factors, consistent-hash ring vs
+  power-of-two-choices, across Zipf skew.
+* **B (analytic)**: the headline, with the p -> p_k shard profile
+  *measured* from a partitioned trace (per-shard Mattson sweeps).
+* **C (simulation)**: the vmapped JAX cluster sim (shard-local MSHR
+  coalescing) vs the key-routing heapq oracle on cluster throughput
+  across the grid — the acceptance differential.
+* **D (boundary/SLO)**: hash-routed vs rebalanced-ideal stability
+  boundaries and the cluster SLO operating point.
+* **E (burst)**: ON-OFF front-end traffic stressing the cluster's tail
+  at the same mean rate.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import N_SIM_REQUESTS, row, timer
+from repro.cluster import (
+    HashRing,
+    cluster_network,
+    ideal_shard_profile,
+    imbalance,
+    measured_shard_profile,
+    shard_weights,
+    simulate_cluster,
+    simulate_cluster_py,
+    two_choice_assignment,
+    zipf_key_probs,
+)
+from repro.core import build, exponential_analogue
+from repro.core.harness import zipf_trace
+from repro.core.simulator import simulate_network
+from repro.latency import slo_forecast
+
+KEY_SPACE = 4096
+THETA = 1.0  # headline skew (acceptance: theta >= 0.8)
+N_SHARDS = 8  # acceptance: >= 8
+PSTAR_GRID = 4001
+SIM_KEY_SPACE = 1024
+SIM_P = np.array([0.45, 0.6, 0.75])
+SLO_US = 250.0
+
+
+def main() -> dict:
+    out: dict = {}
+
+    # ---- A: routing imbalance ------------------------------------------
+    print(f"# fig_cluster A: imbalance factor (hot shard / balanced), "
+          f"{N_SHARDS} shards")
+    row("theta", "ring_vnodes64", "two_choice")
+    ring = HashRing(N_SHARDS, vnodes=64, seed=1)
+    out["imbalance"] = {}
+    for theta in (0.0, 0.8, 1.0):
+        probs = zipf_key_probs(KEY_SPACE, theta, seed=0)
+        ib_ring = imbalance(shard_weights(ring.assignment(KEY_SPACE),
+                                          probs, N_SHARDS))
+        ib_tc = imbalance(shard_weights(
+            two_choice_assignment(probs, N_SHARDS, seed=1), probs, N_SHARDS))
+        row(f"{theta:.1f}", f"{ib_ring:.4f}", f"{ib_tc:.4f}")
+        assert ib_tc <= ib_ring + 1e-9
+        out["imbalance"][f"theta={theta:g}"] = {"ring": ib_ring,
+                                                "two_choice": ib_tc}
+    # skew is what the headline rides on
+    assert out["imbalance"]["theta=1"]["ring"] > 1.2
+
+    # ---- B: the headline — cluster p* below the single-node forecast ---
+    trace = zipf_trace(40_000, KEY_SPACE, THETA, seed=0)
+    assign = ring.assignment(KEY_SPACE)
+    profile = measured_shard_profile(trace, assign)
+    single_lru = build("lru", disk_us=100.0)
+    single_fifo = build("fifo", disk_us=100.0)
+    cm_lru = cluster_network("lru", N_SHARDS, profile=profile, disk_us=100.0)
+    cm_fifo = cluster_network("fifo", N_SHARDS, profile=profile,
+                              disk_us=100.0)
+    p_single = single_lru.p_star(grid=PSTAR_GRID)
+    p_cluster = cm_lru.p_star(grid=PSTAR_GRID)
+    print(f"# fig_cluster B: measured shard profile (theta={THETA}, "
+          f"{N_SHARDS} shards, imbalance {profile.imbalance():.3f})")
+    row("policy", "p_star_single", "p_star_cluster", "x_cluster_at_p*")
+    row("lru", f"{p_single:.4f}", f"{p_cluster:.4f}",
+        f"{float(cm_lru.throughput_upper(p_cluster)):.4f}")
+    p_hi = profile.p_range()[1] - 0.01
+    grid = np.linspace(0.02, p_hi, 60)
+    x_fifo = cm_fifo.throughput_upper(grid)
+    row("fifo", f"{single_fifo.p_star(grid=PSTAR_GRID):.4f}",
+        f"{cm_fifo.p_star(grid=PSTAR_GRID):.4f}",
+        f"{float(x_fifo[-1]):.4f}")
+    # the acceptance assertions: inversion moved down for LRU, FIFO monotone
+    assert p_cluster < p_single - 0.01, (p_cluster, p_single)
+    assert np.all(np.diff(x_fifo) >= -1e-9)
+    # hot shard runs hotter than the cluster average at the knee
+    pk = profile.shard_p(p_cluster)
+    hot = int(np.argmax(profile.weights))
+    assert pk[hot] > p_cluster
+    out["pstar"] = {"single_lru": p_single, "cluster_lru": p_cluster,
+                    "imbalance": profile.imbalance(),
+                    "hot_shard_local_p": float(pk[hot])}
+
+    # ---- C: JAX cluster sim vs key-routing oracle ----------------------
+    probs_s = zipf_key_probs(SIM_KEY_SPACE, THETA, seed=0)
+    assign_s = HashRing(N_SHARDS, vnodes=64, seed=1).assignment(SIM_KEY_SPACE)
+    prof_s = ideal_shard_profile(assign_s, probs_s)
+    cm_s = cluster_network("lru", N_SHARDS, profile=prof_s, disk_us=100.0,
+                           mpl=12 * N_SHARDS)
+    def _oracle(p):
+        runs = [simulate_cluster_py(cm_s, probs_s, assign_s, float(p),
+                                    n_requests=N_SIM_REQUESTS // 2, seed=s,
+                                    coalesce_flows=8) for s in (3, 4)]
+        return {k: float(np.mean([r[k] for r in runs]))
+                for k in ("x", "delayed_frac")}
+
+    with timer() as t:
+        jx = simulate_cluster(cm_s, SIM_P, n_requests=N_SIM_REQUESTS,
+                              seeds=(0, 1), coalesce_flows=8)
+        py = [_oracle(p) for p in SIM_P]
+    print(f"# fig_cluster C: sim differential, {N_SHARDS} shards, "
+          f"shard-local MSHR flows=8 ({t.elapsed:.1f}s)")
+    row("p_global", "x_jax", "x_oracle", "rel_err", "delayed_jax",
+        "delayed_oracle")
+    rel = np.array([abs(jx.throughput[i] - py[i]["x"]) / py[i]["x"]
+                    for i in range(len(SIM_P))])
+    for i, p in enumerate(SIM_P):
+        row(f"{p:.2f}", f"{jx.throughput[i]:.4f}", f"{py[i]['x']:.4f}",
+            f"{rel[i]:.3f}", f"{jx.delayed_frac[i]:.4f}",
+            f"{py[i]['delayed_frac']:.4f}")
+    # the acceptance differential: agreement across the grid
+    assert np.all(rel < 0.1), rel
+    assert all(abs(jx.delayed_frac[i] - py[i]["delayed_frac"]) < 0.06
+               for i in range(len(SIM_P)))
+    # shard-locality: the hot shard (higher local p) coalesces less
+    pk_s = prof_s.shard_p(float(SIM_P[1]))
+    hot_s, cold_s = int(np.argmax(pk_s)), int(np.argmin(pk_s))
+    assert jx.shard_delayed_frac[1, hot_s] < jx.shard_delayed_frac[1, cold_s]
+    out["sim"] = {"p": SIM_P.tolist(), "x_jax": jx.throughput.tolist(),
+                  "x_oracle": [float(r["x"]) for r in py],
+                  "rel_err": rel.tolist(), "sim_seconds": t.elapsed}
+
+    # ---- D: stability boundary + SLO under skew ------------------------
+    print("# fig_cluster D: hash-routed vs rebalanced-ideal lambda_max "
+          "(requests/us)")
+    row("p_global", "routed", "ideal", "penalty")
+    out["boundary"] = []
+    for p in (0.5, float(p_cluster), 0.9):
+        routed = float(cm_lru.lambda_max(p))
+        ideal = float(cm_lru.ideal_lambda_max(p))
+        row(f"{p:.3f}", f"{routed:.3f}", f"{ideal:.3f}",
+            f"{ideal / routed:.2f}x")
+        assert routed < ideal  # skew penalty is real
+        out["boundary"].append({"p": p, "routed": routed, "ideal": ideal})
+    lam = 0.6 * float(cm_lru.lambda_max(p_cluster))
+    f = slo_forecast(cm_lru.network, lam, SLO_US,
+                     p_grid=np.linspace(0.05, p_hi, 40))
+    row("p_star_slo_cluster", f"{f.p_star_slo:.4f}", "", "")
+    assert f.p_star_slo < 0.999  # SLO optimum interior for clustered LRU
+    out["slo"] = {"lambda": lam, "p_star_slo": f.p_star_slo}
+
+    # ---- E: bursty front-end traffic -----------------------------------
+    net_e = exponential_analogue(cm_s.network)
+    lam_e = 0.55 * float(cm_s.lambda_max(0.6, tail_mode="nominal"))
+    po = simulate_network(net_e, [0.6], arrival_rate=lam_e,
+                          n_requests=N_SIM_REQUESTS, seeds=(0, 1),
+                          max_in_system=512)
+    bu = simulate_network(net_e, [0.6], arrival_rate=lam_e,
+                          n_requests=N_SIM_REQUESTS, seeds=(0, 1),
+                          max_in_system=512, burst=(0.55, 2_000.0))
+    print("# fig_cluster E: ON-OFF burst arrivals at the same mean rate")
+    row("arrivals", "mean_sojourn_us", "p99_us", "drop_frac")
+    row("poisson", f"{po.sojourn_mean[0]:.2f}", f"{po.sojourn_p99[0]:.1f}",
+        f"{po.drop_frac[0]:.4f}")
+    row("on-off", f"{bu.sojourn_mean[0]:.2f}", f"{bu.sojourn_p99[0]:.1f}",
+        f"{bu.drop_frac[0]:.4f}")
+    assert bu.sojourn_p99[0] > po.sojourn_p99[0]
+    out["burst"] = {"lambda": lam_e,
+                    "poisson_p99": float(po.sojourn_p99[0]),
+                    "burst_p99": float(bu.sojourn_p99[0])}
+    return out
+
+
+if __name__ == "__main__":
+    main()

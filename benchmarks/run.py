@@ -32,6 +32,7 @@ BENCHES = [
     "fig_future_systems",  # Sec. 6: cores x disk speed, c-server disk
     "fig_delayed_hits",  # beyond-paper: miss coalescing / delayed hits
     "fig_latency",  # beyond-paper: open-loop response time / SLO p*
+    "fig_cluster",  # beyond-paper: sharded cluster, cluster-level p*
     "table2_classify",  # Tables 1-2
     "bypass_mitigation",  # Sec. 5.2
     "serving_integration",  # beyond-paper: prefix-cache controller at pod scale
@@ -55,6 +56,7 @@ def main() -> None:
     bench_seconds = {}
     replay = None
     latency = None
+    cluster = None
     for name in BENCHES:
         if only and name not in only:
             continue
@@ -68,6 +70,8 @@ def main() -> None:
                 replay = result
             if name == "fig_latency":
                 latency = result
+            if name == "fig_cluster":
+                cluster = result
             print(f"[{name}: ok in {bench_seconds[name]:.1f}s]", flush=True)
         except Exception:
             bench_seconds[name] = time.time() - t0
@@ -80,6 +84,8 @@ def main() -> None:
             payload["replay"] = replay
         if latency is not None:
             payload["latency"] = latency
+        if cluster is not None:
+            payload["cluster"] = cluster
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"\n[wrote {args.json}]")

@@ -24,6 +24,7 @@ from repro.cache.replay import (
     ReplayResult,
     classify_inflight,
     lru_sweep,
+    refetch_attempts,
     replay_grid,
     replay_trace,
 )
@@ -31,6 +32,6 @@ from repro.cache.replay import (
 __all__ = [
     "POLICIES", "PY_POLICIES", "AccessResult", "OpCounts", "run_trace",
     "ReplayResult", "lru_sweep", "replay_grid", "replay_trace",
-    "classify_inflight", "classify_inflight_py",
+    "classify_inflight", "classify_inflight_py", "refetch_attempts",
     "TRUE_MISS", "TRUE_HIT", "DELAYED_HIT",
 ]

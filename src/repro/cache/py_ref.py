@@ -338,7 +338,8 @@ PY_POLICIES = {
 }
 
 
-def classify_inflight_py(keys, hits, window) -> np.ndarray:
+def classify_inflight_py(keys, hits, window, fail_prob: float = 0.0,
+                         fail_seed: int = 0) -> np.ndarray:
     """Reference for :func:`repro.cache.replay.classify_inflight` (one lane).
 
     Same in-flight-window semantics — a true miss on key k at index t
@@ -346,7 +347,10 @@ def classify_inflight_py(keys, hits, window) -> np.ndarray:
     inside that window is a delayed hit — as a dict walk instead of a
     vmapped scan.  ``window`` is a scalar or a (T,) array of per-request
     windows (each true miss's fetch carries its own latency).
-    Differential oracle for the JAX classifier.
+    ``fail_prob``/``fail_seed`` apply the same TTL failed-fetch re-issue
+    stretch (window × Geometric attempts) as the JAX classifier, drawn
+    from the identical substream.  Differential oracle for the JAX
+    classifier.
     """
     keys = np.asarray(keys)
     hits = np.asarray(hits, bool)
@@ -355,6 +359,10 @@ def classify_inflight_py(keys, hits, window) -> np.ndarray:
     windows = np.broadcast_to(np.asarray(window, np.int64), keys.shape)
     if np.any(windows < 0):
         raise ValueError("window must be >= 0")
+    if fail_prob:
+        from repro.cache.replay import refetch_attempts
+
+        windows = windows * refetch_attempts(len(keys), fail_prob, fail_seed)
     from repro.cache.replay import DELAYED_HIT, TRUE_HIT, TRUE_MISS
 
     expiry: dict = {}  # key -> last index its outstanding fetch covers

@@ -261,8 +261,31 @@ def _classify_lane(keys, hits, windows, key_space_arr):
 _classify_grid = jax.jit(jax.vmap(_classify_lane, in_axes=(0, 0, None, None)))
 
 
+def refetch_attempts(n: int, fail_prob: float, seed: int = 0) -> np.ndarray:
+    """Per-request fetch attempt counts under TTL-style failure/re-issue.
+
+    A backing-store fetch fails (times out, returns stale, is dropped)
+    with probability ``fail_prob`` and is immediately re-issued, so the
+    number of attempts behind request ``t``'s fetch — *if* ``t`` turns
+    out to start one — is Geometric(1 - fail_prob) >= 1.  The stream is
+    drawn up front from a dedicated SeedSequence substream (independent
+    of the trace/coin/window streams at the same seed, reproducible
+    alongside them) and consumed identically by the JAX and the py
+    classifiers, so the twins stay bit-identical by construction.
+    ``fail_prob=0`` yields all-ones.
+    """
+    if not 0.0 <= fail_prob < 1.0:
+        raise ValueError("fail_prob must be in [0, 1)")
+    if fail_prob == 0.0:
+        return np.ones(n, dtype=np.int64)
+    rng = np.random.default_rng(np.random.SeedSequence(seed).spawn(4)[3])
+    return rng.geometric(1.0 - fail_prob, size=n).astype(np.int64)
+
+
 def classify_inflight(keys, hits, window,
-                      key_space: int | None = None) -> np.ndarray:
+                      key_space: int | None = None,
+                      fail_prob: float = 0.0,
+                      fail_seed: int = 0) -> np.ndarray:
     """Classify each replayed request as true hit / delayed hit / true miss.
 
     Overlays an MSHR-style in-flight window on an *already replayed* trace:
@@ -293,6 +316,16 @@ def classify_inflight(keys, hits, window,
     lanes classify in one vmapped dispatch.  Returns int8 classes shaped
     like ``hits`` with values {TRUE_MISS=0, TRUE_HIT=1, DELAYED_HIT=2}.
 
+    ``fail_prob`` models TTL-style fetch failure with re-issue (the
+    ROADMAP open item): the fetch a true miss starts fails with that
+    probability and is retried, so its in-flight window stretches to
+    ``window * attempts`` with ``attempts ~ Geometric(1 - fail_prob)``
+    (drawn via :func:`refetch_attempts` at ``fail_seed``, identically in
+    the py twin) — requests landing inside the extended window are
+    delayed hits waiting on the eventually-successful fetch.
+    ``fail_prob=0`` (and any ``window=0``) keeps the classification
+    bit-identical to the no-failure path.
+
     The per-window coalescing factor sigma — the fraction of
     fill-requiring requests that found a fetch in flight, i.e.
     ``n_delayed / (n_delayed + n_true_miss)`` — plugs directly into
@@ -301,7 +334,7 @@ def classify_inflight(keys, hits, window,
     """
     keys = np.asarray(keys)
     hits_np = np.asarray(hits)
-    windows = np.asarray(window, dtype=np.int32)
+    windows = np.asarray(window, dtype=np.int64)
     if windows.ndim > 1:
         raise ValueError(f"window must be a scalar or (T,), got {windows.shape}")
     if np.any(windows < 0):
@@ -310,6 +343,10 @@ def classify_inflight(keys, hits, window,
         raise ValueError(f"per-request windows {windows.shape} vs "
                          f"{keys.shape[-1]} requests")
     windows = np.broadcast_to(windows, (keys.shape[-1],))
+    if fail_prob:
+        windows = windows * refetch_attempts(keys.shape[-1], fail_prob,
+                                             fail_seed)
+    windows = windows.astype(np.int32)
     key_space = _resolve_key_space(keys, key_space)
     if keys.ndim == 1:
         keys2 = keys[None, :]

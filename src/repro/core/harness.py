@@ -353,19 +353,23 @@ def parameterized_network(
 
 
 def _classify(trace, hits, window, key_space: int, backend: str,
-              warmup_frac: float = 0.25) -> np.ndarray:
+              warmup_frac: float = 0.25, fail_prob: float = 0.0,
+              fail_seed: int = 0) -> np.ndarray:
     """Post-warmup (true miss, true hit, delayed hit) fractions.
 
     ``window`` is a scalar or a (T,) per-request array — passed straight
-    to the classifiers, which share the fetch-expiry semantics."""
+    to the classifiers, which share the fetch-expiry semantics (including
+    the ``fail_prob`` TTL re-issue stretch)."""
     if backend == "jax":
         from repro.cache.replay import classify_inflight  # lazy: pulls in jax
 
-        cls = classify_inflight(trace, hits, window, key_space=key_space)
+        cls = classify_inflight(trace, hits, window, key_space=key_space,
+                                fail_prob=fail_prob, fail_seed=fail_seed)
     else:
         from repro.cache.py_ref import classify_inflight_py
 
-        cls = classify_inflight_py(trace, hits, window)
+        cls = classify_inflight_py(trace, hits, window, fail_prob=fail_prob,
+                                   fail_seed=fail_seed)
     w = int(cls.shape[-1] * warmup_frac)
     cls_m = cls[..., w:]
     return np.stack(
@@ -385,6 +389,7 @@ def measure_cache(
     disk_servers: int = 0,
     backend: str = "py",
     miss_latency_requests: int = 0,
+    fetch_fail_prob: float = 0.0,
     **policy_kwargs,
 ) -> CacheMeasurement:
     """End-to-end prong C measurement at one cache size.
@@ -399,6 +404,11 @@ def measure_cache(
     :func:`miss_window_stream`); the stored ``miss_latency_requests``
     then records the mean.  With 0 the measurement is bit-identical to
     the non-coalesced path.
+
+    ``fetch_fail_prob`` models TTL-style fetch failure: each true miss's
+    fetch re-issues on failure, stretching its window by a geometric
+    attempt count (see :func:`repro.cache.replay.refetch_attempts`);
+    0 keeps the classification unchanged.
     """
     trace = zipf_trace(n_requests, key_space, theta, seed)
     hits, ops = run_cache_trace(policy, capacity, trace, seed=seed,
@@ -412,7 +422,7 @@ def measure_cache(
     meas = dataclasses.replace(meas, capacity=capacity)
     if np.any(miss_latency_requests):
         fracs = _classify(trace, hits, miss_latency_requests, key_space,
-                          backend)
+                          backend, fail_prob=fetch_fail_prob, fail_seed=seed)
         meas = dataclasses.replace(
             meas,
             miss_latency_requests=int(round(float(
@@ -436,6 +446,7 @@ def sweep_cache_sizes(
     disk_servers: int = 0,
     backend: str = "jax",
     miss_latency_requests: int = 0,
+    fetch_fail_prob: float = 0.0,
     **policy_kwargs,
 ):
     """Hit-ratio/throughput curve vs cache size — the paper's x-axis sweep.
@@ -455,7 +466,8 @@ def sweep_cache_sizes(
     delayed-hit classification and adds per-size columns: ``p_true_hit``,
     ``p_delayed``, ``sigma`` (measured coalescing factor) and
     ``x_bound_coalesced`` (the bound with delayed hits skipping the disk
-    and fill metadata).
+    and fill metadata).  ``fetch_fail_prob`` stretches each fetch's
+    window by its geometric re-issue attempts (TTL failure model).
 
     Returns dict of np arrays: size, p_hit, x_bound, (x_sim if simulate,
     delayed-hit columns if enabled).
@@ -488,6 +500,7 @@ def sweep_cache_sizes(
                     theta=theta, disk_us=disk_us, mpl=mpl, seed=seed,
                     disk_servers=disk_servers,
                     miss_latency_requests=w,
+                    fetch_fail_prob=fetch_fail_prob,
                     **policy_kwargs,
                 )
             return
@@ -512,7 +525,8 @@ def sweep_cache_sizes(
             meas = dataclasses.replace(meas, capacity=c)
             if np.any(w):
                 fracs = _classify(trace, np.asarray(hits_g[i]), w,
-                                  key_space, backend)
+                                  key_space, backend,
+                                  fail_prob=fetch_fail_prob, fail_seed=seed)
                 meas = dataclasses.replace(
                     meas,
                     miss_latency_requests=int(round(float(np.mean(w)))),

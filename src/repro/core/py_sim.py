@@ -55,6 +55,7 @@ def simulate_py(
     full: bool = False,
     arrival_rate: float | None = None,
     max_in_system: int = 128,
+    burst=None,
 ):
     """Simulate and return throughput in requests/µs.
 
@@ -64,8 +65,15 @@ def simulate_py(
 
     With ``full=True`` returns a dict with ``x`` (throughput),
     ``delayed_frac`` (fraction of measured completions that were delayed
-    hits) and ``delayed`` (their count); the bare float return stays the
-    default for backward compatibility.
+    hits), ``delayed`` (their count), plus per-branch measured completion
+    counts ``branch_done`` / ``branch_delayed`` in ``net.branches`` order
+    (the cluster prong's per-shard accounting); the bare float return
+    stays the default for backward compatibility.
+
+    Multi-disk networks (a cluster composition with per-shard ``sK:disk``
+    replicas) coalesce shard-locally: each disk station owns its own flow
+    group, mirroring the JAX kernel's ``disk_rank`` tables.  ``burst``
+    (open mode only) matches ``simulate_network``'s ON-OFF MMPP knob.
 
     With ``arrival_rate`` set the loop runs **open**: Poisson arrivals at
     that rate (requests/µs) enter a pool of ``max_in_system`` slots
@@ -83,9 +91,11 @@ def simulate_py(
     cum = np.asarray(spec.branch_cum)
     visits = np.asarray(spec.visits)
     servers = np.asarray(spec.servers)
-    disk_idx = int(spec.disk_idx)
+    disk_rank = np.asarray(spec.disk_rank)
     K = len(is_q)
-    if coalesce_flows and disk_idx < 0:
+    B = len(cum)
+    F = max(coalesce_flows, 1)
+    if coalesce_flows and disk_rank.max() < 0:
         raise ValueError(f"{net.name} has no 'disk' station to coalesce on")
     sample_flow = (
         _flow_sampler(rng, coalesce_flows, coalesce_theta)
@@ -102,10 +112,13 @@ def simulate_py(
 
     if arrival_rate is not None:
         return _simulate_py_open(
-            rng, is_q, svc, dist, cum, visits, servers, disk_idx, sample,
+            rng, is_q, svc, dist, cum, visits, servers, disk_rank, sample,
             new_branch, sample_flow, n_requests, warmup_frac,
-            coalesce_flows, float(arrival_rate), max_in_system,
+            coalesce_flows, float(arrival_rate), max_in_system, burst,
         )
+    if burst is not None:
+        raise ValueError("burst arrivals require arrival_rate "
+                         "(open-loop mode)")
 
     N = net.mpl
     heap: list = []
@@ -128,16 +141,25 @@ def simulate_py(
     t = 0.0
     done = 0
     delayed = 0
+    branch_done = [0] * B
+    branch_delayed = [0] * B
     warm_target = int(n_requests * warmup_frac)
     warm_t = warm_c = None
     warm_d = 0
+    warm_bd = [0] * B
+    warm_bdel = [0] * B
 
-    def complete(j: int, now: float) -> None:
+    def complete(j: int, now: float, was_delayed: bool = False) -> None:
         """Finish j's request and start a fresh one at a think station."""
         nonlocal done, warm_c, warm_t, warm_d
+        branch_done[job_branch[j]] += 1
+        if was_delayed:
+            branch_delayed[job_branch[j]] += 1
         done += 1
         if warm_c is None and done >= warm_target:
             warm_c, warm_t, warm_d = done, now, delayed
+            warm_bd[:] = branch_done
+            warm_bdel[:] = branch_delayed
         b = new_branch()
         job_branch[j] = b
         job_pos[j] = 0
@@ -148,12 +170,12 @@ def simulate_py(
         t, j, k = heapq.heappop(heap)
 
         # MSHR fill: j's fetch landed — wake everyone parked on its flow.
-        if coalesce_flows and k == disk_idx and job_flow[j] >= 0:
+        if coalesce_flows and disk_rank[k] >= 0 and job_flow[j] >= 0:
             f = job_flow[j]
             for w in parked.pop(f, []):
                 delayed += 1
                 job_flow[w] = -1
-                complete(w, t)
+                complete(w, t, was_delayed=True)
             del leader[f]
             job_flow[j] = -1
 
@@ -170,8 +192,9 @@ def simulate_py(
             continue
         job_pos[j] = pos
         k2 = int(visits[b, pos])
-        if coalesce_flows and k2 == disk_idx:
-            f = sample_flow()
+        if coalesce_flows and disk_rank[k2] >= 0:
+            # flows are local to the disk (shard) the miss arrives at
+            f = int(disk_rank[k2]) * F + sample_flow()
             job_flow[j] = f
             if f in leader:  # fetch already in flight: park, no new I/O
                 parked.setdefault(f, []).append(j)
@@ -192,22 +215,38 @@ def simulate_py(
         "x": x,
         "delayed": delayed - warm_d,
         "delayed_frac": (delayed - warm_d) / n_meas,
+        "branch_done": np.array(branch_done) - np.array(warm_bd),
+        "branch_delayed": np.array(branch_delayed) - np.array(warm_bdel),
+        "t_measured": t - warm_t,
     }
 
 
 def _simulate_py_open(
-    rng, is_q, svc, dist, cum, visits, servers, disk_idx, sample,
+    rng, is_q, svc, dist, cum, visits, servers, disk_rank, sample,
     new_branch, sample_flow, n_requests, warmup_frac, coalesce_flows,
-    arrival_rate, max_in_system,
+    arrival_rate, max_in_system, burst=None,
 ):
     """Open-loop heapq twin of simulator._simulate_open (same semantics:
-    Poisson arrivals into a bounded slot pool, sojourn + class records per
-    completion, parked delayed hits completing at fill time)."""
+    Poisson — or ON-OFF burst — arrivals into a bounded slot pool,
+    sojourn + class records per completion, parked delayed hits completing
+    at fill time, shard-local MSHR flow groups per disk station)."""
     K = len(is_q)
     N = max_in_system
-    branch_has_disk = (visits == disk_idx).any(axis=1) & (disk_idx >= 0)
+    F = max(coalesce_flows, 1)
+    vis_rank = disk_rank[np.maximum(visits, 0)]
+    branch_has_disk = ((vis_rank >= 0) & (visits >= 0)).any(axis=1)
+    use_burst = burst is not None
+    if use_burst:
+        duty, mean_on_us = float(burst[0]), float(burst[1])
+        if not 0.0 < duty <= 1.0 or mean_on_us <= 0.0:
+            raise ValueError(f"burst=(duty, mean_on_us) needs 0<duty<=1 and "
+                             f"mean_on_us>0, got {burst}")
+        mean_off_us = mean_on_us * (1.0 - duty) / duty
+        on_rate = arrival_rate / duty
+        phase_on = True
+        arr_gen = 0  # invalidates pending arrivals across OFF periods
 
-    heap: list = []  # (t, j, k); j == -1 marks an arrival event
+    heap: list = []  # (t, j, k); j == -1 arrival, j == -2 phase toggle
     queues = {k: [] for k in range(K) if is_q[k]}
     busy = {k: 0 for k in range(K) if is_q[k]}
     leader: dict = {}
@@ -233,13 +272,38 @@ def _simulate_py_open(
         if warm_c is None and done >= warm_target:
             warm_c, warm_t = done, now
 
-    heapq.heappush(heap, (rng.expovariate(arrival_rate), -1, -1))
+    if use_burst:
+        heapq.heappush(heap, (rng.expovariate(on_rate), -1, arr_gen))
+        heapq.heappush(heap, (rng.expovariate(1.0 / mean_on_us), -2, 0))
+    else:
+        heapq.heappush(heap, (rng.expovariate(arrival_rate), -1, -1))
     t = 0.0
     while done < n_requests:
         t, j, k = heapq.heappop(heap)
 
-        if j < 0:  # Poisson arrival
-            heapq.heappush(heap, (t + rng.expovariate(arrival_rate), -1, -1))
+        if j == -2:  # ON/OFF phase toggle
+            phase_on = not phase_on
+            if phase_on:
+                heapq.heappush(heap, (t + rng.expovariate(on_rate), -1,
+                                      arr_gen))
+                heapq.heappush(heap, (t + rng.expovariate(1.0 / mean_on_us),
+                                      -2, 0))
+            else:
+                arr_gen += 1  # invalidate the arrival pending from ON
+                off = (rng.expovariate(1.0 / mean_off_us)
+                       if mean_off_us > 0.0 else 0.0)
+                heapq.heappush(heap, (t + off, -2, 0))
+            continue
+
+        if j == -1:  # arrival
+            if use_burst:
+                if k != arr_gen:  # pending arrival from a closed ON period
+                    continue
+                heapq.heappush(heap, (t + rng.expovariate(on_rate), -1,
+                                      arr_gen))
+            else:
+                heapq.heappush(heap, (t + rng.expovariate(arrival_rate),
+                                      -1, -1))
             if not free:
                 dropped += 1
                 continue
@@ -253,7 +317,7 @@ def _simulate_py_open(
             continue
 
         # MSHR fill: parked delayed hits complete with the fill.
-        if coalesce_flows and k == disk_idx and job_flow[j] >= 0:
+        if coalesce_flows and disk_rank[k] >= 0 and job_flow[j] >= 0:
             f = job_flow[j]
             for w in parked.pop(f, []):
                 delayed += 1
@@ -275,8 +339,8 @@ def _simulate_py_open(
             continue
         job_pos[j] = pos
         k2 = int(visits[b, pos])
-        if coalesce_flows and k2 == disk_idx:
-            f = sample_flow()
+        if coalesce_flows and disk_rank[k2] >= 0:
+            f = int(disk_rank[k2]) * F + sample_flow()
             job_flow[j] = f
             if f in leader:
                 parked.setdefault(f, []).append(j)

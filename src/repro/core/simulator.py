@@ -24,11 +24,18 @@ Design notes
   station's mean (the paper reports insensitivity to the service
   distribution; tests confirm).
 * **Miss coalescing** (``coalesce_flows > 0``).  An MSHR-style
-  outstanding-miss table over F hot-key "flows": a job arriving at the
-  ``disk`` station whose flow already has a fetch in flight parks (no
+  outstanding-miss table over F hot-key "flows": a job arriving at a
+  disk station whose flow already has a fetch in flight parks (no
   duplicate I/O, no bounded-depth slot) and completes when the fill
   lands — the event-level counterpart of
-  :func:`repro.core.queueing.coalesced_network`.
+  :func:`repro.core.queueing.coalesced_network`.  A network may carry
+  several disk stations (the cluster composition's per-shard ``sK:disk``
+  replicas): each owns its own flow group in the leader table, so
+  coalescing is shard-local.
+* **Per-branch accounting.**  The closed kernel counts completions and
+  delayed hits per branch (post-warmup), which is how the cluster prong
+  recovers per-shard throughput / hit-ratio / delayed-hit breakdowns
+  from one compiled dispatch.
 
 One loop iteration processes exactly one event (a service completion);
 a disk completion may additionally retire any parked delayed hits.
@@ -82,7 +89,7 @@ class SimSpec(NamedTuple):
     branch_cum: jax.Array  # (B,) f32 cumulative branch probabilities
     visits: jax.Array  # (B, L) i32 station indices, -1 padded
     servers: jax.Array  # (K,) i32 FCFS server count (1 for think stations)
-    disk_idx: jax.Array  # () i32 backing-store station index, -1 if none
+    disk_rank: jax.Array  # (K,) i32 backing-store group id, -1 for non-disks
     mpl: int
 
 
@@ -135,6 +142,17 @@ def compile_network(net: ClosedNetwork, p_hit: float) -> SimSpec:
         dtype=np.int32,
     )
 
+    # A station is a backing store if it is named "disk" — either the bare
+    # single-node disk or a per-shard replica ("s3:disk", the cluster
+    # composition's naming).  Each disk gets its own MSHR flow group, so
+    # miss coalescing is local to the shard whose disk serves the fetch.
+    disk_rank = np.full(K, -1, dtype=np.int32)
+    rank = 0
+    for i, name in enumerate(names):
+        if name.split(":")[-1] == "disk":
+            disk_rank[i] = rank
+            rank += 1
+
     return SimSpec(
         is_queue=jnp.asarray(is_queue),
         svc_ns=jnp.asarray(svc_ns),
@@ -143,7 +161,7 @@ def compile_network(net: ClosedNetwork, p_hit: float) -> SimSpec:
         branch_cum=jnp.asarray(branch_cum),
         visits=jnp.asarray(visits),
         servers=jnp.asarray(servers),
-        disk_idx=jnp.int32(idx.get("disk", -1)),
+        disk_rank=jnp.asarray(disk_rank),
         mpl=net.mpl,
     )
 
@@ -211,21 +229,30 @@ class _SimState(NamedTuple):
     elapsed_us: jax.Array  # f32
     warm_completed: jax.Array  # i32
     warm_elapsed_us: jax.Array  # f32
-    # --- outstanding-miss (MSHR) table, used only when n_flows > 0 ---
+    # --- outstanding-miss (MSHR) table, used only when n_flows > 0.
+    # With D disk stations (a sharded cluster) the table holds D*n_flows
+    # entries: the fetch for flow f at the disk of rank r lives at
+    # r*n_flows + f, so coalescing never crosses shards.
     flow: jax.Array  # (N,) i32 flow a job fetches/parks on, -1 otherwise
-    leader: jax.Array  # (F,) i32 job id leading each flow's fetch, -1 idle
+    leader: jax.Array  # (D*F,) i32 job id leading each flow's fetch, -1 idle
     delayed: jax.Array  # i32 completed requests that were delayed hits
     warm_delayed: jax.Array  # i32 `delayed` at the warmup crossing
+    # --- per-branch completion accounting (cluster per-shard stats) ---
+    branch_done: jax.Array  # (B,) i32 completions per branch
+    branch_delayed: jax.Array  # (B,) i32 delayed-hit completions per branch
+    warm_branch_done: jax.Array  # (B,) i32 snapshots at the warmup crossing
+    warm_branch_delayed: jax.Array  # (B,) i32
 
 
 @partial(jax.jit,
          static_argnames=("n_requests", "warmup", "mpl", "max_events",
-                          "n_flows", "flow_theta"))
+                          "n_flows", "flow_theta", "n_disks"))
 def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
               max_events: int, n_flows: int = 0,
-              flow_theta: float = 0.0) -> tuple:
+              flow_theta: float = 0.0, n_disks: int = 1) -> tuple:
     N = mpl
     F = max(n_flows, 1)  # leader-table shape must be static even when unused
+    B = spec.branch_cum.shape[0]
     key = jax.random.PRNGKey(seed)
 
     def sample_branch(key):
@@ -255,9 +282,13 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         warm_completed=jnp.int32(-1),
         warm_elapsed_us=jnp.float32(0.0),
         flow=jnp.full((N,), -1, jnp.int32),
-        leader=jnp.full((F,), -1, jnp.int32),
+        leader=jnp.full((max(n_disks, 1) * F,), -1, jnp.int32),
         delayed=jnp.int32(0),
         warm_delayed=jnp.int32(0),
+        branch_done=jnp.zeros((B,), jnp.int32),
+        branch_delayed=jnp.zeros((B,), jnp.int32),
+        warm_branch_done=jnp.zeros((B,), jnp.int32),
+        warm_branch_delayed=jnp.zeros((B,), jnp.int32),
     )
 
     def cond(carry):
@@ -288,6 +319,8 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         leader = state.leader
         completed = state.completed
         delayed = state.delayed
+        branch_done = state.branch_done
+        branch_delayed = state.branch_delayed
 
         # ---- MSHR fill: j's fetch landed — wake every request parked on it.
         # Parked jobs are NOT in the disk queue (ready=INF but enq_seq=BIG),
@@ -297,7 +330,7 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         # fresh one at a first (think) station.
         if n_flows:
             f_cur = flow[j]
-            fill = (k_cur == spec.disk_idx) & (f_cur >= 0)
+            fill = (spec.disk_rank[k_cur] >= 0) & (f_cur >= 0)
             woken = (flow == f_cur) & fill
             woken = woken.at[j].set(False)
             wake_branch = jax.vmap(sample_branch)(jax.random.split(k_wake_b, N))
@@ -305,6 +338,11 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             wake_svc = jax.vmap(lambda k, s: _sample_service_ns(k, spec, s))(
                 jax.random.split(k_wake_s, N), wake_station
             )
+            # count the woken jobs' completions under the branch they parked
+            # on (a miss route) before the wake resamples their branch
+            wcount = woken.astype(jnp.int32)
+            branch_done = branch_done.at[branch].add(wcount)
+            branch_delayed = branch_delayed.at[branch].add(wcount)
             ready = jnp.where(woken, wake_svc, ready)
             station = jnp.where(woken, wake_station, station)
             branch = jnp.where(woken, wake_branch, branch)
@@ -347,6 +385,7 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         done = route_next < 0
 
         new_branch = sample_branch(k_branch)
+        branch_done = branch_done.at[branch[j]].add(done.astype(jnp.int32))
         branch_j = jnp.where(done, new_branch, branch[j])
         pos_j = jnp.where(done, 0, nxt_pos)
         k_next = jnp.where(done, spec.visits[new_branch, 0], route_next)
@@ -360,9 +399,12 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             # Arriving at the backing store: sample which (hot) key this
             # miss fetches.  If a fetch for that key is already in flight,
             # park on the outstanding-miss table — no duplicate disk I/O,
-            # no I/O-depth slot, no queue position.
-            at_disk = k_next == spec.disk_idx
-            f_new = _sample_flow(k_flow, n_flows, flow_theta)
+            # no I/O-depth slot, no queue position.  Flows are local to the
+            # disk group (shard) the job arrived at.
+            rank_next = spec.disk_rank[k_next]
+            at_disk = rank_next >= 0
+            f_new = (jnp.maximum(rank_next, 0) * F
+                     + _sample_flow(k_flow, n_flows, flow_theta))
             parks = at_disk & (leader[f_new] >= 0)
             starts_now = ((~is_q) | has_slot) & ~parks
             waits = is_q & ~has_slot & ~parks
@@ -382,6 +424,10 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         warm_completed = jnp.where(warm_now, completed, state.warm_completed)
         warm_elapsed_us = jnp.where(warm_now, elapsed_us, state.warm_elapsed_us)
         warm_delayed = jnp.where(warm_now, delayed, state.warm_delayed)
+        warm_branch_done = jnp.where(warm_now, branch_done,
+                                     state.warm_branch_done)
+        warm_branch_delayed = jnp.where(warm_now, branch_delayed,
+                                        state.warm_branch_delayed)
 
         new_state = _SimState(
             key=key,
@@ -400,6 +446,10 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             leader=leader,
             delayed=delayed,
             warm_delayed=warm_delayed,
+            branch_done=branch_done,
+            branch_delayed=branch_delayed,
+            warm_branch_done=warm_branch_done,
+            warm_branch_delayed=warm_branch_delayed,
         )
         return new_state, events + 1
 
@@ -412,7 +462,10 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         (state.delayed - state.warm_delayed).astype(jnp.float32)
         / jnp.maximum(n_measured, 1).astype(jnp.float32)
     )
-    return x, state.completed, events, delayed_frac
+    return (x, state.completed, events, delayed_frac,
+            state.branch_done - state.warm_branch_done,
+            state.branch_delayed - state.warm_branch_delayed,
+            jnp.maximum(t_measured, 1e-6))
 
 
 class _OpenState(NamedTuple):
@@ -432,19 +485,23 @@ class _OpenState(NamedTuple):
     warm_elapsed_us: jax.Array  # f32
     dropped: jax.Array  # i32 arrivals that found no free slot
     flow: jax.Array  # (N,) i32 MSHR flow, -1 otherwise
-    leader: jax.Array  # (F,) i32
+    leader: jax.Array  # (D*F,) i32, one flow group per disk station
     delayed: jax.Array  # i32
     warm_delayed: jax.Array  # i32
     soj_us: jax.Array  # (R,) f32 per-completion sojourn records
     cls: jax.Array  # (R,) i8 per-completion class records
+    phase_on: jax.Array  # bool, ON/OFF burst phase (always ON when Poisson)
+    phase_to_ns: jax.Array  # i32 time to the next phase toggle (INF: none)
 
 
 @partial(jax.jit,
          static_argnames=("n_requests", "warmup", "max_in_system",
-                          "max_events", "n_flows", "flow_theta"))
+                          "max_events", "n_flows", "flow_theta", "n_disks",
+                          "burst"))
 def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                    warmup: int, max_in_system: int, max_events: int,
-                   n_flows: int = 0, flow_theta: float = 0.0) -> tuple:
+                   n_flows: int = 0, flow_theta: float = 0.0,
+                   n_disks: int = 1, burst=None) -> tuple:
     """Arrival-driven (open-loop) twin of :func:`_simulate`.
 
     One extra event type — a Poisson arrival — competes with service
@@ -453,6 +510,14 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
     a fixed record buffer indexed by completion order.  MSHR semantics
     match the closed kernel: parked delayed hits complete at fill time,
     with the parked interval included in their recorded sojourn.
+
+    ``burst=(duty, mean_on_us)`` replaces the Poisson process with an
+    ON-OFF MMPP of the same *mean* rate: exponential ON periods of mean
+    ``mean_on_us`` during which arrivals are Poisson at ``rate/duty``,
+    alternating with exponential OFF periods of mean
+    ``mean_on_us*(1-duty)/duty`` with no arrivals.  Phase toggles are a
+    third event type in the same min-reduction.  ``None`` keeps the
+    original Poisson program.
 
     Sojourns are accumulated per slot as a sum of event increments (like
     the global elapsed clock) rather than as differences of absolute f32
@@ -463,21 +528,37 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
     F = max(n_flows, 1)
     R = n_requests + N  # a fill can complete up to N-1 parked jobs past n_requests
     key = jax.random.PRNGKey(seed)
-    branch_has_disk = (
-        (spec.visits == spec.disk_idx).any(axis=1) & (spec.disk_idx >= 0)
-    )
+    vis_rank = spec.disk_rank[jnp.maximum(spec.visits, 0)]
+    branch_has_disk = ((vis_rank >= 0) & (spec.visits >= 0)).any(axis=1)
+    if burst is not None:
+        duty, mean_on_us = float(burst[0]), float(burst[1])
+        if not 0.0 < duty <= 1.0 or mean_on_us <= 0.0:
+            raise ValueError(f"burst=(duty, mean_on_us) needs 0<duty<=1 and "
+                             f"mean_on_us>0, got {burst}")
+        mean_on_ns = mean_on_us * 1e3
+        mean_off_ns = mean_on_ns * (1.0 - duty) / duty
 
     def sample_branch(key):
         u = jax.random.uniform(key, ())
         return jnp.searchsorted(spec.branch_cum, u).astype(jnp.int32)
 
-    def interarrival(key):
+    def exp_ns(key, mean_ns):
         u = jax.random.uniform(key, (), minval=1e-7, maxval=1.0 - 1e-7)
-        return jnp.maximum(
-            jnp.round(-jnp.log(u) * arrival_mean_ns), 1.0
-        ).astype(jnp.int32)
+        return jnp.maximum(jnp.round(-jnp.log(u) * mean_ns), 1.0
+                           ).astype(jnp.int32)
+
+    def interarrival(key):
+        # during ON periods the MMPP arrives at rate/duty, i.e. the mean
+        # interarrival shrinks by duty; the OFF gaps restore the mean rate.
+        mean = arrival_mean_ns * duty if burst is not None else arrival_mean_ns
+        return exp_ns(key, mean)
 
     key, k0 = jax.random.split(key)
+    if burst is not None:
+        key, kp = jax.random.split(key)
+        phase_to0 = exp_ns(kp, mean_on_ns)
+    else:
+        phase_to0 = jnp.int32(INF_NS)
     state = _OpenState(
         key=key,
         ready_ns=jnp.full((N,), INF_NS),
@@ -495,11 +576,13 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
         warm_elapsed_us=jnp.float32(0.0),
         dropped=jnp.int32(0),
         flow=jnp.full((N,), -1, jnp.int32),
-        leader=jnp.full((F,), -1, jnp.int32),
+        leader=jnp.full((max(n_disks, 1) * F,), -1, jnp.int32),
         delayed=jnp.int32(0),
         warm_delayed=jnp.int32(0),
         soj_us=jnp.zeros((R,), jnp.float32),
         cls=jnp.zeros((R,), jnp.int8),
+        phase_on=jnp.bool_(True),
+        phase_to_ns=phase_to0,
     )
 
     def cond(carry):
@@ -509,26 +592,54 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
     def body(carry):
         state, events = carry
         n_keys = 7 if n_flows else 6
+        if burst is not None:
+            n_keys += 2
         keys = jax.random.split(state.key, n_keys)
         key, k_svc1, k_svc2, k_branch, k_svc0, k_ia = keys[:6]
         k_flow = keys[6] if n_flows else None
+        k_tog_a, k_tog_p = (keys[-2], keys[-1]) if burst is not None else (None, None)
 
         j = jnp.argmin(state.ready_ns).astype(jnp.int32)
         t_dep = state.ready_ns[j]
-        is_arrival = state.next_arrival_ns <= t_dep
-        t = jnp.minimum(state.next_arrival_ns, t_dep)
+        if burst is not None:
+            # arrivals win ties against departures (as before) and toggles
+            is_arrival = state.next_arrival_ns <= jnp.minimum(
+                t_dep, state.phase_to_ns)
+            is_toggle = (~is_arrival) & (state.phase_to_ns <= t_dep)
+            t = jnp.minimum(jnp.minimum(state.next_arrival_ns, t_dep),
+                            state.phase_to_ns)
+            next_arrival = jnp.where(state.next_arrival_ns < INF_NS,
+                                     state.next_arrival_ns - t, INF_NS)
+            phase_to = state.phase_to_ns - t
+        else:
+            is_arrival = state.next_arrival_ns <= t_dep
+            t = jnp.minimum(state.next_arrival_ns, t_dep)
+            next_arrival = state.next_arrival_ns - t
+            phase_to = state.phase_to_ns
         finite = state.ready_ns < INF_NS
         ready = jnp.where(finite, state.ready_ns - t, INF_NS)
         dt_us = t.astype(jnp.float32) * 1e-3
         elapsed_us = state.elapsed_us + dt_us
         state = state._replace(
             key=key, ready_ns=ready,
-            next_arrival_ns=state.next_arrival_ns - t,
+            next_arrival_ns=next_arrival,
+            phase_to_ns=phase_to,
             elapsed_us=elapsed_us,
             # jobs in system (incl. waiting and MSHR-parked) age by dt
             age_us=jnp.where(state.station >= 0, state.age_us + dt_us,
                              state.age_us),
         )
+
+        def toggle(s: _OpenState) -> _OpenState:
+            # ON -> OFF: arrivals pause; OFF -> ON: fresh arrival clock.
+            going_on = ~s.phase_on
+            return s._replace(
+                phase_on=going_on,
+                next_arrival_ns=jnp.where(going_on, interarrival(k_tog_a),
+                                          jnp.int32(INF_NS)),
+                phase_to_ns=jnp.where(going_on, exp_ns(k_tog_p, mean_on_ns),
+                                      exp_ns(k_tog_p, mean_off_ns)),
+            )
 
         def arrive(s: _OpenState) -> _OpenState:
             free = s.station < 0
@@ -562,7 +673,7 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
             # ---- MSHR fill: parked delayed hits complete at fill time.
             if n_flows:
                 f_cur = flow[j]
-                fill = (k_cur == spec.disk_idx) & (f_cur >= 0)
+                fill = (spec.disk_rank[k_cur] >= 0) & (f_cur >= 0)
                 woken = (flow == f_cur) & fill
                 woken = woken.at[j].set(False)
                 widx = jnp.where(woken, completed + jnp.cumsum(woken) - 1, R)
@@ -623,8 +734,10 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
             is_q = spec.is_queue[k_next] & ~done
             has_slot = busy_count[k_next] < spec.servers[k_next]
             if n_flows:
-                at_disk = (route_next == spec.disk_idx) & ~done
-                f_new = _sample_flow(k_flow, n_flows, flow_theta)
+                rank_next = spec.disk_rank[jnp.maximum(route_next, 0)]
+                at_disk = (rank_next >= 0) & (route_next >= 0) & ~done
+                f_new = (jnp.maximum(rank_next, 0) * F
+                         + _sample_flow(k_flow, n_flows, flow_theta))
                 parks = at_disk & (leader[f_new] >= 0)
                 starts_now = ((~is_q) | has_slot) & ~parks & ~done
                 waits = is_q & ~has_slot & ~parks
@@ -659,7 +772,14 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                 soj_us=soj_us, cls=cls,
             )
 
-        new_state = jax.lax.cond(is_arrival, arrive, depart, state)
+        if burst is not None:
+            new_state = jax.lax.cond(
+                is_arrival, arrive,
+                lambda s: jax.lax.cond(is_toggle, toggle, depart, s),
+                state,
+            )
+        else:
+            new_state = jax.lax.cond(is_arrival, arrive, depart, state)
         return new_state, events + 1
 
     state, events = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
@@ -684,6 +804,12 @@ class SimResult:
     # fraction of measured completions that were delayed hits (coalesced
     # onto an in-flight fetch); zeros unless coalesce_flows > 0.
     delayed_frac: np.ndarray | None = None
+    # per-branch completion rates (requests/µs), (P, B) in the order of
+    # ``net.branches``; ``branch_delayed`` is the delayed-hit subset of the
+    # same completions.  The cluster prong folds these into per-shard
+    # throughput / hit-ratio / delayed-hit breakdowns.
+    branch_throughput: np.ndarray | None = None
+    branch_delayed: np.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -726,6 +852,7 @@ def simulate_network(
     coalesce_theta: float = 0.0,
     arrival_rate=None,
     max_in_system: int = 128,
+    burst=None,
 ):
     """Simulate ``net`` over a grid of hit ratios.
 
@@ -752,9 +879,17 @@ def simulate_network(
     delayed hits spend parked on the MSHR table).  ``max_in_system`` sizes
     the job-slot pool; arrivals beyond it are counted in ``drop_frac``
     (keep it 0 — size the pool generously relative to lambda·R).
+
+    ``burst=(duty, mean_on_us)`` (open mode only) makes the arrivals an
+    ON-OFF MMPP at the same mean rate: exponential ON periods of mean
+    ``mean_on_us`` µs during which arrivals run at ``arrival_rate/duty``,
+    separated by arrival-free OFF periods sized to restore the mean.
+    ``None`` keeps Poisson arrivals (the exact original program).
     """
     p_hits = np.atleast_1d(np.asarray(p_hits, dtype=np.float64))
-    spec = stack_specs([compile_network(net, float(p)) for p in p_hits])
+    specs = [compile_network(net, float(p)) for p in p_hits]
+    spec = stack_specs(specs)
+    n_disks = int(max(1, int(np.asarray(specs[0].disk_rank).max()) + 1))
     warmup = int(n_requests * warmup_frac)
     # one event per station visit; bound with headroom
     max_events = int(n_requests * (spec.visits.shape[-1] + 2) * 3)
@@ -774,21 +909,30 @@ def simulate_network(
     )
 
     if arrival_rate is None:
+        if burst is not None:
+            raise ValueError("burst arrivals require arrival_rate "
+                             "(open-loop mode)")
         runner = jax.vmap(
             lambda sp, seed: _simulate(
                 SimSpec(*sp, mpl=net.mpl), seed, n_requests=n_requests,
                 warmup=warmup, mpl=net.mpl, max_events=max_events,
                 n_flows=coalesce_flows, flow_theta=coalesce_theta,
+                n_disks=n_disks,
             ),
             in_axes=(0, 0),
         )
         out = runner(spec_arrays, seed_v)
         xs = np.asarray(out[0]).reshape(S, P)
         dl = np.asarray(out[3]).reshape(S, P)
+        t_meas = np.asarray(out[6]).reshape(S, P, 1)
+        bx = np.asarray(out[4]).reshape(S, P, -1) / t_meas
+        bd = np.asarray(out[5]).reshape(S, P, -1) / t_meas
         mean = xs.mean(axis=0)
         ci = 1.96 * xs.std(axis=0, ddof=1) / math.sqrt(len(seeds)) if len(seeds) > 1 else np.zeros_like(mean)
         return SimResult(p_hit=p_hits, throughput=mean, ci95=ci,
-                         n_requests=n_requests, delayed_frac=dl.mean(axis=0))
+                         n_requests=n_requests, delayed_frac=dl.mean(axis=0),
+                         branch_throughput=bx.mean(axis=0),
+                         branch_delayed=bd.mean(axis=0))
 
     lam = np.broadcast_to(
         np.asarray(arrival_rate, dtype=np.float64), (P,)
@@ -805,7 +949,8 @@ def simulate_network(
             SimSpec(*sp, mpl=net.mpl), seed, m, n_requests=n_requests,
             warmup=warmup, max_in_system=max_in_system,
             max_events=max_events, n_flows=coalesce_flows,
-            flow_theta=coalesce_theta,
+            flow_theta=coalesce_theta, n_disks=n_disks,
+            burst=tuple(burst) if burst is not None else None,
         ),
         in_axes=(0, 0, 0),
     )

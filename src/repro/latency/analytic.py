@@ -27,11 +27,21 @@ coincides with the closed-loop p*.  That is the paper's phenomenon restated
 in latency terms: past the knee, a higher hit ratio buys you a *lower*
 ceiling and, at fixed lambda, a *longer* response time.
 
-Tails use an exponential-mixture approximation: each branch's sojourn is
-approximated as exponential at its mean, and the overall sojourn CDF is the
-probability-weighted mixture — exact for single-visit M/M/1 routes,
-conservative ordering elsewhere.  Units are microseconds and requests/µs
-throughout, matching :mod:`repro.core.queueing`.
+Tails are a per-branch **moment-matched phase-type mixture**: each
+branch's sojourn is a sum of per-visit components (deterministic or
+exponential think stages, M/M/c waits + exponential services), so its
+first two moments are known in closed form; the branch tail is the
+gamma / generalized-Erlang distribution matching them — the continuous
+interpolation of the equal-rate hypoexponential (Erlang-k) family, with
+``cv² = 1`` collapsing to the exponential exactly.  The overall sojourn
+CDF is the probability-weighted mixture over branches.  For a
+single-visit M/M/1 route the branch sojourn is exactly exponential and
+the fit is exact; for multi-visit routes the old per-branch exponential
+tail (still available as ``tail="exp"``) badly inflates p99 when a
+branch is a sum of many comparable stages — the miss path's 100µs disk
+stage plus sub-µs metadata visits has ``cv² ≪ 1``, nothing like an
+exponential.  Units are microseconds and requests/µs throughout,
+matching :mod:`repro.core.queueing`.
 """
 
 from __future__ import annotations
@@ -63,6 +73,90 @@ def erlang_c(c: int, a: float) -> float:
     return b / (1.0 - rho * (1.0 - b))
 
 
+def _gammainc_reg(s: float, x: float) -> float:
+    """Regularized lower incomplete gamma P(s, x) — series for x < s+1,
+    Lentz continued fraction otherwise (Numerical Recipes 6.2).  Above
+    shape 50 the series/CF need O(sqrt(s))..O(s) terms, so the
+    Wilson-Hilferty cube-root normal approximation takes over (abs error
+    < ~1e-4 there — far below the tail model's own error), keeping each
+    CDF evaluation O(1) inside the percentile/SLO bisections."""
+    if x <= 0.0:
+        return 0.0
+    if s > 50.0:
+        z = ((x / s) ** (1.0 / 3.0) - (1.0 - 1.0 / (9.0 * s))) \
+            * 3.0 * math.sqrt(s)
+        return 0.5 * (1.0 + math.erf(z / math.sqrt(2.0)))
+    lg = math.lgamma(s)
+    pref = math.exp(-x + s * math.log(x) - lg)
+    if x < s + 1.0:
+        term = 1.0 / s
+        total = term
+        n = 0
+        while n < 100_000:
+            n += 1
+            term *= x / (s + n)
+            total += term
+            if term < total * 1e-13:
+                break
+        return min(1.0, total * pref)
+    tiny = 1e-300
+    b = x + 1.0 - s
+    c = 1.0 / tiny
+    d = 1.0 / b if b != 0.0 else 1.0 / tiny
+    h = d
+    for i in range(1, 100_000):
+        an = -i * (i - s)
+        b += 2.0
+        d = an * d + b
+        if abs(d) < tiny:
+            d = tiny
+        c = b + an / c
+        if abs(c) < tiny:
+            c = tiny
+        d = 1.0 / d
+        delta = d * c
+        h *= delta
+        if abs(delta - 1.0) < 1e-13:
+            break
+    return max(0.0, min(1.0, 1.0 - pref * h))
+
+
+def _branch_cdf(t: float, mean: float, var: float) -> float:
+    """Moment-matched branch sojourn CDF at ``t``.
+
+    gamma(shape m²/v, scale v/m): shape 1 == exponential (single M/M/1
+    visit — exact), integer shapes == Erlang == equal-rate
+    hypoexponential, shape < 1 covers the heavy low-utilization M/M/c
+    wait mixtures (cv² > 1).  Degenerate variance (an all-deterministic
+    route) is a step at the mean."""
+    if mean <= 0.0:
+        return 1.0
+    shape = mean * mean / var if var > 0.0 else math.inf
+    if shape > 1e6:  # numerically deterministic
+        return 1.0 if t >= mean else 0.0
+    return _gammainc_reg(shape, t * shape / mean)
+
+
+def _mixture_quantile(comps, q: float) -> float:
+    """Bisect the branch-mixture CDF; ``comps`` rows are (prob, mean, cdf)."""
+    def cdf(t: float) -> float:
+        return sum(pb * f(t) for pb, _, f in comps)
+
+    hi = max(rb for _, rb, _ in comps) + 1e-12
+    while cdf(hi) < q:
+        hi *= 2.0
+    lo = 0.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if cdf(mid) < q:
+            lo = mid
+        else:
+            hi = mid
+        if hi - lo <= 1e-9 * hi:
+            break
+    return 0.5 * (lo + hi)
+
+
 def lambda_max(net: ClosedNetwork, p_hit, tail_mode: str = "zero"):
     """Open-loop stability boundary: the largest Poisson arrival rate the
     network can sustain at hit ratio p, ``min_k c_k / D_k`` over queue
@@ -84,10 +178,10 @@ class OpenAnalysis:
     """One (p_hit, lambda) operating point of the open network.
 
     ``station_time`` maps each station to its per-visit sojourn (wait +
-    service); ``branches`` carries (name, probability, mean response) per
-    route — the exponential-mixture components behind :meth:`percentile`.
-    An unstable point (some queue station with offered load >= c) has
-    ``stable=False`` and infinite means.
+    service); ``branches`` carries (name, probability, mean response,
+    response variance) per route — the moment-matched mixture components
+    behind :meth:`percentile`.  An unstable point (some queue station
+    with offered load >= c) has ``stable=False`` and infinite means.
     """
 
     p_hit: float
@@ -96,36 +190,41 @@ class OpenAnalysis:
     mean: float
     utilization: Dict[str, float]
     station_time: Dict[str, float]
-    branches: Tuple[tuple, ...]  # (name, prob, mean_response)
+    branches: Tuple[tuple, ...]  # (name, prob, mean_response, var_response)
 
-    def percentile(self, q: float = 0.99) -> float:
-        """Sojourn-time percentile via the exponential-mixture tail
-        approximation: F(t) = sum_b p_b (1 - exp(-t / R_b)), solved by
-        bisection.  Exact when every branch's sojourn is exponential
-        (e.g. a single M/M/1 visit); an approximation otherwise."""
+    def percentile(self, q: float = 0.99, tail: str = "hypo") -> float:
+        """Sojourn-time percentile, solved by bisection on the mixture CDF.
+
+        ``tail="hypo"`` (default): each branch uses the moment-matched
+        gamma / generalized-Erlang tail (the equal-rate hypoexponential
+        family, continuously interpolated) fitted to the branch's exact
+        first two moments — exact for a single M/M/1 visit (cv² = 1 →
+        exponential) and far tighter than the exponential at high
+        utilization, where a branch is a sum of many stages.
+        ``tail="exp"`` keeps the legacy per-branch exponential mixture
+        for comparison.
+        """
         if not 0.0 < q < 1.0:
             raise ValueError("percentile q must be in (0, 1)")
+        if tail not in ("hypo", "exp"):
+            raise ValueError(f"unknown tail {tail!r} (want 'hypo' or 'exp')")
         if not self.stable:
             return math.inf
-        comps = [(pb, rb) for _, pb, rb in self.branches if pb > 0.0]
+        if tail == "exp":
+            comps = [
+                (pb, rb,
+                 (lambda t, rb=rb: -math.expm1(-t / rb)) if rb > 0.0
+                 else (lambda t: 1.0))
+                for _, pb, rb, _ in self.branches if pb > 0.0
+            ]
+        else:
+            comps = [
+                (pb, rb, (lambda t, rb=rb, vb=vb: _branch_cdf(t, rb, vb)))
+                for _, pb, rb, vb in self.branches if pb > 0.0
+            ]
         if not comps:
             return 0.0
-
-        def cdf(t: float) -> float:
-            return sum(pb * -math.expm1(-t / rb) if rb > 0.0 else pb
-                       for pb, rb in comps)
-
-        hi = max(rb for _, rb in comps) + 1e-12
-        while cdf(hi) < q:
-            hi *= 2.0
-        lo = 0.0
-        for _ in range(200):
-            mid = 0.5 * (lo + hi)
-            if cdf(mid) < q:
-                lo = mid
-            else:
-                hi = mid
-        return 0.5 * (lo + hi)
+        return _mixture_quantile(comps, q)
 
 
 def analyze_open(net: ClosedNetwork, p_hit: float, arrival_rate: float,
@@ -142,6 +241,7 @@ def analyze_open(net: ClosedNetwork, p_hit: float, arrival_rate: float,
     p = float(p_hit)
     counts = net.visit_counts(p)
     station_time: Dict[str, float] = {}
+    station_var: Dict[str, float] = {}
     util: Dict[str, float] = {}
     stable = True
     for s in net.stations:
@@ -150,6 +250,9 @@ def analyze_open(net: ClosedNetwork, p_hit: float, arrival_rate: float,
             svc = 0.0
         if s.kind != QUEUE:
             station_time[s.name] = svc
+            # det stages contribute no variance; exp (and, approximately,
+            # pareto) stages contribute svc^2.
+            station_var[s.name] = 0.0 if s.dist == "det" else svc * svc
             continue
         lam_k = arrival_rate * counts[s.name]
         a = lam_k * svc
@@ -158,16 +261,27 @@ def analyze_open(net: ClosedNetwork, p_hit: float, arrival_rate: float,
         if a >= c:
             stable = False
             station_time[s.name] = math.inf
+            station_var[s.name] = math.inf
             continue
         wait = erlang_c(c, a) * svc / (c - a) if svc > 0.0 else 0.0
         station_time[s.name] = svc + wait
+        # M/M/c sojourn moments: W = 0 w.p. 1-C, else Exp((c-a)/S), so
+        # Var W = (S/(c-a))^2 C(2-C); service Exp(S) adds S^2.  For c=1
+        # this collapses to the exact M/M/1 sojourn variance (S/(1-rho))^2.
+        if svc > 0.0:
+            cw = erlang_c(c, a)
+            wu = svc / (c - a)
+            station_var[s.name] = wu * wu * cw * (2.0 - cw) + svc * svc
+        else:
+            station_var[s.name] = 0.0
 
     branches = []
     mean = 0.0
     for b in net.branches:
         pb = b.probability(p)
         rb = sum(station_time[v] for v in b.visits)
-        branches.append((b.name, pb, rb))
+        vb = sum(station_var[v] for v in b.visits)
+        branches.append((b.name, pb, rb, vb))
         mean += pb * rb
     return OpenAnalysis(
         p_hit=p, arrival_rate=float(arrival_rate), stable=stable,

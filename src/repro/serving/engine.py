@@ -52,9 +52,12 @@ class ServeConfig:
     # forecast (the paper's testbed pinned one client thread per core on a
     # 72-core Xeon — real pods differ), and disk_servers > 0 models the
     # backing store / prefill path as a bounded-concurrency queue station
-    # instead of the paper's infinite-server disk.
+    # instead of the paper's infinite-server disk.  n_shards > 1 lifts the
+    # forecast to a hash-routed cluster of identical pods (repro.cluster):
+    # per-shard station replicas, cluster-level p*.
     cores: int = 72
     disk_servers: int = 0
+    n_shards: int = 1
 
 
 @dataclasses.dataclass
@@ -337,7 +340,9 @@ class Engine:
     def forecast_network(self, step_us: float, prefill_us: float,
                          replicas: int = 1, batched_update: bool = False,
                          cores: int | None = None,
-                         coalesce_flows: int = 0):
+                         coalesce_flows: int = 0,
+                         n_shards: int | None = None,
+                         shard_profile=None):
         """Closed-network p* forecast for this engine's prefix controller.
 
         Uses the measured controller op profile plus the ServeConfig
@@ -355,6 +360,18 @@ class Engine:
         analogue of MSHR miss coalescing) over that many hot chunks, via
         :func:`repro.core.queueing.coalesced_network` with the prefill
         latency as the in-flight window.
+
+        ``n_shards`` (default ``ServeConfig.n_shards``) > 1 lifts the
+        measured-profile network to a hash-routed cluster of identical
+        pods via :func:`repro.cluster.compose_cluster` and returns the
+        composed cluster network — per-shard station replicas, cluster
+        MPL ``n_shards * replicas * cores``, cluster-level p*.
+        ``shard_profile`` (a :class:`repro.cluster.ShardProfile`) supplies
+        routing skew + per-shard local hit ratios; the default is a
+        perfectly balanced homogeneous cluster.  Coalescing and sharding
+        are mutually exclusive here: the analytic sigma fixed point is a
+        single-node construct (shard-local coalescing lives in the
+        cluster simulators).
         """
         from repro.core.harness import PAPER_SERVICES, ServiceTimes
         from repro.core.queueing import (QUEUE, THINK, Branch, ClosedNetwork,
@@ -389,9 +406,20 @@ class Engine:
         ]
         net = ClosedNetwork(f"serving-{self.serve.policy}", tuple(stations),
                             tuple(branches), mpl)
+        n_shards = self.serve.n_shards if n_shards is None else int(n_shards)
         if coalesce_flows:
+            if n_shards > 1:
+                raise ValueError(
+                    "coalesce_flows and n_shards > 1 are mutually exclusive "
+                    "in the analytic forecast; use repro.cluster.sim for "
+                    "shard-local coalescing")
             net = coalesced_network(net, flows=coalesce_flows,
                                     window_us=prefill_us)
+        if n_shards > 1:
+            from repro.cluster import compose_cluster, uniform_profile
+
+            profile = shard_profile or uniform_profile(n_shards)
+            return compose_cluster(net, profile, mpl=mpl * n_shards).network
         return net
 
     def forecast_slo(self, step_us: float, prefill_us: float,

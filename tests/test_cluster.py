@@ -1,0 +1,274 @@
+"""Sharded cache-cluster prong (PR 5).
+
+Hashing: ring determinism, consistent-hash stability under membership
+change, two-choice balance.  Model: the uniform composition collapses to
+N scaled single nodes; Zipf skew moves the cluster LRU p* strictly below
+the single-node forecast while FIFO stays monotone; routed vs ideal
+stability boundaries.  Simulation: the vmapped JAX cluster sim against
+the key-routing heapq oracle on cluster throughput, per-shard hit
+ratios, and delayed-hit fractions across lru/fifo/clock × {uniform,
+Zipf θ=1} × {1, 4, 16} shards (16 marked slow), plus low-utilization
+agreement with the open-loop Erlang-C mixture.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    HashRing,
+    cluster_network,
+    compose_cluster,
+    ideal_shard_profile,
+    imbalance,
+    measured_shard_profile,
+    partition_trace,
+    shard_weights,
+    simulate_cluster,
+    simulate_cluster_py,
+    two_choice_assignment,
+    uniform_profile,
+    zipf_key_probs,
+)
+from repro.core import build, exponential_analogue
+from repro.core.harness import zipf_trace
+
+KEY_SPACE = 1024
+
+
+def _skewed(n_shards, theta=1.0, key_space=KEY_SPACE, seed=1):
+    probs = zipf_key_probs(key_space, theta, seed=0)
+    assign = HashRing(n_shards, vnodes=64, seed=seed).assignment(key_space)
+    return probs, assign, ideal_shard_profile(assign, probs)
+
+
+# ---------------------------------------------------------------------------
+# Hashing layer
+# ---------------------------------------------------------------------------
+
+
+def test_ring_deterministic_and_total():
+    ring = HashRing(8, vnodes=32, seed=3)
+    a = ring.assignment(KEY_SPACE)
+    b = HashRing(8, vnodes=32, seed=3).assignment(KEY_SPACE)
+    np.testing.assert_array_equal(a, b)
+    assert set(np.unique(a)) <= set(range(8))
+    # a different seed produces a different placement
+    c = HashRing(8, vnodes=32, seed=4).assignment(KEY_SPACE)
+    assert np.any(a != c)
+
+
+def test_ring_consistency_on_membership_change():
+    """The property consistent hashing exists for: removing one shard
+    re-homes ONLY that shard's keys."""
+    ring = HashRing(8, vnodes=64, seed=1)
+    a = ring.assignment(KEY_SPACE)
+    a2 = ring.without(3).assignment(KEY_SPACE)
+    moved = a != a2
+    assert np.all(a[moved] == 3)
+    assert np.all(a2[moved] != 3)
+    # adding it back restores the original placement exactly
+    a3 = ring.without(3).with_shard(3).assignment(KEY_SPACE)
+    np.testing.assert_array_equal(a, a3)
+
+
+def test_two_choice_beats_ring_balance():
+    probs = zipf_key_probs(4096, 1.0, seed=0)
+    ring_w = shard_weights(HashRing(8, vnodes=64, seed=1).assignment(4096),
+                           probs, 8)
+    tc_w = shard_weights(two_choice_assignment(probs, 8, seed=1), probs, 8)
+    assert imbalance(tc_w) < imbalance(ring_w)
+    assert imbalance(tc_w) < 1.05  # near-perfect with weights known
+    assert imbalance(ring_w) > 1.2  # the skew the cluster model rides on
+
+
+def test_partition_trace_is_a_partition():
+    trace = zipf_trace(5_000, KEY_SPACE, 1.0, seed=0)
+    assign = HashRing(4, seed=1).assignment(KEY_SPACE)
+    subs = partition_trace(trace, assign)
+    assert sum(len(s) for s in subs) == len(trace)
+    for k, sub in enumerate(subs):
+        assert np.all(assign[sub] == k)
+
+
+def test_shard_weights_are_exact_masses():
+    probs, assign, _ = _skewed(4)
+    w = shard_weights(assign, probs, 4)
+    assert w.sum() == pytest.approx(1.0)
+    for k in range(4):
+        assert w[k] == pytest.approx(probs[assign == k].sum())
+
+
+# ---------------------------------------------------------------------------
+# Analytic cluster model
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_cluster_is_n_times_single_node():
+    single = build("lru", disk_us=100.0)
+    cm = cluster_network("lru", 4, disk_us=100.0)
+    P = np.linspace(0.05, 0.95, 7)
+    np.testing.assert_allclose(cm.throughput_upper(P),
+                               4.0 * single.throughput_upper(P), rtol=1e-9)
+    assert cm.p_star(grid=2001) == pytest.approx(single.p_star(grid=2001),
+                                                 abs=1e-3)
+    cm.network.validate()
+
+
+def test_shard_profile_mixture_identity():
+    """shard_p inverts the global mixture: sum_k w_k p_k(p) == p inside
+    the profile's achievable range."""
+    _, _, prof = _skewed(8, key_space=4096)
+    for p in (0.2, 0.5, 0.8):
+        assert prof.weights @ prof.shard_p(p) == pytest.approx(p, abs=1e-6)
+    lo, hi = prof.p_range()
+    np.testing.assert_allclose(prof.shard_p(hi + 0.5),
+                               prof.shard_p(hi))  # clamped
+
+
+def test_cluster_pstar_below_single_node_under_skew():
+    """The headline: the hot shard's hit path saturates early, so the
+    cluster-level LRU p* sits strictly below the single-node forecast;
+    FIFO's cluster bound stays monotone (p* = 1)."""
+    _, _, prof = _skewed(8, theta=1.0, key_space=4096)
+    single = build("lru", disk_us=100.0)
+    cm = cluster_network("lru", 8, profile=prof, disk_us=100.0)
+    p_single = single.p_star(grid=4001)
+    p_cluster = cm.p_star(grid=4001)
+    assert p_cluster < p_single - 0.01, (p_cluster, p_single)
+
+    ff = cluster_network("fifo", 8, profile=prof, disk_us=100.0)
+    grid = np.linspace(0.02, 0.9, 45)
+    assert np.all(np.diff(ff.throughput_upper(grid)) >= -1e-9)
+    assert ff.p_star(grid=2001) == 1.0
+
+
+def test_measured_profile_matches_ideal_shape():
+    """Mattson-measured per-shard curves: valid profile, same qualitative
+    ordering as the analytic masses (hot shard hotter than cold)."""
+    probs, assign, ideal = _skewed(4, key_space=2048)
+    trace = zipf_trace(20_000, 2048, 1.0, seed=0)
+    prof = measured_shard_profile(trace, assign)
+    assert prof.weights.sum() == pytest.approx(1.0)
+    assert np.all(np.diff(prof.shard_hit, axis=1) >= -1e-12)
+    # measured request shares track the exact popularity masses
+    np.testing.assert_allclose(prof.weights, ideal.weights, atol=0.03)
+    hot, cold = np.argmax(prof.weights), np.argmin(prof.weights)
+    pk = prof.shard_p(0.6)
+    assert pk[hot] > pk[cold]
+
+
+def test_routed_vs_ideal_lambda_max():
+    """Hash routing can't rebalance: the routed boundary sits at or below
+    the per-shard min-law sum, with equality only when balanced."""
+    _, _, prof = _skewed(8, key_space=4096)
+    cm = cluster_network("lru", 8, profile=prof, disk_us=100.0)
+    for p in (0.5, 0.8):
+        routed = float(cm.lambda_max(p))
+        ideal = float(cm.ideal_lambda_max(p))
+        assert routed < ideal
+    # balanced homogeneous cluster: routed == ideal == N x single node
+    cu = cluster_network("lru", 4, disk_us=100.0)
+    from repro.latency import lambda_max
+
+    single = float(lambda_max(build("lru", disk_us=100.0), 0.7))
+    assert float(cu.lambda_max(0.7)) == pytest.approx(4 * single, rel=1e-9)
+    assert float(cu.ideal_lambda_max(0.7)) == pytest.approx(4 * single,
+                                                            rel=1e-9)
+
+
+def test_compose_cluster_rejects_mismatched_profile():
+    with pytest.raises(ValueError):
+        cluster_network("lru", 4, profile=uniform_profile(8))
+
+
+# ---------------------------------------------------------------------------
+# Simulation differentials: JAX cluster sim vs key-routing heapq oracle
+# ---------------------------------------------------------------------------
+
+P_OP = 0.6  # global operating point for the differential matrix
+
+
+def _differential(policy, theta, n_shards, n_jax=9_000, n_py=7_000):
+    probs = zipf_key_probs(KEY_SPACE, theta, seed=0)
+    assign = HashRing(n_shards, vnodes=64, seed=1).assignment(KEY_SPACE)
+    prof = ideal_shard_profile(assign, probs)
+    cm = cluster_network(policy, n_shards, profile=prof, disk_us=100.0,
+                         mpl=12 * n_shards)
+    jx = simulate_cluster(cm, [P_OP], n_requests=n_jax, seeds=(0, 1),
+                          coalesce_flows=8)
+    py = simulate_cluster_py(cm, probs, assign, P_OP, n_requests=n_py,
+                             seed=3, coalesce_flows=8)
+
+    # cluster throughput
+    assert abs(py["x"] - jx.throughput[0]) / py["x"] < 0.12, (
+        policy, theta, n_shards, py["x"], jx.throughput)
+    # per-shard hit ratios: traffic-weighted disagreement (tiny shards are
+    # noisy at these run lengths)
+    w = cm.profile.weights
+    hit_gap = np.nansum(w * np.abs(jx.shard_hit_ratio[0]
+                                   - py["shard_hit_ratio"]))
+    assert hit_gap < 0.06, (policy, theta, n_shards, hit_gap)
+    # the oracle's emergent routing shares match the exact masses
+    assert np.abs(py["shard_share"] - w).max() < 0.08
+    # per-shard delayed-hit fractions
+    del_gap = np.nansum(w * np.abs(jx.shard_delayed_frac[0]
+                                   - py["shard_delayed_frac"]))
+    assert del_gap < 0.06, (policy, theta, n_shards, del_gap)
+    assert abs(jx.delayed_frac[0] - py["delayed_frac"]) < 0.06
+    # per-shard throughputs sum to the cluster rate
+    np.testing.assert_allclose(jx.shard_throughput[0].sum(),
+                               jx.throughput[0], rtol=0.02)
+
+
+@pytest.mark.parametrize("theta", [0.0, 1.0])
+@pytest.mark.parametrize("policy", ["lru", "fifo", "clock"])
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_cluster_sim_matches_key_routing_oracle(policy, theta, n_shards):
+    _differential(policy, theta, n_shards)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("theta", [0.0, 1.0])
+@pytest.mark.parametrize("policy", ["lru", "fifo", "clock"])
+def test_cluster_sim_matches_oracle_16_shards(policy, theta):
+    _differential(policy, theta, 16, n_jax=12_000, n_py=9_000)
+
+
+def test_cluster_sim_respects_analytic_bound():
+    _, _, prof = _skewed(4)
+    cm = cluster_network("lru", 4, profile=prof, disk_us=100.0, mpl=96)
+    jx = simulate_cluster(cm, [0.5, 0.8], n_requests=10_000, seeds=(0, 1))
+    ub = cm.throughput_upper(jx.p_hit)
+    assert np.all(jx.throughput <= ub * 1.03), (jx.throughput, ub)
+
+
+def test_cluster_open_sim_matches_analytic_mixture():
+    """Low-utilization open-loop cluster: simulated mean sojourn agrees
+    with the routing-weighted Erlang-C mixture R(p, lambda)."""
+    from repro.core.simulator import simulate_network
+
+    _, _, prof = _skewed(4)
+    cm = cluster_network("lru", 4, profile=prof, disk_us=100.0)
+    p = 0.7
+    lam = 0.35 * float(cm.lambda_max(p, tail_mode="nominal"))
+    net = exponential_analogue(cm.network)
+    jx = simulate_network(net, [p], arrival_rate=lam, n_requests=15_000,
+                          seeds=(0, 1), max_in_system=256)
+    want = float(cm.response_time(p, lam))
+    assert np.all(jx.drop_frac == 0.0)
+    rel = abs(jx.sojourn_mean[0] - want) / want
+    assert rel < 0.1, (jx.sojourn_mean[0], want)
+
+
+def test_cluster_sim_shard_local_coalescing():
+    """Delayed-hit fractions follow per-shard miss rates: the hot shard
+    (higher local hit ratio) coalesces LESS than the cold shard at the
+    same global p — flows never cross shards."""
+    probs, assign, prof = _skewed(4)
+    cm = cluster_network("lru", 4, profile=prof, disk_us=100.0, mpl=48)
+    jx = simulate_cluster(cm, [0.6], n_requests=12_000, seeds=(0, 1, 2),
+                          coalesce_flows=8)
+    pk = prof.shard_p(0.6)
+    hot, cold = int(np.argmax(pk)), int(np.argmin(pk))
+    assert jx.shard_delayed_frac[0, hot] < jx.shard_delayed_frac[0, cold]
+    assert jx.delayed_frac[0] > 0.05

@@ -238,3 +238,62 @@ def test_backends_agree_on_classification():
     b = measure_cache("clock", 64, backend="jax", **kw)
     np.testing.assert_allclose(a.class_fracs, b.class_fracs)
     assert a.coalesce_sigma == pytest.approx(b.coalesce_sigma)
+
+
+# ---------------------------------------------------------------------------
+# Satellite (PR 5): TTL / failed-fetch re-issue in the classifiers
+# ---------------------------------------------------------------------------
+
+
+def test_refetch_zero_fail_prob_bit_identical():
+    """q=0 (and any W=0) must leave the classification bit-identical."""
+    from repro.cache import DELAYED_HIT, classify_inflight, refetch_attempts
+
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 97, 4_000)
+    hits = rng.random(4_000) < 0.6
+    np.testing.assert_array_equal(refetch_attempts(100, 0.0), np.ones(100))
+    np.testing.assert_array_equal(
+        classify_inflight(keys, hits, 20),
+        classify_inflight(keys, hits, 20, fail_prob=0.0, fail_seed=9))
+    z = classify_inflight(keys, hits, 0, fail_prob=0.7)
+    assert not np.any(z == DELAYED_HIT)
+
+
+def test_refetch_twins_agree_and_delay_grows_with_q():
+    """jax == py under failure/re-issue, and the extended in-flight
+    windows strictly increase the delayed-hit mass with q."""
+    from repro.cache import DELAYED_HIT, classify_inflight, classify_inflight_py
+
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 97, 4_000)
+    hits = rng.random(4_000) < 0.6
+    fracs = []
+    for q in (0.0, 0.4, 0.8):
+        j = classify_inflight(keys, hits, 20, fail_prob=q, fail_seed=7)
+        p = classify_inflight_py(keys, hits, 20, fail_prob=q, fail_seed=7)
+        np.testing.assert_array_equal(j, p)
+        fracs.append(float((j == DELAYED_HIT).mean()))
+    assert fracs[0] < fracs[1] < fracs[2], fracs
+
+
+def test_refetch_validation_and_harness_plumbing():
+    from repro.cache import classify_inflight, refetch_attempts
+
+    with pytest.raises(ValueError):
+        refetch_attempts(10, 1.0)
+    with pytest.raises(ValueError):
+        classify_inflight(np.zeros(4, np.int64), np.zeros(4, bool), 5,
+                          fail_prob=-0.1)
+    m0 = measure_cache("lru", 128, key_space=1024, n_requests=10_000,
+                       backend="jax", miss_latency_requests=25)
+    m1 = measure_cache("lru", 128, key_space=1024, n_requests=10_000,
+                       backend="jax", miss_latency_requests=25,
+                       fetch_fail_prob=0.5)
+    assert m1.coalesce_sigma > m0.coalesce_sigma
+    out = sweep_cache_sizes("lru", [64, 256], key_space=1024,
+                            n_requests=10_000, miss_latency_requests=25,
+                            fetch_fail_prob=0.5)
+    base = sweep_cache_sizes("lru", [64, 256], key_space=1024,
+                             n_requests=10_000, miss_latency_requests=25)
+    assert np.all(out["p_delayed"] >= base["p_delayed"])

@@ -262,6 +262,122 @@ def test_open_sim_rejects_bad_rate():
 
 
 # ---------------------------------------------------------------------------
+# Satellite: moment-matched hypoexponential per-branch tails
+# ---------------------------------------------------------------------------
+
+
+def test_hypoexp_tail_tightens_p99_at_high_utilization():
+    """The moment-matched per-branch (gamma / generalized-Erlang) tail
+    must land closer to the simulated p99 than the legacy per-branch
+    exponential mixture at high utilization — a multi-stage branch has
+    cv² < 1, nothing like an exponential."""
+    from repro.core.simulator import simulate_network
+
+    net = exponential_analogue(build("lru", disk_us=5.0))
+    grid = np.linspace(0.0, 1.0, 201)
+    lam = 0.838 * float(np.max(lambda_max(net, grid)))
+    p = 0.9
+    sim = simulate_network(net, [p], arrival_rate=lam, n_requests=30_000,
+                           seeds=(0, 1, 2), max_in_system=256)
+    a = analyze_open(net, p, lam)
+    hypo = a.percentile(0.99)
+    legacy = a.percentile(0.99, tail="exp")
+    p99 = float(sim.sojourn_p99[0])
+    assert abs(hypo - p99) < abs(legacy - p99), (hypo, legacy, p99)
+    assert abs(hypo - p99) / p99 < 0.25, (hypo, p99)
+
+
+def test_hypoexp_tail_lighter_than_exp_mixture():
+    """Sums of stages are lighter-tailed than exponentials at the same
+    mean, so the new p99 sits strictly below the legacy one on every
+    multi-stage network."""
+    a = analyze_open(lru_network(disk_us=100.0), 0.8, 1.0)
+    assert a.percentile(0.99) < a.percentile(0.99, tail="exp")
+    assert 0 < a.percentile(0.5) < a.percentile(0.9) < a.percentile(0.99)
+
+
+def test_percentile_rejects_unknown_tail():
+    a = analyze_open(lru_network(disk_us=100.0), 0.5, 0.5)
+    with pytest.raises(ValueError):
+        a.percentile(0.99, tail="weibull")
+
+
+def test_branch_variance_is_mm1_exact():
+    """c=1 station: the recorded branch variance must equal the exact
+    M/M/1 sojourn variance (S/(1-rho))^2, making the gamma fit collapse
+    to the true exponential."""
+    s, lam = 2.0, 0.3
+    a = analyze_open(_mm1(s), 0.5, lam)
+    (_, _, rb, vb), = [b for b in a.branches]
+    want = (s / (1.0 - lam * s)) ** 2
+    assert vb == pytest.approx(want, rel=1e-12)
+    assert rb * rb == pytest.approx(vb, rel=1e-12)  # cv^2 == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: MAP / ON-OFF burst arrivals
+# ---------------------------------------------------------------------------
+
+
+def test_burst_preserves_mean_rate():
+    from repro.core.simulator import simulate_network
+
+    net = exponential_analogue(lru_network(disk_us=100.0))
+    lam = 0.5
+    jx = simulate_network(net, [0.7], arrival_rate=lam, n_requests=30_000,
+                          seeds=(0, 1), burst=(0.8, 500.0))
+    assert np.all(jx.drop_frac == 0.0)
+    assert abs(jx.throughput[0] - lam) / lam < 0.1, jx.throughput
+
+
+def test_burst_raises_sojourn_at_load():
+    """Same mean rate, bursty arrivals: the ON-period overload pushes the
+    mean and tail sojourn above Poisson."""
+    from repro.core.simulator import simulate_network
+
+    net = exponential_analogue(lru_network(disk_us=100.0))
+    lam = 0.9
+    kw = dict(arrival_rate=lam, n_requests=25_000, seeds=(0, 1),
+              max_in_system=512)
+    po = simulate_network(net, [0.7], **kw)
+    bu = simulate_network(net, [0.7], burst=(0.55, 2_000.0), **kw)
+    assert bu.sojourn_mean[0] > 1.3 * po.sojourn_mean[0], (
+        bu.sojourn_mean, po.sojourn_mean)
+    assert bu.sojourn_p99[0] > po.sojourn_p99[0]
+
+
+def test_burst_oracle_agrees():
+    from repro.core.py_sim import simulate_py
+    from repro.core.simulator import simulate_network
+
+    net = exponential_analogue(lru_network(disk_us=100.0))
+    lam, burst = 0.8, (0.6, 1_000.0)
+    py = [simulate_py(net, 0.7, n_requests=8_000, seed=s, arrival_rate=lam,
+                      burst=burst, max_in_system=256) for s in (3, 4)]
+    jx = simulate_network(net, [0.7], arrival_rate=lam, n_requests=12_000,
+                          seeds=(0, 1, 2), burst=burst, max_in_system=256)
+    r_py = np.mean([r["sojourn_mean"] for r in py])
+    x_py = np.mean([r["x"] for r in py])
+    assert abs(x_py - jx.throughput[0]) / x_py < 0.1, (x_py, jx.throughput)
+    assert abs(r_py - jx.sojourn_mean[0]) / r_py < 0.2, (
+        r_py, jx.sojourn_mean)
+
+
+def test_burst_validation():
+    from repro.core.py_sim import simulate_py
+    from repro.core.simulator import simulate_network
+
+    net = lru_network(disk_us=100.0)
+    with pytest.raises(ValueError):  # burst needs the open-loop mode
+        simulate_network(net, [0.5], n_requests=100, burst=(0.5, 100.0))
+    with pytest.raises(ValueError):  # bad duty
+        simulate_network(net, [0.5], arrival_rate=0.5, n_requests=100,
+                         burst=(1.5, 100.0))
+    with pytest.raises(ValueError):
+        simulate_py(net, 0.5, n_requests=100, burst=(0.5, 100.0))
+
+
+# ---------------------------------------------------------------------------
 # Satellite: queueing-aware (MVA) in-flight window
 # ---------------------------------------------------------------------------
 

@@ -203,3 +203,47 @@ def test_forecast_slo_operating_points(attn_model):
     assert f.p_star_throughput == pytest.approx(saturated.p_star(), abs=0.05)
     # feasible points meet the SLO at the offered rate
     assert np.all(f.r_tail[f.feasible] <= f.slo_us + 1e-6)
+
+
+def test_forecast_network_cluster(attn_model):
+    """ServeConfig.n_shards lifts the measured-profile forecast to a
+    hash-routed cluster: per-shard station replicas, cluster MPL, and a
+    uniform cluster bound exactly n_shards x the single pod's."""
+    import numpy as np
+
+    cfg, params = attn_model
+    reqs = zipf_request_stream(8, n_prefixes=3, prefix_len=16,
+                               vocab=cfg.vocab, seed=6, new_tokens=4)
+    eng = Engine(cfg, params, ServeConfig(
+        max_seqs=2, max_seq_len=128, page_size=8, n_pages=64,
+        prefix_capacity=32, policy="lru", max_new_tokens=4, cores=16,
+        n_shards=4))
+    for _, t in reqs:
+        eng.submit(t)
+    eng.run()
+
+    single = eng.forecast_network(step_us=6000.0, prefill_us=40.0,
+                                  n_shards=1)
+    cluster = eng.forecast_network(step_us=6000.0, prefill_us=40.0)
+    assert cluster.mpl == 4 * single.mpl
+    assert any(s.name == "s3:head" for s in cluster.stations)
+    cluster.validate()
+    P = np.linspace(0.1, 0.9, 5)
+    np.testing.assert_allclose(cluster.throughput_upper(P),
+                               4.0 * single.throughput_upper(P), rtol=1e-9)
+    # skewed profile: cluster p* moves below the single-pod forecast
+    from repro.cluster import HashRing, ideal_shard_profile, zipf_key_probs
+
+    probs = zipf_key_probs(2048, 1.0, seed=0)
+    prof = ideal_shard_profile(HashRing(4, seed=1).assignment(2048), probs)
+    import dataclasses
+
+    skewed = eng.forecast_network(step_us=6000.0, prefill_us=40.0,
+                                  shard_profile=prof)
+    saturated = dataclasses.replace(skewed, mpl=10**6)
+    sat_single = dataclasses.replace(single, mpl=10**6)
+    assert saturated.p_star(grid=2001) < sat_single.p_star(grid=2001)
+    # coalescing + sharding are mutually exclusive in the analytic path
+    with pytest.raises(ValueError):
+        eng.forecast_network(step_us=6000.0, prefill_us=40.0,
+                             coalesce_flows=8)
