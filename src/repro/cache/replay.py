@@ -26,14 +26,15 @@ on every policy for a shared (trace, u) sequence.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from numpy.typing import ArrayLike
 
-from repro.cache.policies import POLICIES
+from repro.cache.policies import POLICIES, PolicyDef
 
 
 class ReplayResult(NamedTuple):
@@ -48,10 +49,12 @@ class ReplayResult(NamedTuple):
     ops: np.ndarray  # int64  (..., T, 4)
 
 
-def _scan_replay(pdef, state, keys, us):
+def _scan_replay(
+    pdef: PolicyDef, state: Any, keys: jax.Array, us: jax.Array
+) -> tuple[Any, jax.Array, jax.Array, jax.Array]:
     """lax.scan a (keys, us) stream through one policy state."""
 
-    def step(state, ku):
+    def step(state: Any, ku: tuple[jax.Array, jax.Array]) -> Any:
         k, u = ku
         state, res = pdef.access(state, k, u)
         return state, (res.hit, res.evicted_key, jnp.stack(res.ops))
@@ -61,16 +64,20 @@ def _scan_replay(pdef, state, keys, us):
 
 
 @partial(jax.jit, static_argnames=("policy",))
-def _replay_one(policy: str, state, keys, us):
+def _replay_one(
+    policy: str, state: Any, keys: jax.Array, us: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     _, hits, evicted, ops = _scan_replay(POLICIES[policy], state, keys, us)
     return hits, evicted, ops
 
 
 @partial(jax.jit, static_argnames=("policy",))
-def _replay_grid(policy: str, states, keys, us):
+def _replay_grid(
+    policy: str, states: Any, keys: jax.Array, us: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     pdef = POLICIES[policy]
 
-    def one(state, k, u):
+    def one(state: Any, k: jax.Array, u: jax.Array) -> Any:
         _, hits, evicted, ops = _scan_replay(pdef, state, k, u)
         return hits, evicted, ops
 
@@ -79,7 +86,7 @@ def _replay_grid(policy: str, states, keys, us):
     return per_cap(states, keys, us)
 
 
-def _as_device(keys, us):
+def _as_device(keys: ArrayLike, us: ArrayLike) -> tuple[jax.Array, jax.Array]:
     keys = np.asarray(keys)
     us = np.asarray(us)
     if keys.shape != us.shape:
@@ -87,7 +94,7 @@ def _as_device(keys, us):
     return jnp.asarray(keys, jnp.int32), jnp.asarray(us, jnp.float32)
 
 
-def _resolve_key_space(keys, key_space) -> int:
+def _resolve_key_space(keys: ArrayLike, key_space: int | None) -> int:
     """Resolve and VALIDATE the key space: out-of-range keys must fail
     loudly — JAX clamps gather indices and drops out-of-bounds scatters,
     so they would otherwise alias other keys and silently corrupt the
@@ -104,9 +111,9 @@ def _resolve_key_space(keys, key_space) -> int:
     return int(key_space)
 
 
-def replay_trace(policy: str, keys, us, capacity: int, *,
-                 key_space: int | None = None, pad_to: int | None = None,
-                 **params) -> ReplayResult:
+def replay_trace(policy: str, keys: ArrayLike, us: ArrayLike,
+                 capacity: int, *, key_space: int | None = None,
+                 pad_to: int | None = None, **params: Any) -> ReplayResult:
     """Replay one trace through one policy instance as a compiled scan.
 
     ``us`` is the admission-coin stream (uniform [0,1)); pass the same
@@ -154,7 +161,8 @@ def _count_leq_before(x: np.ndarray, span: int) -> np.ndarray:
     return counts[:T]
 
 
-def lru_sweep(keys, capacities) -> tuple:
+def lru_sweep(keys: ArrayLike,
+              capacities: ArrayLike) -> tuple[np.ndarray, np.ndarray]:
     """Exact LRU replay of one trace at EVERY capacity in one pass.
 
     LRU is a stack algorithm (Mattson et al. 1970): the cache of size C is
@@ -201,9 +209,9 @@ def lru_sweep(keys, capacities) -> tuple:
     return hits, ops
 
 
-def replay_grid(policy: str, keys, us, capacities, *,
-                key_space: int | None = None, pad_to: int | None = None,
-                **params) -> ReplayResult:
+def replay_grid(policy: str, keys: ArrayLike, us: ArrayLike,
+                capacities: ArrayLike, *, key_space: int | None = None,
+                pad_to: int | None = None, **params: Any) -> ReplayResult:
     """Replay a (capacity x seed) measurement grid in one dispatch.
 
     ``keys``/``us`` are (T,) for a single stream or (S, T) for S seed
@@ -230,7 +238,8 @@ TRUE_MISS, TRUE_HIT, DELAYED_HIT = 0, 1, 2
 _FAR_PAST = np.int32(-(2**30))  # "no fetch ever" sentinel for last-fetch times
 
 
-def _classify_lane(keys, hits, windows, key_space_arr):
+def _classify_lane(keys: jax.Array, hits: jax.Array, windows: jax.Array,
+                   key_space_arr: jax.Array) -> jax.Array:
     """Scan one (T,) lane: per-request {true miss, true hit, delayed hit}.
 
     The carried state is the per-key fetch *expiry* index (the fetch that
@@ -241,7 +250,8 @@ def _classify_lane(keys, hits, windows, key_space_arr):
     """
     T = keys.shape[0]
 
-    def step(expiry, x):
+    def step(expiry: jax.Array,
+             x: tuple[jax.Array, ...]) -> tuple[jax.Array, jax.Array]:
         t, k, h, w = x
         outstanding = t <= expiry[k]
         cls = jnp.where(outstanding, DELAYED_HIT,
@@ -282,7 +292,7 @@ def refetch_attempts(n: int, fail_prob: float, seed: int = 0) -> np.ndarray:
     return rng.geometric(1.0 - fail_prob, size=n).astype(np.int64)
 
 
-def classify_inflight(keys, hits, window,
+def classify_inflight(keys: ArrayLike, hits: ArrayLike, window: ArrayLike,
                       key_space: int | None = None,
                       fail_prob: float = 0.0,
                       fail_seed: int = 0) -> np.ndarray:

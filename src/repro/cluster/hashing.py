@@ -31,11 +31,12 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+from numpy.typing import ArrayLike
 
 _GOLDEN = np.uint64(0x9E3779B97F4A7C15)
 
 
-def _mix64(x) -> np.ndarray:
+def _mix64(x: ArrayLike) -> np.ndarray:
     """splitmix64, vectorized: the generator's golden-ratio state
     increment (so x and x+1 land far apart) followed by its finalizer."""
     x = np.asarray(x).astype(np.uint64) + _GOLDEN
@@ -44,7 +45,7 @@ def _mix64(x) -> np.ndarray:
     return x ^ (x >> np.uint64(31))
 
 
-def _hash2(a, b, seed: int) -> np.ndarray:
+def _hash2(a: ArrayLike, b: ArrayLike, seed: int) -> np.ndarray:
     return _mix64(_mix64(np.uint64(seed) ^ np.asarray(a, np.uint64))
                   ^ np.asarray(b, np.uint64))
 
@@ -63,9 +64,11 @@ class HashRing:
     n_shards: int
     vnodes: int = 64
     seed: int = 0
-    shards: tuple = ()
+    shards: tuple[int, ...] = ()
+    _pos: np.ndarray = dataclasses.field(init=False, repr=False, compare=False)
+    _owner: np.ndarray = dataclasses.field(init=False, repr=False, compare=False)
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         shards = self.shards or tuple(range(self.n_shards))
         if len(set(shards)) != len(shards) or not shards:
             raise ValueError(f"bad shard id list {shards}")
@@ -80,7 +83,7 @@ class HashRing:
         object.__setattr__(self, "_owner",
                            sid[order].astype(np.int64))
 
-    def shard_of(self, keys) -> np.ndarray:
+    def shard_of(self, keys: ArrayLike) -> np.ndarray | int:
         """Vectorized key → shard lookup (first ring point clockwise)."""
         h = _mix64(np.asarray(keys, np.uint64) ^ np.uint64(self.seed))
         idx = np.searchsorted(self._pos, h, side="left") % len(self._pos)
@@ -103,7 +106,7 @@ class HashRing:
                         shards=self.shards + (int(shard),))
 
 
-def two_choice_assignment(key_weights, n_shards: int,
+def two_choice_assignment(key_weights: ArrayLike, n_shards: int,
                           seed: int = 0) -> np.ndarray:
     """Static power-of-two-choices key placement.
 
@@ -129,8 +132,8 @@ def two_choice_assignment(key_weights, n_shards: int,
     return assign
 
 
-def shard_weights(assign, key_weights, n_shards: int | None = None
-                  ) -> np.ndarray:
+def shard_weights(assign: ArrayLike, key_weights: ArrayLike,
+                  n_shards: int | None = None) -> np.ndarray:
     """Exact per-shard request shares: the popularity mass each shard owns.
 
     This is the routing weight vector the analytic cluster model and the
@@ -147,13 +150,14 @@ def shard_weights(assign, key_weights, n_shards: int | None = None
     return w / tot
 
 
-def imbalance(weights) -> float:
+def imbalance(weights: ArrayLike) -> float:
     """Hot-shard load factor: max shard share / balanced share (>= 1)."""
     w = np.asarray(weights, np.float64)
     return float(w.max() * len(w) / w.sum())
 
 
-def partition_trace(trace, assign, n_shards: int | None = None) -> list:
+def partition_trace(trace: ArrayLike, assign: ArrayLike,
+                    n_shards: int | None = None) -> list[np.ndarray]:
     """Split a key trace into per-shard substreams (order preserved).
 
     Returns ``[sub_0, ..., sub_{N-1}]`` with ``sub_k`` the requests routed

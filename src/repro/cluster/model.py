@@ -44,12 +44,10 @@ exact in the simulators (each ``sK:disk`` owns its own flow group); see
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
-
 import numpy as np
 
 from repro.core.policy_models import POLICY_BUILDERS
-from repro.core.queueing import QUEUE, Branch, ClosedNetwork, Station
+from repro.core.queueing import QUEUE, Branch, ClosedNetwork
 
 __all__ = [
     "ShardProfile", "uniform_profile", "zipf_key_probs",

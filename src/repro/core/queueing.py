@@ -107,10 +107,10 @@ class ClosedNetwork:
                 return s
         raise KeyError(name)
 
-    def queue_stations(self):
+    def queue_stations(self) -> list[Station]:
         return [s for s in self.stations if s.kind == QUEUE]
 
-    def think_stations(self):
+    def think_stations(self) -> list[Station]:
         return [s for s in self.stations if s.kind == THINK]
 
     def validate(self, p_grid: Sequence[float] = (0.0, 0.25, 0.5, 0.75, 0.999)) -> None:
@@ -141,7 +141,7 @@ class ClosedNetwork:
                 )
 
     # --------------------------------------------------------------- demands
-    def visit_counts(self, p_hit: float) -> dict:
+    def visit_counts(self, p_hit: float) -> dict[str, float]:
         """Expected visits per request to each station."""
         counts = {s.name: 0.0 for s in self.stations}
         for b in self.branches:
@@ -150,7 +150,8 @@ class ClosedNetwork:
                 counts[v] += pb
         return counts
 
-    def demands(self, p_hit: float, tail_mode: str = "zero") -> dict:
+    def demands(self, p_hit: float,
+                tail_mode: str = "zero") -> dict[str, float]:
         """Per-queue-station demand D_k.
 
         tail_mode:
@@ -170,12 +171,13 @@ class ClosedNetwork:
         counts = self.visit_counts(p_hit)
         return sum(counts[s.name] * s.mean_service(p_hit) for s in self.think_stations())
 
-    def queue_servers(self) -> dict:
+    def queue_servers(self) -> dict[str, int]:
         """Server count c_k per queue station."""
         return {s.name: int(s.servers) for s in self.queue_stations()}
 
     # ------------------------------------------------------------ thm 7.1
-    def throughput_upper(self, p_hit, tail_mode: str = "zero"):
+    def throughput_upper(self, p_hit: float | np.ndarray,
+                         tail_mode: str = "zero") -> float | np.ndarray:
         """Analytic upper bound, X <= min(N/(D+Z), min_k c_k/D_k).  Vectorized.
 
         With all-single-server stations this is exactly the paper's
@@ -217,8 +219,9 @@ class ClosedNetwork:
     # ---------------------------------------------------------------- MVA
     AMVA_AUTO_MPL = 1000  # mode="auto" switches to Schweitzer above this N
 
-    def mva(self, p_hit: float, n: int | None = None, tail_mode: str = "nominal",
-            multiserver: str = "exact", mode: str = "exact"):
+    def mva(self, p_hit: float, n: int | None = None,
+            tail_mode: str = "nominal", multiserver: str = "exact",
+            mode: str = "exact") -> tuple[float, dict[str, float], float]:
         """Mean Value Analysis of the (product-form) exponential analogue.
 
         The paper only derives *bounds*; MVA gives the exact closed-network
@@ -328,7 +331,9 @@ class ClosedNetwork:
                 marg[k] = new
         return X, dict(zip(names, Q.tolist())), Z + float(R.sum())
 
-    def _schweitzer(self, names, D, C, Z, n: int):
+    def _schweitzer(self, names: Sequence[str], D: np.ndarray,
+                    C: np.ndarray, Z: float,
+                    n: int) -> tuple[float, dict[str, float], float]:
         """Schweitzer/approximate MVA fixed point (Bard-Schweitzer).
 
         Iterates R_k = D_k (1 + Q_k (n-1)/n), X = n/(Z + sum R), Q_k = X R_k
@@ -357,8 +362,10 @@ class ClosedNetwork:
             Q = Q_new
         return X, dict(zip(names, Q.tolist())), Z + float(R.sum())
 
-    def mva_throughput(self, p_hit, n: int | None = None, tail_mode: str = "nominal",
-                       multiserver: str = "exact", mode: str = "exact"):
+    def mva_throughput(self, p_hit: float | np.ndarray,
+                       n: int | None = None, tail_mode: str = "nominal",
+                       multiserver: str = "exact",
+                       mode: str = "exact") -> float | np.ndarray:
         p_arr = np.atleast_1d(np.asarray(p_hit, dtype=np.float64))
         out = np.array([
             self.mva(float(p), n=n, tail_mode=tail_mode,
@@ -367,7 +374,8 @@ class ClosedNetwork:
         ])
         return out if np.ndim(p_hit) else float(out[0])
 
-    def response_time_upper(self, p_hit, tail_mode: str = "zero"):
+    def response_time_upper(self, p_hit: float | np.ndarray,
+                            tail_mode: str = "zero") -> float | np.ndarray:
         """Mean cycle (response) time lower bound, R = N / X_upper."""
         return self.mpl / self.throughput_upper(p_hit, tail_mode=tail_mode)
 
@@ -407,7 +415,7 @@ def exponential_analogue(net: ClosedNetwork) -> ClosedNetwork:
 INFLIGHT = "inflight"
 
 
-def _disk_branches(net: ClosedNetwork, disk_name: str):
+def _disk_branches(net: ClosedNetwork, disk_name: str) -> list[Branch]:
     return [b for b in net.branches if disk_name in b.visits]
 
 
@@ -591,7 +599,7 @@ def coalesced_network(
 
     memo: dict = {}  # p -> (sigma, effective window)
 
-    def solve(p: float) -> tuple:
+    def solve(p: float) -> tuple[float, float]:
         key = round(float(p), 12)
         if key in memo:
             return memo[key]

@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 
 from repro import sharding
-from repro.models import layers
 from repro.models.config import ModelConfig
 from repro.models.layers import MODEL, Initializer, apply_rope, rms_norm
 

@@ -10,14 +10,12 @@ data-parallel only (cfg.tensor_parallel=False): see DESIGN.md §5.
 
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 
 from repro import sharding
 from repro.models import layers as L
-from repro.models.attention import KVCache, attention, init_attention, init_kv_cache
+from repro.models.attention import attention, init_attention, init_kv_cache
 from repro.models.config import ModelConfig
 from repro.models.layers import Initializer, layer_norm
 

@@ -19,8 +19,6 @@ leading group axis and are scanned alongside params).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -29,9 +27,9 @@ from repro.models import layers as L
 from repro.models import moe as moe_lib
 from repro.models import rwkv as rwkv_lib
 from repro.models import ssm as ssm_lib
-from repro.models.attention import KVCache, attention, init_attention, init_kv_cache
+from repro.models.attention import attention, init_attention, init_kv_cache
 from repro.models.config import ModelConfig
-from repro.models.layers import Initializer, Param, rms_norm
+from repro.models.layers import Initializer, rms_norm
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,7 @@ eviction is always safe (no refcounting needed — see DESIGN.md).
 
 from __future__ import annotations
 
-from typing import Any, List
+from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -16,12 +16,10 @@ mesh where psum is the identity.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def _quantize_int8(x):

@@ -1,0 +1,8 @@
+"""Fixture: a dead import plus a used one."""
+
+import math
+import os
+
+
+def hypot_us(a_us, b_us):
+    return math.hypot(a_us, b_us)

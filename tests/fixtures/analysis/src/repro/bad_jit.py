@@ -1,0 +1,76 @@
+"""Fixture: one violation per jit-lint rule, with clean counterparts."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("n",))
+def bad_pyflow(x, n):
+    if x > 0:            # jit-pyflow: `x` is traced
+        x = x + 1
+    for _ in range(n):   # clean: `n` is static
+        x = x * 2
+    return x
+
+
+@jax.jit
+def bad_coerce(x):
+    y = float(x)         # jit-coerce: concretizes a tracer
+    z = np.sqrt(x)       # jit-coerce: numpy on a traced value
+    s = x.item()         # jit-coerce: device sync
+    return y + z + s
+
+
+@jax.jit
+def bad_default(x, acc=[]):  # jit-mutable-default
+    return x
+
+
+@jax.jit
+def bad_hash(x):
+    h = x.astype(jnp.uint64)  # jit-hash64: module never enables wide ints
+    return h * jnp.uint64(0x9E3779B97F4A7C15)
+
+
+def clean_scan_user(xs):
+    def step(carry, x):
+        nxt = jnp.where(x > 0, carry + x, carry)  # clean: no Python flow
+        return nxt, nxt
+
+    total, ys = jax.lax.scan(step, jnp.float32(0), xs)
+    return total, ys
+
+
+def bad_scan_body(xs):
+    def step(carry, x):
+        if carry > 0:    # jit-pyflow: carry is traced in a scan body
+            carry = carry - 1
+        return carry, x
+
+    return jax.lax.scan(step, jnp.float32(0), xs)
+
+
+def _helper(x, flag):
+    if flag:             # jit-pyflow when a traced value reaches `flag`
+        return x + 1
+    return x
+
+
+@jax.jit
+def bad_helper_taint(x):
+    return _helper(jnp.float32(1.0), x > 0)  # taints `flag` -> jit-pyflow
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def clean_helper_use(x, mode):
+    return _helper(x, mode)  # `flag` stays static: no finding
+
+
+@jax.jit
+def waived_pyflow(x):
+    if x > 0:  # analysis: ignore[jit-pyflow] -- exercising the waiver path
+        return x
+    return -x

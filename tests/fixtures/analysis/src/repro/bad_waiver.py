@@ -1,0 +1,5 @@
+"""Fixture: a waiver without a reason is itself a violation."""
+
+
+def no_reason(a_ns, b_us):
+    return a_ns + b_us  # analysis: ignore[units-mix]

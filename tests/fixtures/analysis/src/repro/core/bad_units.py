@@ -1,0 +1,47 @@
+"""Fixture: units-lint violations with clean conversion counterparts."""
+
+
+def bad_mix(deadline_ns, now_us):
+    return deadline_ns - now_us          # units-mix: ns minus us
+
+
+def bad_assign(service_us):
+    total_ns = service_us                # units-assign: us into a _ns name
+    return total_ns
+
+
+def bad_compare(t_ns, budget_us):
+    return t_ns < budget_us              # units-mix: compares ns to us
+
+
+def bad_minmax(a_ns, b_us):
+    return min(a_ns, b_us)               # units-mix: min over mixed units
+
+
+def bad_kwarg(run, window_ns):
+    return run(window_us=window_ns)      # units-mix: ns value, us keyword
+
+
+def bad_rate(service_us, arrival_rate):
+    return service_us + arrival_rate     # units-mix: time plus rate
+
+
+def clean_conversion(service_us):
+    total_ns = service_us * 1e3          # explicit conversion clears units
+    elapsed_us = total_ns / 1e3
+    return elapsed_us
+
+
+def clean_same_unit(a_us, b_us):
+    slack_us = a_us - b_us               # same unit: fine
+    return max(a_us, b_us) + slack_us
+
+
+def clean_rate(n_requests, arrival_rate):
+    window_us = n_requests / arrival_rate  # division clears to a time
+    return window_us
+
+
+def waived_mix(a_ns, b_us):
+    # analysis: ignore[units-mix] -- b_us is pre-scaled by the caller
+    return a_ns + b_us

@@ -1,0 +1,7 @@
+"""Fixture: one half of an import cycle."""
+
+from repro import cyc_b
+
+
+def a():
+    return cyc_b.b()

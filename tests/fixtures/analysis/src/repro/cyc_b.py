@@ -1,0 +1,7 @@
+"""Fixture: the other half of an import cycle."""
+
+from repro import cyc_a
+
+
+def b():
+    return cyc_a.a()

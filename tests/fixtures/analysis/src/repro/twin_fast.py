@@ -1,0 +1,10 @@
+"""Fixture: the jax side of a twin pair (see test_analysis.py)."""
+
+
+def fast_fn(net, p_hits, n_requests=1000, seeds=(0,), coalesce_theta=0.0,
+            burst=None):
+    return None
+
+
+def drifted_fast(net, p_hits, fail_prob=0.0):
+    return None

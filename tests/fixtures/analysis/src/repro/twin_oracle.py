@@ -1,0 +1,16 @@
+"""Fixture: the oracle side of a twin pair (see test_analysis.py)."""
+
+
+class Oracle:
+    def __init__(self, net, p_hit, n_requests=1000, seed=0,
+                 coalesce_theta=0.0, burst=None):
+        pass
+
+
+def oracle_fn(net, p_hit, n_requests=1000, seed=0, coalesce_theta=0.0,
+              burst=None):
+    return None
+
+
+def drifted_oracle(net, p_hit, n_requests=500):
+    return None

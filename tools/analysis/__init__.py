@@ -1,0 +1,44 @@
+"""Static-analysis suite for the repo's twin contracts and jit/unit
+conventions.  Run ``python -m tools.analysis`` from the repo root; see
+``docs/ARCHITECTURE.md`` for the rule reference.
+
+Checkers (selectable via ``--only``):
+
+=============  =====================================================
+``contracts``  twin-contract registry (jax fast path vs Python oracle)
+``jit``        tracing-safety lint over jit/scan/vmap-reachable code
+``units``      ``_ns``/``_us``/``_rate`` suffix-mixing lint
+``imports``    import-graph cycles, dead imports, dormant-wing report
+``docs_paths`` README/docs path references must exist
+=============  =====================================================
+"""
+
+from __future__ import annotations
+
+from . import contracts, docs_paths, import_graph, jit_lint, units_lint
+
+CHECKERS = {
+    "contracts": contracts.run,
+    "jit": jit_lint.run,
+    "units": units_lint.run,
+    "imports": import_graph.run,
+    "docs_paths": docs_paths.run,
+}
+
+RULES = {
+    "contracts": ("twin-missing", "twin-kwargs", "twin-default",
+                  "twin-allowlist"),
+    "jit": ("jit-pyflow", "jit-coerce", "jit-mutable-default",
+            "jit-hash64"),
+    "units": ("units-mix", "units-assign"),
+    "imports": ("imports-cycle", "imports-dead"),
+    "docs_paths": ("docs-paths",),
+    "_base": ("waiver-reason",),
+}
+
+__all__ = ["CHECKERS", "RULES", "main"]
+
+
+def main(argv=None) -> int:
+    from .__main__ import main as _main
+    return _main(argv)

@@ -1,0 +1,97 @@
+"""Entry point: ``python -m tools.analysis [--only a,b] [--root PATH]``.
+
+Exit status 0 when clean, 1 when any violation survives waivers.  CI
+gates on this (the ``static-analysis`` job); the docs job runs
+``--only docs_paths``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+from . import CHECKERS, RULES
+from .base import Note, SourceFile, Violation, apply_waivers, load_sources
+
+SOURCE_DIRS = ("src/repro",)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="Twin-contract & jit-safety static analysis suite.",
+    )
+    parser.add_argument(
+        "--only", default=None, metavar="CHECKERS",
+        help="comma-separated subset of: " + ", ".join(CHECKERS),
+    )
+    parser.add_argument(
+        "--root", default=None, metavar="PATH",
+        help="repo root to analyze (default: this file's repo)",
+    )
+    parser.add_argument(
+        "--quiet", action="store_true",
+        help="suppress informational notes (violations still print)",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule ids per checker and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for checker, rules in RULES.items():
+            print(f"{checker}: {', '.join(rules)}")
+        return 0
+
+    root = Path(args.root).resolve() if args.root \
+        else Path(__file__).resolve().parents[2]
+    selected = list(CHECKERS)
+    if args.only:
+        selected = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in selected if s not in CHECKERS]
+        if unknown:
+            parser.error(
+                f"unknown checker(s) {', '.join(unknown)}; "
+                f"choose from {', '.join(CHECKERS)}"
+            )
+
+    sources_list = load_sources(root, SOURCE_DIRS)
+    sources: Dict[Path, SourceFile] = {s.path: s for s in sources_list}
+
+    violations: List[Violation] = []
+    notes: List[Note] = []
+    for src in sources_list:
+        if src.parse_error is not None:
+            violations.append(Violation(
+                "syntax", src.path, src.parse_error.lineno or 1,
+                f"cannot parse: {src.parse_error.msg}",
+            ))
+        violations.extend(src.waiver_violations)
+
+    for name in selected:
+        found, info = CHECKERS[name](root, sources)
+        violations.extend(found)
+        notes.extend(info)
+
+    violations = apply_waivers(sources, violations)
+    violations.sort(key=lambda v: (str(v.path), v.line, v.rule))
+
+    if not args.quiet:
+        for note in notes:
+            print(f"note: {note.text}")
+    for v in violations:
+        print(v.render(root))
+    if violations:
+        print(f"{len(violations)} violation(s) "
+              f"[checkers: {', '.join(selected)}]", file=sys.stderr)
+        return 1
+    if not args.quiet:
+        print(f"clean [checkers: {', '.join(selected)}]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

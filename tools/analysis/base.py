@@ -1,0 +1,164 @@
+"""Shared infrastructure for the static-analysis suite.
+
+Everything here is stdlib-only (``ast`` + ``pathlib``): the checkers parse
+source text and never import the code under analysis, so the suite runs in
+any environment — including ones without jax.
+
+Violations, waivers
+-------------------
+A checker emits :class:`Violation` records.  Any violation can be waived
+in the source with a trailing (or immediately preceding, comment-only-line)
+marker::
+
+    x_ns = t_us + 3  # analysis: ignore[units-mix] -- t_us is pre-scaled
+
+The rule list is comma-separated; ``ignore[*]`` waives every rule on that
+line.  The ``-- reason`` clause is mandatory: a waiver without one is
+itself reported (rule ``waiver-reason``), so suppressions stay auditable.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+WAIVER_RE = re.compile(
+    r"#\s*analysis:\s*ignore\[([^\]]*)\]\s*(?:--\s*(\S.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: ``path:line: [rule] message``."""
+
+    rule: str
+    path: Path
+    line: int
+    message: str
+
+    def render(self, root: Path) -> str:
+        try:
+            rel = self.path.relative_to(root)
+        except ValueError:
+            rel = self.path
+        return f"{rel}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Note:
+    """Informational output (reports, not gates) — e.g. the dormant-wing map."""
+
+    text: str
+
+
+class SourceFile:
+    """A parsed source file plus its waiver table."""
+
+    def __init__(self, path: Path, text: str | None = None):
+        self.path = path
+        self.text = path.read_text() if text is None else text
+        self.lines = self.text.splitlines()
+        self.tree: ast.Module | None = None
+        self.parse_error: SyntaxError | None = None
+        try:
+            self.tree = ast.parse(self.text)
+        except SyntaxError as exc:  # surfaced by the runner, not swallowed
+            self.parse_error = exc
+        self.waivers, self.waiver_violations = _collect_waivers(
+            self.path, self.lines
+        )
+
+    def waived(self, rule: str, line: int) -> bool:
+        rules = self.waivers.get(line)
+        return bool(rules) and ("*" in rules or rule in rules)
+
+
+def _collect_waivers(
+    path: Path, lines: Sequence[str]
+) -> Tuple[Dict[int, Set[str]], List[Violation]]:
+    waivers: Dict[int, Set[str]] = {}
+    problems: List[Violation] = []
+    for i, raw in enumerate(lines, start=1):
+        m = WAIVER_RE.search(raw)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        reason = (m.group(2) or "").strip()
+        if not rules:
+            problems.append(Violation(
+                "waiver-reason", path, i,
+                "waiver lists no rules: use ignore[rule] or ignore[*]",
+            ))
+            continue
+        if not reason:
+            problems.append(Violation(
+                "waiver-reason", path, i,
+                "waiver is missing a reason: write "
+                "'# analysis: ignore[rule] -- why'",
+            ))
+            continue
+        target = i
+        # A line that is *only* the waiver comment waives the next line.
+        if raw.split("#", 1)[0].strip() == "":
+            target = i + 1
+        waivers.setdefault(target, set()).update(rules)
+    return waivers, problems
+
+
+def iter_py_files(root: Path, rel_dirs: Iterable[str]) -> List[Path]:
+    """Python files under ``root`` restricted to ``rel_dirs`` (sorted)."""
+    out: List[Path] = []
+    for rel in rel_dirs:
+        base = root / rel
+        if base.is_file() and base.suffix == ".py":
+            out.append(base)
+        elif base.is_dir():
+            out.extend(p for p in base.rglob("*.py"))
+    return sorted(set(out))
+
+
+def load_sources(root: Path, rel_dirs: Iterable[str]) -> List[SourceFile]:
+    sources = []
+    for path in iter_py_files(root, rel_dirs):
+        sources.append(SourceFile(path))
+    return sources
+
+
+def apply_waivers(
+    sources: Dict[Path, SourceFile], violations: Iterable[Violation]
+) -> List[Violation]:
+    """Drop violations waived at their line; keep everything else."""
+    kept = []
+    for v in violations:
+        src = sources.get(v.path)
+        if src is not None and src.waived(v.rule, v.line):
+            continue
+        kept.append(v)
+    return kept
+
+
+def module_name_for(root: Path, path: Path) -> str | None:
+    """``src/repro/core/simulator.py`` -> ``repro.core.simulator``."""
+    src = root / "src"
+    try:
+        rel = path.relative_to(src)
+    except ValueError:
+        return None
+    parts = list(rel.with_suffix("").parts)
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def resolve_module_path(root: Path, module: str) -> Path | None:
+    """``repro.core.simulator`` -> ``src/repro/core/simulator.py`` (or
+    the package ``__init__.py``)."""
+    base = root / "src" / Path(*module.split("."))
+    if base.with_suffix(".py").is_file():
+        return base.with_suffix(".py")
+    if (base / "__init__.py").is_file():
+        return base / "__init__.py"
+    return None

@@ -1,0 +1,299 @@
+"""Twin-contract checker: jax fast paths and their Python oracles must
+keep matching keyword surfaces.
+
+The repo's credibility rests on differential twins (see
+``docs/ARCHITECTURE.md``): every compiled kernel has a slow oracle, and a
+kwarg added to one side only — ``fail_prob``, ``burst``,
+``coalesce_theta`` were all fought by hand in PRs 3–5 — silently unpairs
+them.  :data:`REGISTRY` declares each pair with an explicit allowlist of
+side-specific parameters; everything else must match by *name set* (order
+insensitive) and by *default value* (textual, after ``ast`` round-trip
+normalization), with per-parameter exemptions that carry a reason.
+
+Rules
+-----
+``twin-missing``   a registered function cannot be found (refactor broke
+                   the registry, or the registry is stale)
+``twin-kwargs``    parameter present on one side only and not allowlisted
+``twin-allowlist`` an allowlisted side-specific parameter no longer
+                   exists — the allowlist is stale
+``twin-default``   a shared parameter's defaults differ and are not
+                   exempted
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from .base import Note, SourceFile, Violation, resolve_module_path
+
+_SENTINEL = "<required>"
+
+
+@dataclasses.dataclass(frozen=True)
+class TwinPair:
+    """One (fast path, oracle) contract.
+
+    ``fast``/``oracle`` are ``"module:qualname"`` references resolved
+    against the source tree (``qualname`` may be ``Class.method``).
+    ``fast_only``/``oracle_only`` allowlist parameters that legitimately
+    exist on one side (batching axes, seeds, debug switches).
+    ``default_exempt`` maps parameter name -> reason for twins whose
+    defaults intentionally differ (e.g. the oracle runs shorter traces).
+    """
+
+    name: str
+    fast: str
+    oracle: str
+    fast_only: Tuple[str, ...] = ()
+    oracle_only: Tuple[str, ...] = ()
+    default_exempt: Mapping[str, str] = dataclasses.field(default_factory=dict)
+
+
+_POLICY_TWINS = [
+    # jittable init (policies.py) vs pure-Python class (py_ref.py); the
+    # jax side adds the key/pad axes required by pad_to shape uniformity.
+    TwinPair(
+        name=f"policy-{name}",
+        fast=f"repro.cache.policies:{init}",
+        oracle=f"repro.cache.py_ref:{cls}.__init__",
+        fast_only=("key_space", "pad_to"),
+    )
+    for name, init, cls in [
+        ("lru", "lru_init", "LRU"),
+        ("fifo", "lru_init", "FIFO"),  # fifo shares the LRU dlist state
+        ("prob-lru", "prob_lru_init", "ProbLRU"),
+        ("clock", "clock_init", "Clock"),
+        ("slru", "slru_init", "SLRU"),
+        ("s3fifo", "s3fifo_init", "S3FIFO"),
+        ("sieve", "sieve_init", "Sieve"),
+    ]
+]
+
+REGISTRY: Tuple[TwinPair, ...] = (
+    TwinPair(
+        name="event-simulator",
+        fast="repro.core.simulator:simulate_network",
+        oracle="repro.core.py_sim:simulate_py",
+        fast_only=("p_hits", "seeds"),       # vmapped (p_hit x seed) grid
+        oracle_only=("p_hit", "seed", "full"),
+        default_exempt={
+            "n_requests": "heapq oracle runs shorter traces (statistical "
+                          "agreement, not bit-identity)",
+        },
+    ),
+    TwinPair(
+        name="inflight-classifier",
+        fast="repro.cache.replay:classify_inflight",
+        oracle="repro.cache.py_ref:classify_inflight_py",
+        fast_only=("key_space",),            # scatter-table sizing only
+    ),
+    TwinPair(
+        name="cluster-simulator",
+        fast="repro.cluster.sim:simulate_cluster",
+        oracle="repro.cluster.sim:simulate_cluster_py",
+        fast_only=("p_hits", "seeds"),
+        oracle_only=("key_probs", "assign", "p_hit", "seed"),
+        default_exempt={
+            "n_requests": "heapq oracle runs shorter traces (statistical "
+                          "agreement, not bit-identity)",
+        },
+    ),
+    TwinPair(
+        name="mattson-sweep",
+        fast="repro.cache.replay:lru_sweep",
+        oracle="repro.cache.replay:replay_grid",
+        # lru_sweep is the O(T log^2 T) LRU-only special case of the
+        # general replay grid: it has no policy/state axes at all.
+        oracle_only=("policy", "us", "key_space", "pad_to", "params"),
+    ),
+    TwinPair(
+        name="cache-sweep",
+        fast="repro.core.harness:sweep_cache_sizes",
+        oracle="repro.core.harness:measure_cache",
+        fast_only=("sizes", "simulate", "sim_requests"),
+        oracle_only=("capacity",),
+        default_exempt={
+            "backend": "the sweep defaults to the compiled grid path; the "
+                       "single-point measurement defaults to the oracle",
+        },
+    ),
+    *_POLICY_TWINS,
+)
+
+
+def _find_toplevel(tree: ast.Module, name: str) -> Optional[ast.AST]:
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)) and node.name == name:
+            return node
+    return None
+
+
+def _find_method(
+    tree: ast.Module, cls: ast.ClassDef, name: str, depth: int = 0
+) -> Optional[ast.FunctionDef]:
+    """Find ``name`` in ``cls``, following same-module base classes (the
+    py_ref policies inherit ``__init__`` from ``_ListCache``)."""
+    if depth > 8:
+        return None
+    for node in cls.body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    for base in cls.bases:
+        if isinstance(base, ast.Name):
+            parent = _find_toplevel(tree, base.id)
+            if isinstance(parent, ast.ClassDef):
+                found = _find_method(tree, parent, name, depth + 1)
+                if found is not None:
+                    return found
+    return None
+
+
+def _find_function(
+    tree: ast.Module, qualname: str
+) -> Optional[ast.FunctionDef]:
+    head, _, rest = qualname.partition(".")
+    node = _find_toplevel(tree, head)
+    if node is None:
+        return None
+    if not rest:
+        return node if isinstance(node, ast.FunctionDef) else None
+    if isinstance(node, ast.ClassDef) and "." not in rest:
+        return _find_method(tree, node, rest)
+    return None
+
+
+def _signature_of(fn: ast.FunctionDef) -> Dict[str, str]:
+    """Parameter name -> normalized default text (``_SENTINEL`` if
+    required).  ``self`` is dropped; ``*args``/``**kwargs`` appear under
+    their bare names so e.g. ``**params`` can be allowlisted."""
+    sig: Dict[str, str] = {}
+    args = fn.args
+    positional = list(args.posonlyargs) + list(args.args)
+    defaults = list(args.defaults)
+    pad = [None] * (len(positional) - len(defaults))
+    for arg, default in zip(positional, pad + defaults):
+        if arg.arg == "self":
+            continue
+        sig[arg.arg] = _SENTINEL if default is None else ast.unparse(default)
+    if args.vararg is not None:
+        sig[args.vararg.arg] = _SENTINEL
+    for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+        sig[arg.arg] = _SENTINEL if default is None else ast.unparse(default)
+    if args.kwarg is not None:
+        sig[args.kwarg.arg] = _SENTINEL
+    return sig
+
+
+class _Resolver:
+    """Caches parsed modules; honors pre-parsed sources from the runner."""
+
+    def __init__(self, root: Path, sources: Mapping[Path, SourceFile]):
+        self.root = root
+        self.sources = dict(sources)
+
+    def lookup(self, ref: str) -> Tuple[Optional[ast.FunctionDef],
+                                        Optional[Path], int]:
+        module, _, qualname = ref.partition(":")
+        path = resolve_module_path(self.root, module)
+        if path is None:
+            return None, None, 0
+        src = self.sources.get(path)
+        if src is None:
+            src = SourceFile(path)
+            self.sources[path] = src
+        if src.tree is None:
+            return None, path, 0
+        fn = _find_function(src.tree, qualname)
+        return fn, path, (fn.lineno if fn is not None else 0)
+
+
+def check_pair(
+    pair: TwinPair, resolver: _Resolver
+) -> List[Violation]:
+    out: List[Violation] = []
+    fast_fn, fast_path, fast_line = resolver.lookup(pair.fast)
+    oracle_fn, oracle_path, oracle_line = resolver.lookup(pair.oracle)
+    for ref, fn, path in [(pair.fast, fast_fn, fast_path),
+                          (pair.oracle, oracle_fn, oracle_path)]:
+        if fn is None:
+            out.append(Violation(
+                "twin-missing", path or resolver.root, 1,
+                f"twin '{pair.name}': cannot resolve {ref} — update the "
+                f"registry in tools/analysis/contracts.py or restore the "
+                f"function",
+            ))
+    if fast_fn is None or oracle_fn is None:
+        return out
+    assert fast_path is not None and oracle_path is not None
+
+    fast_sig = _signature_of(fast_fn)
+    oracle_sig = _signature_of(oracle_fn)
+    fast_only = set(pair.fast_only)
+    oracle_only = set(pair.oracle_only)
+
+    for name in sorted(fast_only - set(fast_sig)):
+        out.append(Violation(
+            "twin-allowlist", fast_path, fast_line,
+            f"twin '{pair.name}': fast_only lists '{name}' but "
+            f"{pair.fast} has no such parameter (stale allowlist)",
+        ))
+    for name in sorted(oracle_only - set(oracle_sig)):
+        out.append(Violation(
+            "twin-allowlist", oracle_path, oracle_line,
+            f"twin '{pair.name}': oracle_only lists '{name}' but "
+            f"{pair.oracle} has no such parameter (stale allowlist)",
+        ))
+
+    only_fast = set(fast_sig) - set(oracle_sig) - fast_only
+    only_oracle = set(oracle_sig) - set(fast_sig) - oracle_only
+    for name in sorted(only_fast):
+        out.append(Violation(
+            "twin-kwargs", fast_path, fast_line,
+            f"twin '{pair.name}': parameter '{name}' exists on the fast "
+            f"path ({pair.fast}) but not on the oracle ({pair.oracle}); "
+            f"add it to the oracle or allowlist it as fast_only",
+        ))
+    for name in sorted(only_oracle):
+        out.append(Violation(
+            "twin-kwargs", oracle_path, oracle_line,
+            f"twin '{pair.name}': parameter '{name}' exists on the oracle "
+            f"({pair.oracle}) but not on the fast path ({pair.fast}); "
+            f"add it to the fast path or allowlist it as oracle_only",
+        ))
+
+    shared = set(fast_sig) & set(oracle_sig)
+    for name in sorted(shared):
+        if name in pair.default_exempt:
+            continue
+        if fast_sig[name] != oracle_sig[name]:
+            out.append(Violation(
+                "twin-default", fast_path, fast_line,
+                f"twin '{pair.name}': default for '{name}' differs — "
+                f"fast={fast_sig[name]!r} vs oracle={oracle_sig[name]!r}; "
+                f"align them or add a default_exempt with a reason",
+            ))
+    for name in sorted(set(pair.default_exempt) - shared):
+        out.append(Violation(
+            "twin-allowlist", fast_path, fast_line,
+            f"twin '{pair.name}': default_exempt lists '{name}' which is "
+            f"not a shared parameter (stale exemption)",
+        ))
+    return out
+
+
+def run(
+    root: Path, sources: Mapping[Path, SourceFile]
+) -> Tuple[List[Violation], List[Note]]:
+    resolver = _Resolver(root, sources)
+    violations: List[Violation] = []
+    for pair in REGISTRY:
+        violations.extend(check_pair(pair, resolver))
+    notes = [Note(
+        f"twin-contracts: {len(REGISTRY)} registered pairs checked"
+    )]
+    return violations, notes

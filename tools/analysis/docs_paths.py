@@ -1,0 +1,48 @@
+"""``docs-paths``: every repo path mentioned in README/docs must exist.
+
+Folded in from ``tools/check_readme_paths.py`` (which now delegates
+here) so the docs CI job and the static-analysis job share one entry
+point: ``python -m tools.analysis --only docs_paths``.
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+from typing import List, Mapping, Tuple
+
+from .base import Note, SourceFile, Violation
+
+PATH_RE = re.compile(
+    r"\b((?:benchmarks|examples|tools|src|tests|docs)/[\w./-]+\.(?:py|md))\b"
+)
+
+
+def _check_file(root: Path, doc: Path) -> List[Violation]:
+    out: List[Violation] = []
+    for lineno, line in enumerate(doc.read_text().splitlines(), start=1):
+        for m in PATH_RE.finditer(line):
+            rel = m.group(1)
+            if not (root / rel).exists():
+                out.append(Violation(
+                    "docs-paths", doc, lineno,
+                    f"references '{rel}' which does not exist",
+                ))
+    return out
+
+
+def run(
+    root: Path, sources: Mapping[Path, SourceFile]
+) -> Tuple[List[Violation], List[Note]]:
+    docs = []
+    readme = root / "README.md"
+    if readme.is_file():
+        docs.append(readme)
+    docs_dir = root / "docs"
+    if docs_dir.is_dir():
+        docs.extend(sorted(docs_dir.glob("*.md")))
+    violations: List[Violation] = []
+    for doc in docs:
+        violations.extend(_check_file(root, doc))
+    notes = [Note(f"docs-paths: {len(docs)} documents scanned")]
+    return violations, notes

@@ -1,0 +1,272 @@
+"""Import-graph report for ``src/repro``: cycles, dead imports, and the
+dormant-wing map.
+
+* ``imports-cycle`` — a cycle in the ``repro.*`` module DAG gates CI:
+  the repo's layering (``cache/`` and ``core/queueing.py`` at the
+  bottom, ``serving/`` on top — see ``docs/ARCHITECTURE.md``) only stays
+  enforceable while the graph is acyclic.
+* ``imports-dead`` — a name imported but never used in its module.
+  ``__init__.py`` re-exports are exempt when listed in ``__all__``.
+* The **dormant-wing report** (notes, not violations) classifies modules
+  unreachable from any test/benchmark/example import — the
+  machine-generated map ROADMAP item 1's wiring work starts from.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+from .base import Note, SourceFile, Violation, module_name_for
+
+_ROOT_DIRS = ("tests", "benchmarks", "examples")
+
+
+def _resolve_relative(package: str, level: int,
+                      target: Optional[str]) -> str:
+    """Resolve ``from ..x import y`` seen in a module whose enclosing
+    package is ``package`` (level 1 = that package itself)."""
+    parts = package.split(".") if package else []
+    if level > 1:
+        parts = parts[: len(parts) - (level - 1)]
+    base = ".".join(parts)
+    if target:
+        return f"{base}.{target}" if base else target
+    return base
+
+
+def _imported_modules(src: SourceFile, module: str,
+                      known: Set[str], is_init: bool = False) -> Set[str]:
+    """repro.* modules imported by ``src`` (edges of the DAG)."""
+    package = module if is_init else module.rpartition(".")[0]
+    out: Set[str] = set()
+    assert src.tree is not None
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level:
+                base = _resolve_relative(package, node.level, node.module)
+            if base:
+                # `from repro.core import simulator` imports submodules;
+                # only names NOT resolving to a submodule pull in the
+                # package __init__ itself (else every re-export package
+                # would look like a cycle)
+                needs_base = False
+                for alias in node.names:
+                    cand = f"{base}.{alias.name}"
+                    if cand in known:
+                        out.add(cand)
+                    else:
+                        needs_base = True
+                if needs_base:
+                    out.add(base)
+    resolved: Set[str] = set()
+    for name in out:
+        # collapse to the nearest known repro module (package __init__)
+        probe = name
+        while probe:
+            if probe in known:
+                resolved.add(probe)
+                break
+            probe = probe.rpartition(".")[0]
+    resolved.discard(module)
+    return resolved
+
+
+def _find_cycles(graph: Dict[str, Set[str]]) -> List[List[str]]:
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in graph}
+    stack: List[str] = []
+    cycles: List[List[str]] = []
+
+    def dfs(n: str) -> None:
+        color[n] = GREY
+        stack.append(n)
+        for m in sorted(graph.get(n, ())):
+            if m not in color:
+                continue
+            if color[m] == GREY:
+                i = stack.index(m)
+                cycles.append(stack[i:] + [m])
+            elif color[m] == WHITE:
+                dfs(m)
+        stack.pop()
+        color[n] = BLACK
+
+    for n in sorted(graph):
+        if color[n] == WHITE:
+            dfs(n)
+    return cycles
+
+
+def _used_names(tree: ast.Module) -> Set[str]:
+    used: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            # record the root of dotted access: `repro.core.x` uses `repro`
+            v = node
+            while isinstance(v, ast.Attribute):
+                v = v.value
+            if isinstance(v, ast.Name):
+                used.add(v.id)
+    return used
+
+
+def _all_exports(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__" \
+                        and isinstance(node.value, (ast.List, ast.Tuple)):
+                    for elt in node.value.elts:
+                        if isinstance(elt, ast.Constant) \
+                                and isinstance(elt.value, str):
+                            out.add(elt.value)
+    return out
+
+
+def _dead_imports(src: SourceFile, is_init: bool) -> List[Violation]:
+    assert src.tree is not None
+    used = _used_names(src.tree)
+    exports = _all_exports(src.tree)
+    out: List[Violation] = []
+    for node in ast.walk(src.tree):
+        names: List[Tuple[str, str, int]] = []  # (bound name, shown, line)
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                bound = alias.asname or alias.name.split(".")[0]
+                names.append((bound, alias.name, node.lineno))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                bound = alias.asname or alias.name
+                names.append((bound, alias.name, node.lineno))
+        for bound, shown, line in names:
+            if bound.startswith("_"):
+                continue
+            if bound in used:
+                continue
+            if is_init and (bound in exports or not exports):
+                continue  # re-export surface
+            if bound in exports:
+                continue
+            out.append(Violation(
+                "imports-dead", src.path, line,
+                f"'{shown}' is imported but never used (and not "
+                f"re-exported via __all__)",
+            ))
+    return out
+
+
+_WING_LABELS = {
+    "repro.models": "model zoo",
+    "repro.training": "training scaffolding",
+    "repro.launch": "launch scaffolding",
+    "repro.configs": "config presets",
+    "repro.kernels": "Pallas kernels",
+}
+
+
+def run(
+    root: Path, sources: Mapping[Path, SourceFile]
+) -> Tuple[List[Violation], List[Note]]:
+    # --- module universe: everything under src/repro -------------------
+    modules: Dict[str, SourceFile] = {}
+    for path, src in sources.items():
+        name = module_name_for(root, path)
+        if name and src.tree is not None:
+            modules[name] = src
+    known = set(modules)
+
+    graph: Dict[str, Set[str]] = {
+        name: _imported_modules(src, name, known,
+                                is_init=src.path.name == "__init__.py")
+        for name, src in modules.items()
+    }
+
+    violations: List[Violation] = []
+    notes: List[Note] = []
+
+    # --- cycles --------------------------------------------------------
+    seen_cycles: Set[frozenset] = set()
+    for cycle in _find_cycles(graph):
+        key = frozenset(cycle)
+        if key in seen_cycles:
+            continue
+        seen_cycles.add(key)
+        head = cycle[0]
+        violations.append(Violation(
+            "imports-cycle", modules[head].path, 1,
+            "import cycle: " + " -> ".join(cycle),
+        ))
+
+    # --- dead imports --------------------------------------------------
+    for name in sorted(modules):
+        src = modules[name]
+        violations.extend(_dead_imports(src, src.path.name == "__init__.py"))
+
+    # --- dormant-wing report (informational) ---------------------------
+    roots: Set[str] = set()
+    for rel in _ROOT_DIRS:
+        base = root / rel
+        if not base.is_dir():
+            continue
+        for path in base.rglob("*.py"):
+            try:
+                tree = ast.parse(path.read_text())
+            except SyntaxError:
+                continue
+            probe_src = SourceFile(path, path.read_text())
+            if probe_src.tree is None:
+                continue
+            roots |= _imported_modules(probe_src, f"__root__.{path.stem}",
+                                       known)
+    reachable: Set[str] = set()
+    frontier = [m for m in roots if m in graph]
+    while frontier:
+        m = frontier.pop()
+        if m in reachable:
+            continue
+        reachable.add(m)
+        frontier.extend(graph.get(m, ()))
+        # importing a module pulls in its package __init__ chain
+        parent = m.rpartition(".")[0]
+        if parent in graph:
+            frontier.append(parent)
+
+    dormant = sorted(set(modules) - reachable)
+    wings: Dict[str, List[str]] = {}
+    isolated: List[str] = []
+    for m in dormant:
+        for prefix, label in _WING_LABELS.items():
+            if m == prefix or m.startswith(prefix + "."):
+                wings.setdefault(f"{prefix} ({label})", []).append(m)
+                break
+        else:
+            isolated.append(m)
+    notes.append(Note(
+        f"import-graph: {len(modules)} modules, "
+        f"{len(reachable)} reachable from {'/'.join(_ROOT_DIRS)}, "
+        f"{len(dormant)} dormant"
+    ))
+    for wing in sorted(wings):
+        mods = wings[wing]
+        notes.append(Note(
+            f"  dormant wing {wing}: {len(mods)} modules — "
+            + ", ".join(m.removeprefix('repro.') for m in mods)
+        ))
+    if isolated:
+        notes.append(Note(
+            "  dormant outside known wings: " + ", ".join(isolated)
+        ))
+    return violations, notes

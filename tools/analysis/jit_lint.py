@@ -1,0 +1,469 @@
+"""JIT/tracing-safety lint for the compiled paths in ``src/repro``.
+
+The repo's jit conventions (``docs/ARCHITECTURE.md``) are easy to break
+silently: Python control flow on a traced value recompiles per value or
+crashes, a ``float()``/``np.*`` coercion forces a device sync inside a
+jitted body, a mutable default in a scan carry aliases state across
+calls, and 64-bit hash arithmetic truncates to 32 bits unless x64 mode
+is on.  This lint finds *traced scopes* statically and taints values
+flowing from traced parameters.
+
+Traced scopes
+-------------
+* functions decorated ``@jax.jit`` / ``@partial(jax.jit, ...)`` — their
+  parameters are tainted except ``static_argnames``;
+* functions passed (by name) to ``jax.jit`` / ``jax.vmap`` /
+  ``lax.scan`` / ``lax.while_loop`` / ``lax.fori_loop`` / ``lax.cond``
+  call sites — all parameters tainted;
+* ``def``/``lambda`` nested inside a traced scope (scan bodies, cond
+  branches) — parameters tainted, enclosing taint inherited;
+* module-level helpers *called from* traced scopes — analyzed once per
+  call-site taint signature, so a helper invoked only with static
+  arguments (e.g. a Zipf-weight table builder) is not flagged for
+  branching on them.
+
+Taint escapes: ``.shape``/``.ndim``/``.dtype``, ``len()``, ``range()``
+and constants are static under tracing.  ``x is None`` tests are static
+(tracers are never ``None``).
+
+Rules
+-----
+``jit-pyflow``           Python ``if``/``while``/``for`` on a traced value
+``jit-coerce``           ``float()``/``int()``/``bool()``/``.item()``/
+                         ``.tolist()``/``np.*`` applied to a traced value
+``jit-mutable-default``  mutable default argument in a traced scope
+``jit-hash64``           64-bit integer dtype inside a traced scope in a
+                         module that never touches the x64 switch
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, FrozenSet, List, Mapping, Optional, Set, Tuple
+
+from .base import Note, SourceFile, Violation
+
+_JIT_NAMES = {"jit"}
+_VMAP_NAMES = {"vmap", "pmap"}
+# callable-argument positions for the lax control-flow combinators
+_CALLBACK_SLOTS = {
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "cond": (1, 2),
+    "switch": None,  # every arg after the index may be a branch
+    "map": (0,),
+}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_STATIC_CALLS = {"len", "range", "isinstance", "type", "getattr", "hasattr"}
+_COERCE_CALLS = {"float", "int", "bool", "complex"}
+_COERCE_METHODS = {"item", "tolist", "block_until_ready"}
+_INT64_ATTRS = {"uint64", "int64"}
+
+
+def _attr_chain(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    chain = _attr_chain(node)
+    return chain is not None and chain.split(".")[-1] in _JIT_NAMES
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                for elt in v.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                        names.add(elt.value)
+    return names
+
+
+def _mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call):
+        chain = _attr_chain(node.func)
+        return chain in {"list", "dict", "set"}
+    return False
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return names
+
+
+class _Root:
+    def __init__(self, fn: ast.AST, static: FrozenSet[str]):
+        self.fn = fn
+        self.static = static
+
+
+class _ModuleLint:
+    def __init__(self, src: SourceFile):
+        self.src = src
+        self.violations: List[Violation] = []
+        self.module_funcs: Dict[str, ast.FunctionDef] = {}
+        self.roots: Dict[int, _Root] = {}  # id-keyed by lineno to dedupe
+        # (func name, tainted-param tuple) -> analyzed?
+        self._helper_memo: Set[Tuple[str, FrozenSet[str]]] = set()
+        self._helper_queue: List[Tuple[ast.FunctionDef, FrozenSet[str]]] = []
+        self.has_x64_guard = "x64" in src.text
+
+    # ------------------------------------------------------------- roots
+    def collect_roots(self) -> None:
+        tree = self.src.tree
+        assert tree is not None
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef):
+                self.module_funcs[node.name] = node
+        self._scan_block(tree.body, dict(self.module_funcs))
+
+    def _scan_block(self, stmts, scope: Dict[str, ast.FunctionDef]) -> None:
+        """Recurse through nested function bodies carrying a name->def
+        scope, so ``lax.scan(step, ...)`` resolves ``step`` even when it
+        is a local def inside a non-jitted function."""
+        local = dict(scope)
+        for node in stmts:
+            if isinstance(node, ast.FunctionDef):
+                local[node.name] = node
+        for node in stmts:
+            if isinstance(node, ast.FunctionDef):
+                static = self._decorated_static(node)
+                if static is not None:
+                    self._add_root(node, static)
+                self._scan_block(node.body, local)
+            elif isinstance(node, ast.ClassDef):
+                self._scan_block(node.body, local)
+            else:
+                for call in ast.walk(node):
+                    if isinstance(call, ast.Call):
+                        self._call_site_roots(call, local)
+
+    def _decorated_static(self, fn: ast.FunctionDef) -> Optional[FrozenSet[str]]:
+        """frozenset of static argnames if jit-decorated, else None."""
+        for dec in fn.decorator_list:
+            if _is_jit_ref(dec):
+                return frozenset()
+            if isinstance(dec, ast.Call):
+                if _is_jit_ref(dec.func):
+                    return frozenset(_static_argnames(dec))
+                # partial(jax.jit, static_argnames=...)
+                chain = _attr_chain(dec.func) or ""
+                if chain.split(".")[-1] == "partial" and dec.args \
+                        and _is_jit_ref(dec.args[0]):
+                    return frozenset(_static_argnames(dec))
+        return None
+
+    def _call_site_roots(self, call: ast.Call,
+                         scope: Dict[str, ast.FunctionDef]) -> None:
+        chain = _attr_chain(call.func)
+        if chain is None:
+            return
+        leaf = chain.split(".")[-1]
+        candidates: List[Tuple[ast.AST, FrozenSet[str]]] = []
+        if leaf in _JIT_NAMES or leaf in _VMAP_NAMES:
+            if call.args:
+                static = frozenset(_static_argnames(call)) \
+                    if leaf in _JIT_NAMES else frozenset()
+                candidates.append((call.args[0], static))
+        elif leaf in _CALLBACK_SLOTS:
+            # only trust lax./jax.lax. qualified combinators; a bare
+            # ``map``/``scan`` helper of our own is not jax
+            if not (chain.startswith("lax.") or chain.startswith("jax.lax.")):
+                return
+            slots = _CALLBACK_SLOTS[leaf]
+            idxs = range(1, len(call.args)) if slots is None else slots
+            for i in idxs:
+                if i < len(call.args):
+                    candidates.append((call.args[i], frozenset()))
+        for arg, static in candidates:
+            if isinstance(arg, ast.Name) and arg.id in scope:
+                self._add_root(scope[arg.id], static)
+            elif isinstance(arg, ast.Lambda):
+                self._add_root(arg, static)
+
+    def _add_root(self, fn: ast.AST, static: FrozenSet[str]) -> None:
+        key = getattr(fn, "lineno", 0)
+        prev = self.roots.get(key)
+        if prev is None:
+            self.roots[key] = _Root(fn, static)
+        else:  # keep the *smaller* static set (more taint = more checks)
+            prev.static = frozenset(prev.static & static)
+
+    # ----------------------------------------------------------- analyze
+    def analyze(self) -> None:
+        analyzed_fns = {id(r.fn) for r in self.roots.values()}
+        for root in self.roots.values():
+            tainted = frozenset(
+                n for n in _param_names(root.fn) if n not in root.static
+            )
+            self._analyze_scope(root.fn, tainted)
+        # drain helper queue (helpers reached from traced call sites)
+        while self._helper_queue:
+            fn, tainted = self._helper_queue.pop()
+            if id(fn) in analyzed_fns:
+                continue
+            self._analyze_scope(fn, tainted)
+
+    def _analyze_scope(self, fn: ast.AST, tainted: FrozenSet[str]) -> None:
+        env: Set[str] = set(tainted)
+        self._check_defaults(fn)
+        body = fn.body if isinstance(fn.body, list) else [ast.Expr(fn.body)]
+        for stmt in body:
+            self._stmt(stmt, env)
+
+    def _check_defaults(self, fn: ast.AST) -> None:
+        args = fn.args
+        for default in list(args.defaults) + [d for d in args.kw_defaults if d]:
+            if _mutable_default(default):
+                self._emit(
+                    "jit-mutable-default", default,
+                    "mutable default argument in a traced scope — defaults "
+                    "are evaluated once and alias across calls; use None "
+                    "and construct inside",
+                )
+
+    # -------------------------------------------------------- statements
+    def _stmt(self, node: ast.AST, env: Set[str]) -> None:
+        if isinstance(node, ast.If):
+            if self._taint(node.test, env):
+                self._emit(
+                    "jit-pyflow", node.test,
+                    f"Python `if` on traced value "
+                    f"`{ast.unparse(node.test)}` — use jnp.where / "
+                    f"lax.cond or hoist to a static argument",
+                )
+            for s in node.body + node.orelse:
+                self._stmt(s, env)
+        elif isinstance(node, ast.While):
+            if self._taint(node.test, env):
+                self._emit(
+                    "jit-pyflow", node.test,
+                    f"Python `while` on traced value "
+                    f"`{ast.unparse(node.test)}` — use lax.while_loop",
+                )
+            for s in node.body + node.orelse:
+                self._stmt(s, env)
+        elif isinstance(node, ast.For):
+            if self._taint(node.iter, env):
+                self._emit(
+                    "jit-pyflow", node.iter,
+                    f"Python `for` over traced value "
+                    f"`{ast.unparse(node.iter)}` — use lax.scan / "
+                    f"lax.fori_loop",
+                )
+            self._bind(node.target, self._taint(node.iter, env), env)
+            for s in node.body + node.orelse:
+                self._stmt(s, env)
+        elif isinstance(node, (ast.Assign,)):
+            t = self._taint(node.value, env)
+            for target in node.targets:
+                self._bind(target, t, env)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            self._bind(node.target, self._taint(node.value, env), env)
+        elif isinstance(node, ast.AugAssign):
+            t = self._taint(node.value, env) or self._taint(node.target, env)
+            self._bind(node.target, t, env)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            inner = env | set(_param_names(node))
+            self._analyze_scope(node, frozenset(inner))
+        elif isinstance(node, (ast.Return, ast.Expr)):
+            if node.value is not None:
+                self._taint(node.value, env)
+        elif isinstance(node, (ast.With,)):
+            for s in node.body:
+                self._stmt(s, env)
+        elif isinstance(node, ast.Try):
+            for s in node.body + node.orelse + node.finalbody:
+                self._stmt(s, env)
+            for h in node.handlers:
+                for s in h.body:
+                    self._stmt(s, env)
+        # other statements (pass, raise, assert, ...) — walk exprs for
+        # coercion checks without control-flow semantics
+        else:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.expr):
+                    self._taint(child, env)
+
+    def _bind(self, target: ast.AST, tainted: bool, env: Set[str]) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                env.add(target.id)
+            else:
+                env.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, tainted, env)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted, env)
+        # attribute/subscript targets: container already tracked by name
+
+    # ------------------------------------------------------- expressions
+    def _taint(self, node: ast.AST, env: Set[str]) -> bool:
+        """Taint of an expression; emits coercion/hash64 findings inline."""
+        if isinstance(node, ast.Name):
+            return node.id in env
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in _INT64_ATTRS and not self.has_x64_guard:
+                chain = _attr_chain(node) or ""
+                if chain.split(".")[0] in {"jnp", "jax", "np", "numpy"}:
+                    self._emit(
+                        "jit-hash64", node,
+                        f"`{chain}` inside a traced scope: without the x64 "
+                        f"switch jax silently truncates to 32 bits — guard "
+                        f"with jax.config x64 or keep 64-bit hashing on the "
+                        f"host (numpy)",
+                    )
+            if node.attr in _STATIC_ATTRS:
+                self._taint(node.value, env)  # still walk for findings
+                return False
+            return self._taint(node.value, env)
+        if isinstance(node, ast.Call):
+            return self._call_taint(node, env)
+        if isinstance(node, ast.Lambda):
+            inner = set(env) | set(_param_names(node))
+            self._taint(node.body, inner)
+            return False
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` is a static predicate under
+            # tracing (a tracer is never None)
+            if len(node.ops) == 1 and isinstance(node.ops[0], (ast.Is, ast.IsNot)):
+                self._taint(node.left, env)
+                self._taint(node.comparators[0], env)
+                return False
+            parts = [node.left] + list(node.comparators)
+            return any(self._taint(p, env) for p in parts)
+        if isinstance(node, (ast.IfExp,)):
+            test_t = self._taint(node.test, env)
+            if test_t:
+                self._emit(
+                    "jit-pyflow", node.test,
+                    f"conditional expression on traced value "
+                    f"`{ast.unparse(node.test)}` — use jnp.where",
+                )
+            return self._taint(node.body, env) | self._taint(node.orelse, env)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            inner = set(env)
+            tainted_iter = False
+            for gen in node.generators:
+                it = self._taint(gen.iter, inner)
+                tainted_iter |= it
+                self._bind(gen.target, it, inner)
+                for cond in gen.ifs:
+                    self._taint(cond, inner)
+            if isinstance(node, ast.DictComp):
+                self._taint(node.key, inner)
+                self._taint(node.value, inner)
+            else:
+                self._taint(node.elt, inner)
+            return tainted_iter
+        # generic: tainted if any child expression is
+        out = False
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                out |= self._taint(child, env)
+        return out
+
+    def _call_taint(self, node: ast.Call, env: Set[str]) -> bool:
+        chain = _attr_chain(node.func) or ""
+        leaf = chain.split(".")[-1] if chain else ""
+        arg_taints = [self._taint(a, env) for a in node.args]
+        kw_taints = {kw.arg: self._taint(kw.value, env) for kw in node.keywords}
+        any_tainted = any(arg_taints) or any(kw_taints.values())
+
+        if isinstance(node.func, ast.Name) and leaf in _STATIC_CALLS:
+            return False
+        if isinstance(node.func, ast.Name) and leaf in _COERCE_CALLS \
+                and any_tainted:
+            self._emit(
+                "jit-coerce", node,
+                f"`{leaf}()` on a traced value forces concretization "
+                f"inside a jitted body — keep it an array (jnp) or hoist "
+                f"out of the compiled region",
+            )
+            return False
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr in _COERCE_METHODS \
+                    and self._taint(node.func.value, env):
+                self._emit(
+                    "jit-coerce", node,
+                    f"`.{node.func.attr}()` on a traced value inside a "
+                    f"jitted body — device sync / concretization",
+                )
+                return False
+            root = chain.split(".")[0]
+            if root in {"np", "numpy"} and any_tainted:
+                self._emit(
+                    "jit-coerce", node,
+                    f"`{chain}(...)` applied to a traced value — numpy "
+                    f"concretizes tracers; use jnp inside jitted code",
+                )
+                return True
+        # helper reachable from traced code: analyze with this call
+        # site's taint signature
+        if isinstance(node.func, ast.Name) and node.func.id in self.module_funcs:
+            fn = self.module_funcs[node.func.id]
+            params = _param_names(fn)
+            tainted_params: Set[str] = set()
+            pos = [a for a in fn.args.posonlyargs + fn.args.args]
+            for i, t in enumerate(arg_taints):
+                if t and i < len(pos):
+                    tainted_params.add(pos[i].arg)
+            for name, t in kw_taints.items():
+                if t and name in params:
+                    tainted_params.add(name)
+            key = (node.func.id, frozenset(tainted_params))
+            if tainted_params and key not in self._helper_memo:
+                self._helper_memo.add(key)
+                self._helper_queue.append((fn, frozenset(tainted_params)))
+        else:
+            self._taint(node.func, env)
+        return any_tainted
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        v = Violation(rule, self.src.path, line, message)
+        if v not in self.violations:
+            self.violations.append(v)
+
+
+def run(
+    root: Path, sources: Mapping[Path, SourceFile]
+) -> Tuple[List[Violation], List[Note]]:
+    violations: List[Violation] = []
+    n_roots = 0
+    for path in sorted(sources):
+        src = sources[path]
+        if src.tree is None:
+            continue
+        lint = _ModuleLint(src)
+        lint.collect_roots()
+        n_roots += len(lint.roots)
+        lint.analyze()
+        violations.extend(lint.violations)
+    notes = [Note(f"jit-lint: {n_roots} traced roots across "
+                  f"{len(sources)} files")]
+    return violations, notes

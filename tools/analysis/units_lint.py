@@ -1,0 +1,209 @@
+"""Time-unit suffix lint for ``core/``, ``latency/`` and ``cluster/``.
+
+The queueing model runs in **microseconds** (``*_us``), the event
+simulator's integer clock in **nanoseconds** (``*_ns``), and the two meet
+in conversions like ``mean_on_ns = mean_on_us * 1e3``.  The convention is
+carried by name suffixes (``_ns``, ``_us``, ``_ms``, ``_s`` — and
+``_rate`` for the reciprocal); this lint flags *additive* arithmetic and
+comparisons that mix two different time units without an explicit
+conversion.
+
+Inference is deliberately shallow and sound-by-construction:
+
+* a name/attribute ending in a known suffix carries that unit;
+* multiplication/division clears the unit (that *is* the conversion
+  idiom — ``x_us * 1e3`` no longer claims to be microseconds, and
+  ``n / rate`` produces a time);
+* ``+``/``-``, ``<``/``<=``/``>``/``>=``/``==`` and ``min``/``max`` over
+  mixed known units are violations (``units-mix``);
+* assigning an expression with known unit X to a target suffixed with
+  unit Y is a violation (``units-assign``).
+
+Anything un-suffixed is unknown and never flagged — the lint cannot
+produce a false positive on unit-free code, only miss.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Mapping, Optional, Tuple
+
+from .base import Note, SourceFile, Violation
+
+_SUFFIXES = ("_ns", "_us", "_ms", "_s", "_rate")
+_UNIT_OF = {"_ns": "ns", "_us": "us", "_ms": "ms", "_s": "s", "_rate": "rate"}
+
+CHECKED_DIRS = ("src/repro/core", "src/repro/latency", "src/repro/cluster")
+
+
+def unit_of_name(name: str) -> Optional[str]:
+    for suf in _SUFFIXES:
+        if name.endswith(suf) and len(name) > len(suf):
+            return _UNIT_OF[suf]
+    return None
+
+
+def _unit(node: ast.AST, emit) -> Optional[str]:
+    """Unit of an expression, or None when unknown/mixed-and-reported."""
+    if isinstance(node, ast.Name):
+        return unit_of_name(node.id)
+    if isinstance(node, ast.Attribute):
+        _unit(node.value, emit)
+        return unit_of_name(node.attr)
+    if isinstance(node, ast.Subscript):
+        _unit(node.slice, emit)
+        return _unit(node.value, emit)
+    if isinstance(node, ast.UnaryOp):
+        return _unit(node.operand, emit)
+    if isinstance(node, ast.BinOp):
+        lu = _unit(node.left, emit)
+        ru = _unit(node.right, emit)
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            if lu and ru and lu != ru:
+                emit(node, f"adds/subtracts `{ast.unparse(node.left)}` "
+                           f"[{lu}] and `{ast.unparse(node.right)}` [{ru}] "
+                           f"without a conversion")
+                return None
+            return lu or ru
+        if isinstance(node.op, (ast.Mod, ast.FloorDiv)):
+            return lu
+        # Mult/Div/Pow...: the conversion idiom — result unit unknown
+        return None
+    if isinstance(node, ast.Compare):
+        units = [_unit(node.left, emit)]
+        units += [_unit(c, emit) for c in node.comparators]
+        known = [u for u in units if u]
+        if len(set(known)) > 1:
+            emit(node, f"compares values of different time units "
+                       f"({', '.join(sorted(set(known)))}) in "
+                       f"`{ast.unparse(node)}`")
+        return None
+    if isinstance(node, ast.Call):
+        chain = node.func
+        leaf = None
+        if isinstance(chain, ast.Name):
+            leaf = chain.id
+        elif isinstance(chain, ast.Attribute):
+            leaf = chain.attr
+        arg_units = [_unit(a, emit) for a in node.args]
+        for kw in node.keywords:
+            _unit(kw.value, emit)
+        if leaf in {"min", "max", "minimum", "maximum", "fmin", "fmax",
+                    "clip", "where"}:
+            known = [u for u in arg_units if u]
+            if len(set(known)) > 1:
+                emit(node, f"`{leaf}` over mixed time units "
+                           f"({', '.join(sorted(set(known)))}) in "
+                           f"`{ast.unparse(node)}`")
+                return None
+            if leaf in {"min", "max", "minimum", "maximum", "fmin", "fmax"}:
+                return known[0] if known else None
+        return None
+    if isinstance(node, ast.IfExp):
+        _unit(node.test, emit)
+        bu = _unit(node.body, emit)
+        ou = _unit(node.orelse, emit)
+        return bu if bu == ou else None
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for elt in node.elts:
+            _unit(elt, emit)
+        return None
+    # other expression kinds: walk children, unknown unit
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, ast.expr):
+            _unit(child, emit)
+    return None
+
+
+class _FileLint:
+    def __init__(self, src: SourceFile):
+        self.src = src
+        self.violations: List[Violation] = []
+
+    def _emit_mix(self, node: ast.AST, message: str) -> None:
+        v = Violation("units-mix", self.src.path,
+                      getattr(node, "lineno", 1), message)
+        if v not in self.violations:
+            self.violations.append(v)
+
+    def run(self) -> None:
+        assert self.src.tree is not None
+        for node in ast.walk(self.src.tree):
+            if isinstance(node, ast.Assign):
+                vu = _unit(node.value, self._emit_mix)
+                for target in node.targets:
+                    self._check_target(target, vu, node)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                vu = _unit(node.value, self._emit_mix)
+                self._check_target(node.target, vu, node)
+            elif isinstance(node, ast.AugAssign):
+                tu = _target_unit(node.target)
+                vu = _unit(node.value, self._emit_mix)
+                if isinstance(node.op, (ast.Add, ast.Sub)) and tu and vu \
+                        and tu != vu:
+                    self.violations.append(Violation(
+                        "units-mix", self.src.path, node.lineno,
+                        f"augmented assignment mixes [{tu}] target with "
+                        f"[{vu}] value in `{ast.unparse(node)}`",
+                    ))
+            elif isinstance(node, (ast.Expr, ast.Return)) \
+                    and node.value is not None:
+                _unit(node.value, self._emit_mix)
+            elif isinstance(node, (ast.If, ast.While)):
+                _unit(node.test, self._emit_mix)
+            elif isinstance(node, ast.Call):
+                self._check_kwargs(node)
+
+    def _check_target(self, target: ast.AST, value_unit: Optional[str],
+                      stmt: ast.AST) -> None:
+        tu = _target_unit(target)
+        if tu and value_unit and tu != value_unit:
+            self.violations.append(Violation(
+                "units-assign", self.src.path, stmt.lineno,
+                f"assigns a [{value_unit}] expression to "
+                f"`{ast.unparse(target)}` [{tu}] without a conversion "
+                f"(multiply by the factor explicitly, e.g. `* 1e3`)",
+            ))
+
+    def _check_kwargs(self, call: ast.Call) -> None:
+        for kw in call.keywords:
+            if kw.arg is None:
+                continue
+            pu = unit_of_name(kw.arg)
+            vu = _unit(kw.value, self._emit_mix)
+            if pu and vu and pu != vu:
+                self.violations.append(Violation(
+                    "units-mix", self.src.path, call.lineno,
+                    f"passes a [{vu}] value to keyword `{kw.arg}` [{pu}] "
+                    f"in `{ast.unparse(call)[:80]}`",
+                ))
+
+
+def _target_unit(target: ast.AST) -> Optional[str]:
+    if isinstance(target, ast.Name):
+        return unit_of_name(target.id)
+    if isinstance(target, ast.Attribute):
+        return unit_of_name(target.attr)
+    return None
+
+
+def run(
+    root: Path, sources: Mapping[Path, SourceFile]
+) -> Tuple[List[Violation], List[Note]]:
+    violations: List[Violation] = []
+    checked = 0
+    prefixes = tuple((root / d) for d in CHECKED_DIRS)
+    for path in sorted(sources):
+        if not any(str(path).startswith(str(p)) for p in prefixes):
+            continue
+        src = sources[path]
+        if src.tree is None:
+            continue
+        checked += 1
+        lint = _FileLint(src)
+        lint.run()
+        violations.extend(lint.violations)
+    notes = [Note(f"units-lint: {checked} files under "
+                  f"{', '.join(CHECKED_DIRS)}")]
+    return violations, notes

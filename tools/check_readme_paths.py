@@ -1,47 +1,22 @@
 """Guard against doc drift: every repo path named in README.md (and
 docs/*.md) must exist.
 
-    python tools/check_readme_paths.py
+This check now lives in the static-analysis suite as the ``docs-paths``
+rule (see ``tools/analysis/docs_paths.py``); this script remains as a
+thin back-compat shim so older invocations keep working:
 
-Scans the markdown for `benchmarks/...py`, `examples/...py`,
-`src/...py`, `tests/...py`, `docs/...md` and `tools/...py` references —
-inline code spans and links alike — and fails listing any that don't
-resolve relative to the repo root.  CI runs this in the docs job so a
-renamed benchmark can't leave the README pointing at nothing.
+    python tools/check_readme_paths.py
+    python -m tools.analysis --only docs_paths   # the canonical form
 """
 
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-ROOT = Path(__file__).resolve().parent.parent
-DOCS = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
-PATTERN = re.compile(
-    r"\b((?:benchmarks|examples|tools|src|tests|docs)/[\w./-]+\.(?:py|md))\b"
-)
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-
-def main() -> int:
-    missing = []
-    checked = set()
-    for doc in DOCS:
-        if not doc.exists():
-            missing.append((str(doc.relative_to(ROOT)), "(doc itself)"))
-            continue
-        for ref in PATTERN.findall(doc.read_text()):
-            checked.add(ref)
-            if not (ROOT / ref).exists():
-                missing.append((str(doc.relative_to(ROOT)), ref))
-    if missing:
-        for doc, ref in missing:
-            print(f"STALE: {doc} references missing path {ref}")
-        return 1
-    print(f"ok: {len(checked)} referenced paths exist "
-          f"across {len(DOCS)} docs")
-    return 0
-
+from tools.analysis import main  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(["--only", "docs_paths"]))
