@@ -8,7 +8,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core import lru_network
+from repro.core.harness import coin_stream, zipf_trace
 from repro.kernels import ops, ref
+from repro.kernels.event_sim import simulate_grid_pallas
+from repro.kernels.replay import replay_grid_pallas
 
 
 def _time(fn, *args, n=3, **kw):
@@ -33,7 +37,7 @@ def main() -> dict:
         - np.asarray(ref.flash_attention_ref(
             q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2)).swapaxes(1, 2))))
     emit("flash_attention_256", us, f"max_err={err:.2e}")
-    out["flash"] = err
+    out["flash"] = {"us": us, "max_err": float(err)}
 
     P, page, n_pages = 16, 16, 4
     qd = jax.random.normal(ks[0], (2, H, dh))
@@ -46,7 +50,7 @@ def main() -> dict:
         np.asarray(ops.paged_attention(qd, pk, pv, bt, sl, interpret=True))
         - np.asarray(ref.paged_attention_ref(qd, pk, pv, bt, sl))))
     emit("paged_attention_4pages", us, f"max_err={err:.2e}")
-    out["paged"] = err
+    out["paged"] = {"us": us, "max_err": float(err)}
 
     r = jax.random.normal(ks[0], (1, 128, 2, 32))
     kk = jax.random.normal(ks[1], (1, 128, 2, 32))
@@ -58,7 +62,7 @@ def main() -> dict:
         np.asarray(ops.wkv6_scan(r, kk, vv, w, u, chunk=64, interpret=True))
         - np.asarray(ref.wkv6_scan_ref(r, kk, vv, w, u))))
     emit("wkv6_scan_128", us, f"max_err={err:.2e}")
-    out["wkv"] = err
+    out["wkv"] = {"us": us, "max_err": float(err)}
 
     ts = jax.random.randint(ks[0], (2048,), 0, 10_000, dtype=jnp.int32)
     acc = jax.random.choice(ks[1], 2048, (128,), replace=False).astype(jnp.int32)
@@ -67,8 +71,37 @@ def main() -> dict:
     new_ts, victim = ops.lru_batch_update(ts, acc, jnp.int32(99_999),
                                           tile=512, interpret=True)
     ref_ts, _ = ref.lru_batch_update_ref(ts, acc, jnp.int32(99_999))
-    emit("lru_batch_update_2048", us,
-         f"exact={bool(np.array_equal(np.asarray(new_ts), np.asarray(ref_ts)))}")
+    exact = bool(np.array_equal(np.asarray(new_ts), np.asarray(ref_ts)))
+    emit("lru_batch_update_2048", us, f"exact={exact}")
+    out["lru_batch_update"] = {"us": us, "exact": exact}
+
+    # replay-grid kernel: fused replay + classification on a small
+    # (capacity x seed) grid, interpreter vs the compiled scan twin
+    trace = zipf_trace(512, 64, 0.99, seed=0)
+    coins = coin_stream(512, 0)
+    kw = dict(key_space=64, window=8, max_scan=3)
+    us = _time(replay_grid_pallas, "clock", trace, coins, (8, 16),
+               n=1, interpret=True, **kw)
+    got = replay_grid_pallas("clock", trace, coins, (8, 16),
+                             interpret=True, **kw)
+    want = replay_grid_pallas("clock", trace, coins, (8, 16), **kw)
+    exact = bool(
+        np.array_equal(np.asarray(got.hits), np.asarray(want.hits))
+        and np.array_equal(np.asarray(got.cls), np.asarray(want.cls)))
+    emit("replay_grid_clock_512", us, f"exact={exact}")
+    out["replay_grid"] = {"us": us, "exact": exact}
+
+    # event-sim kernel: counter-RNG closed-loop grid, interpreter vs twin
+    net = lru_network(disk_us=100.0)
+    p_hits = np.array([0.5, 0.9])
+    us = _time(simulate_grid_pallas, net, p_hits, n=1, n_requests=300,
+               seeds=(0,), interpret=True)
+    got = simulate_grid_pallas(net, p_hits, n_requests=300, seeds=(0,),
+                               interpret=True)
+    want = simulate_grid_pallas(net, p_hits, n_requests=300, seeds=(0,))
+    exact = bool(np.array_equal(got.throughput, want.throughput))
+    emit("event_sim_grid_300", us, f"exact={exact}")
+    out["event_sim"] = {"us": us, "exact": exact}
     return out
 
 

@@ -7,9 +7,11 @@ are asserted inside each benchmark).
         [--json BENCH_replay.json]
 
 ``--json`` writes the perf-trajectory artifact: replay throughput
-(requests/s, py vs jax backend, from replay_bench) plus per-bench wall
-times, and — when fig_latency ran — the latency-prong summary (operating
-points, sim-vs-analytic sojourns, SLO capacities).  CI uploads
+(requests/s, py vs jax vs pallas backend, from replay_bench) plus
+per-bench wall times, and — when they ran — the latency-prong summary
+(fig_latency), the cluster summary (fig_cluster), the kernel microbench
+table (kernel_bench: interpreter call times + exactness vs the scan
+twins), and the dry-run roofline records (roofline).  CI uploads
 BENCH_replay.json and BENCH_latency.json on every run.
 """
 
@@ -54,9 +56,11 @@ def main() -> None:
 
     failures = []
     bench_seconds = {}
-    replay = None
-    latency = None
-    cluster = None
+    # benches whose return value is recorded in the --json payload
+    captured = {"replay_bench": "replay", "fig_latency": "latency",
+                "fig_cluster": "cluster", "kernel_bench": "kernels",
+                "roofline": "roofline"}
+    results = {}
     for name in BENCHES:
         if only and name not in only:
             continue
@@ -66,12 +70,8 @@ def main() -> None:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             result = mod.main()
             bench_seconds[name] = time.time() - t0
-            if name == "replay_bench":
-                replay = result
-            if name == "fig_latency":
-                latency = result
-            if name == "fig_cluster":
-                cluster = result
+            if name in captured and result is not None:
+                results[captured[name]] = result
             print(f"[{name}: ok in {bench_seconds[name]:.1f}s]", flush=True)
         except Exception:
             bench_seconds[name] = time.time() - t0
@@ -80,12 +80,7 @@ def main() -> None:
 
     if args.json:
         payload = {"bench_seconds": bench_seconds, "failures": failures}
-        if replay is not None:
-            payload["replay"] = replay
-        if latency is not None:
-            payload["latency"] = latency
-        if cluster is not None:
-            payload["cluster"] = cluster
+        payload.update(results)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"\n[wrote {args.json}]")

@@ -1,0 +1,641 @@
+"""Flat-array cache policy state — the kernel-resident layout.
+
+The dlist policies in :mod:`repro.cache.policies` encode recency as
+doubly-linked-list *pointers* (``nxt``/``prv`` arrays plus head/tail
+registers).  That layout is ideal for an O(1)-per-op CPU scan but hostile
+to a Pallas kernel: every list splice is a chain of dependent scalar
+scatters, and the state does not decompose into the handful of uniform
+vectors a scratch allocation wants.
+
+This module re-expresses every policy over a **timestamp layout**: list
+order *is* descending push-timestamp.  One monotone ``now`` counter is
+bumped on every (re-)push, so
+
+* the list *tail* is the occupied slot with minimum ``ts``,
+* the neighbour *toward the head* of slot ``h`` is the occupied slot with
+  the smallest ``ts`` strictly greater than ``ts[h]``,
+* two lists sharing one slot array (SLRU's B/T, S3-FIFO's S/M) are just
+  membership masks over the same ``ts`` vector.
+
+Victim search becomes a masked argmin over the padded slot axis — O(P)
+vector work instead of O(1) pointer chasing, but *vectorizable*, which is
+what both the batched ``lax.scan`` twin and the Pallas kernel need (and
+measured on the 8-capacity x 60k-request grid the masked-argmin scan
+already beats the dlist scan on CPU).
+
+Every policy is a pure step with one uniform signature::
+
+    state, hit, evicted, ops = FLAT_STEPS[policy](state, key, u, p, q)
+
+over a single :class:`FlatState` pytree whose fields are fixed across
+policies (unused fields ride along at zero cost inside a fused scan), an
+``int32[N_PARAMS]`` per-lane parameter vector ``p`` and a scalar float
+coin threshold ``q``.  Capacity-derived parameters are *traced* per-lane
+values, so one compiled program serves the whole (capacity x seed) grid.
+
+Bit-identity with :mod:`repro.cache.policies` (and therefore with the
+``py_ref`` oracles) is pinned by ``tests/test_pallas_replay.py``: hits,
+evicted keys and op vectors must match element-wise, padded and exact.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# numpy scalars, not jnp: the Pallas kernel body closes over these, and a
+# jnp scalar would be a captured device constant (pallas_call rejects those)
+NIL = np.int32(-1)
+_INT32_MAX = np.int32(2**31 - 1)
+# bias for collapsing a cyclic hand scan into one argmin (see _sieve_step);
+# timestamps stay far below this (at most a couple of bumps per request)
+_WRAP_BIAS = np.int32(2**30)
+
+# -- regs vector layout (per-lane scalar registers) -------------------------
+R_SIZE = 0      # slots ever filled, saturating at capacity
+R_NOW = 1       # monotone push counter (list order == descending ts)
+R_SIZET = 2     # SLRU: protected-list population
+R_SIZES = 3     # S3-FIFO: small-queue population
+R_SIZEM = 4     # S3-FIFO: main-queue population
+R_GPOS = 5      # S3-FIFO: ghost-ring write cursor
+R_HAND = 6      # SIEVE: hand slot, NIL when unset
+N_REGS = 8
+
+# -- per-lane parameter vector layout ---------------------------------------
+P_CAP = 0
+P_MAX_SCAN = 1
+P_PROT_CAP = 2
+P_S_CAP = 3
+P_M_CAP = 4
+P_GHOST_CAP = 5
+N_PARAMS = 6
+
+# Packed op-vector bit layout (delink, head, tail, scan) -> one int32.
+# head is bounded by max_scan + 2 per access, tail by 2, scan by the
+# capacity (SIEVE's hand walk); 19 bits cover every capacity in the
+# benchmarks with room to spare.
+_OPS_HEAD_SHIFT = 1
+_OPS_TAIL_SHIFT = 9
+_OPS_SCAN_SHIFT = 12
+_OPS_HEAD_MASK = 0xFF      # 8 bits
+_OPS_TAIL_MASK = 0x7       # 3 bits
+_OPS_SCAN_MASK = 0x7FFFF   # 19 bits
+
+_PARAM_NAMES = {
+    "lru": (),
+    "fifo": (),
+    "prob_lru": ("q",),
+    "clock": ("max_scan",),
+    "slru": ("protected_frac",),
+    "s3fifo": ("small_frac", "max_scan"),
+    "sieve": (),
+}
+
+
+class FlatState(NamedTuple):
+    """Uniform flat policy state (all int32; booleans stored as 0/1).
+
+    ``aux`` is the policy's second membership bit: ``in_T`` for SLRU,
+    ``in_M`` for S3-FIFO, unused elsewhere.  ``ghost`` is the S3-FIFO
+    ghost ring (NIL-filled for other policies).  ``regs`` packs the
+    scalar registers (see the ``R_*`` indices).
+    """
+
+    key2slot: jnp.ndarray   # (K,) slot of each key, NIL when absent
+    slot2key: jnp.ndarray   # (P,) key in each slot, NIL when free
+    ts: jnp.ndarray         # (P,) push timestamp (list position)
+    bit: jnp.ndarray        # (P,) CLOCK/SIEVE/S3 reference bit
+    aux: jnp.ndarray        # (P,) secondary membership bit
+    ghost: jnp.ndarray      # (P,) evicted-key ring (S3-FIFO)
+    regs: jnp.ndarray       # (N_REGS,) scalar registers
+
+
+def flat_state_init(key_space: int, pad: int) -> FlatState:
+    """Zero state shared by every policy (SIEVE's hand starts at NIL)."""
+    regs = jnp.zeros((N_REGS,), jnp.int32).at[R_HAND].set(NIL)
+    return FlatState(
+        key2slot=jnp.full((key_space,), NIL, jnp.int32),
+        slot2key=jnp.full((pad,), NIL, jnp.int32),
+        ts=jnp.zeros((pad,), jnp.int32),
+        bit=jnp.zeros((pad,), jnp.int32),
+        aux=jnp.zeros((pad,), jnp.int32),
+        ghost=jnp.full((pad,), NIL, jnp.int32),
+        regs=regs,
+    )
+
+
+def flat_lane_params(policy: str, capacity: int,
+                     **params: Any) -> Tuple[np.ndarray, float]:
+    """Derive one lane's ``(p_vec, q)`` from the policy's init kwargs.
+
+    Mirrors the ``<policy>_init`` derivations in policies.py exactly
+    (``prot_cap = max(1, int(C * protected_frac))`` etc.) so the flat
+    engine and the dlist engine agree on every rounded-down boundary.
+    """
+    if policy not in _PARAM_NAMES:
+        raise KeyError(f"unknown policy {policy!r}")
+    unknown = set(params) - set(_PARAM_NAMES[policy])
+    if unknown:
+        raise TypeError(
+            f"policy {policy!r} got unexpected params {sorted(unknown)}"
+        )
+    cap = int(capacity)
+    s_cap = max(1, int(cap * float(params.get("small_frac", 0.1))))
+    vec = np.zeros((N_PARAMS,), np.int32)
+    vec[P_CAP] = cap
+    vec[P_MAX_SCAN] = int(params.get("max_scan", 3))
+    vec[P_PROT_CAP] = max(1, int(cap * float(params.get("protected_frac", 0.5))))
+    vec[P_S_CAP] = s_cap
+    vec[P_M_CAP] = cap - s_cap
+    vec[P_GHOST_CAP] = max(1, cap - s_cap)
+    # stored as float32 by prob_lru_init; replicate the rounding so the
+    # coin comparison is bit-identical
+    q = float(np.float32(params.get("q", 0.5)))
+    return vec, q
+
+
+def pack_ops(ops: jnp.ndarray) -> jnp.ndarray:
+    """Pack an int32[4] (delink, head, tail, scan) op vector into one int32."""
+    return (
+        ops[0]
+        | (ops[1] << _OPS_HEAD_SHIFT)
+        | (ops[2] << _OPS_TAIL_SHIFT)
+        | (ops[3] << _OPS_SCAN_SHIFT)
+    ).astype(jnp.int32)
+
+
+def unpack_ops(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_ops`; appends a trailing length-4 axis."""
+    packed = jnp.asarray(packed, jnp.int32)
+    return jnp.stack(
+        [
+            packed & 1,
+            (packed >> _OPS_HEAD_SHIFT) & _OPS_HEAD_MASK,
+            (packed >> _OPS_TAIL_SHIFT) & _OPS_TAIL_MASK,
+            (packed >> _OPS_SCAN_SHIFT) & _OPS_SCAN_MASK,
+        ],
+        axis=-1,
+    )
+
+
+def _i32(x: Any) -> jnp.ndarray:
+    return jnp.asarray(x).astype(jnp.int32)
+
+
+def _ops4(delink: Any = 0, head: Any = 0, tail: Any = 0,
+          scan: Any = 0) -> jnp.ndarray:
+    return jnp.stack([_i32(delink), _i32(head), _i32(tail), _i32(scan)])
+
+
+def _min_slot(ts: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Slot with minimum ts among ``mask`` — the masked list's tail."""
+    return jnp.argmin(jnp.where(mask, ts, _INT32_MAX)).astype(jnp.int32)
+
+
+def _toward_head(ts: jnp.ndarray, mask: jnp.ndarray,
+                 h: jnp.ndarray) -> jnp.ndarray:
+    """The list neighbour of ``h`` one step toward the head (NIL at head)."""
+    above = mask & (ts > ts[h])
+    return jnp.where(jnp.any(above), _min_slot(ts, above), NIL)
+
+
+def _occupied(st: FlatState) -> jnp.ndarray:
+    return st.slot2key != NIL
+
+
+def _clear_key(key2slot: jnp.ndarray, old_key: jnp.ndarray) -> jnp.ndarray:
+    """``_table_evict``'s guarded mapping clear (no-op when old_key is NIL)."""
+    return jnp.where(
+        old_key == NIL,
+        key2slot,
+        key2slot.at[jnp.maximum(old_key, 0)].set(NIL),
+    )
+
+
+# ---------------------------------------------------------------------------
+# LRU family (LRU / FIFO / Prob-LRU) — branch-free, mirrors
+# policies._list_cache_access scatter for scatter.
+# ---------------------------------------------------------------------------
+
+
+def _make_list_step(reorder_of: Callable[[jnp.ndarray, jnp.ndarray],
+                                         jnp.ndarray]):
+    def step(st: FlatState, key: jnp.ndarray, u: jnp.ndarray,
+             p: jnp.ndarray, q: jnp.ndarray):
+        slot = st.key2slot[key]
+        hit = slot != NIL
+        reorder = reorder_of(u, q)
+        miss = ~hit
+        size = st.regs[R_SIZE]
+        now = st.regs[R_NOW]
+        cap = p[P_CAP]
+        full = size >= cap
+        evict = miss & full
+        victim = _min_slot(st.ts, _occupied(st))
+        s = jnp.where(hit, slot, jnp.where(full, victim, size))
+        old_key = st.slot2key[s]
+        evicted = jnp.where(evict, old_key, NIL)
+        idx_clear = jnp.where(evict, jnp.maximum(old_key, 0), key)
+        k2s = st.key2slot.at[idx_clear].set(
+            jnp.where(miss, NIL, st.key2slot[idx_clear])
+        )
+        k2s = k2s.at[key].set(jnp.where(miss, s, k2s[key]))
+        s2k = st.slot2key.at[s].set(jnp.where(miss, key, st.slot2key[s]))
+        act = miss | (hit & reorder)
+        ts = st.ts.at[s].set(jnp.where(act, now, st.ts[s]))
+        regs = st.regs.at[R_SIZE].set(
+            jnp.minimum(size + miss.astype(jnp.int32), cap)
+        )
+        regs = regs.at[R_NOW].set(now + act.astype(jnp.int32))
+        ops = _ops4(delink=hit & reorder, head=act, tail=evict)
+        st = st._replace(key2slot=k2s, slot2key=s2k, ts=ts, regs=regs)
+        return st, hit, evicted, ops
+
+    return step
+
+
+_lru_step = _make_list_step(lambda u, q: jnp.bool_(True))
+_fifo_step = _make_list_step(lambda u, q: jnp.bool_(False))
+_prob_lru_step = _make_list_step(lambda u, q: jnp.float32(u) >= q)
+
+
+# ---------------------------------------------------------------------------
+# CLOCK — bounded tail scan, reinsert 1-bit items.
+# ---------------------------------------------------------------------------
+
+
+def _clock_scan_evict(ts: jnp.ndarray, bit: jnp.ndarray, now: jnp.ndarray,
+                      mask: jnp.ndarray, max_scan: jnp.ndarray):
+    """Shared CLOCK/S3-M eviction scan over a fixed membership mask.
+
+    The victim stays *in* the mask for the whole loop (the dlist code only
+    pops it as the loop's final act), so the mask never changes — only the
+    timestamps of reinserted slots move.  Returns
+    (ts, bit, now, victim, n_reinsert).
+    """
+
+    def cond(carry):
+        _, _, _, scans, done, _ = carry
+        return (~done) & (scans <= max_scan)
+
+    def body(carry):
+        ts, bit, now, scans, done, victim = carry
+        s = _min_slot(ts, mask)
+        give_chance = (bit[s] != 0) & (scans < max_scan)
+        ts = ts.at[s].set(jnp.where(give_chance, now, ts[s]))
+        bit = bit.at[s].set(jnp.where(give_chance, 0, bit[s]))
+        now = now + give_chance.astype(jnp.int32)
+        return (ts, bit, now, scans + 1, ~give_chance,
+                jnp.where(give_chance, victim, s))
+
+    ts, bit, now, scans, _, victim = lax.while_loop(
+        cond, body,
+        (ts, bit, now, jnp.int32(0), jnp.bool_(False), NIL),
+    )
+    return ts, bit, now, victim, scans - 1
+
+
+def _clock_step(st: FlatState, key: jnp.ndarray, u: jnp.ndarray,
+                p: jnp.ndarray, q: jnp.ndarray):
+    del u, q
+    slot = st.key2slot[key]
+    hit = slot != NIL
+    cap = p[P_CAP]
+
+    def on_hit(st: FlatState):
+        bit = st.bit.at[jnp.maximum(slot, 0)].set(1)
+        return st._replace(bit=bit), NIL, _ops4()
+
+    def on_miss(st: FlatState):
+        def fresh(st: FlatState):
+            return st, st.regs[R_SIZE], NIL, _ops4()
+
+        def evict(st: FlatState):
+            ts, bit, now, victim, n_re = _clock_scan_evict(
+                st.ts, st.bit, st.regs[R_NOW], _occupied(st), p[P_MAX_SCAN]
+            )
+            old_key = st.slot2key[victim]
+            k2s = _clear_key(st.key2slot, old_key)
+            s2k = st.slot2key.at[victim].set(NIL)
+            regs = st.regs.at[R_NOW].set(now)
+            st = st._replace(key2slot=k2s, slot2key=s2k, ts=ts, bit=bit,
+                             regs=regs)
+            return st, victim, old_key, _ops4(head=n_re, tail=1, scan=n_re)
+
+        st, new_slot, old_key, ops = lax.cond(
+            st.regs[R_SIZE] < cap, fresh, evict, st
+        )
+        now = st.regs[R_NOW]
+        k2s = st.key2slot.at[key].set(new_slot)
+        s2k = st.slot2key.at[new_slot].set(key)
+        ts = st.ts.at[new_slot].set(now)
+        bit = st.bit.at[new_slot].set(0)
+        regs = st.regs.at[R_NOW].set(now + 1)
+        regs = regs.at[R_SIZE].set(jnp.minimum(st.regs[R_SIZE] + 1, cap))
+        st = st._replace(key2slot=k2s, slot2key=s2k, ts=ts, bit=bit,
+                         regs=regs)
+        return st, old_key, ops + _ops4(head=1)
+
+    st, evicted, ops = lax.cond(hit, on_hit, on_miss, st)
+    return st, hit, evicted, ops
+
+
+# ---------------------------------------------------------------------------
+# SLRU — probationary (aux=0) + protected (aux=1) masks over one ts vector.
+# ---------------------------------------------------------------------------
+
+
+def _slru_step(st: FlatState, key: jnp.ndarray, u: jnp.ndarray,
+               p: jnp.ndarray, q: jnp.ndarray):
+    del u, q
+    slot0 = st.key2slot[key]
+    hit = slot0 != NIL
+    slot = jnp.maximum(slot0, 0)
+    hit_T = hit & (st.aux[slot] != 0)
+    cap = p[P_CAP]
+    prot_cap = p[P_PROT_CAP]
+
+    def on_hit_T(st: FlatState):
+        now = st.regs[R_NOW]
+        ts = st.ts.at[slot].set(now)
+        regs = st.regs.at[R_NOW].set(now + 1)
+        return (st._replace(ts=ts, regs=regs), NIL,
+                _ops4(delink=1, head=1))
+
+    def on_hit_B(st: FlatState):
+        now = st.regs[R_NOW]
+        size_t = st.regs[R_SIZET]
+        aux = st.aux.at[slot].set(1)
+        ts = st.ts.at[slot].set(now)
+        now = now + 1
+        size_t = size_t + 1
+        # demote the protected tail back to B when T overflows; the slot
+        # we just promoted carries the newest ts, so it is never the tail
+        # (size_t > prot_cap >= 1 implies at least one older T member).
+        demote = size_t > prot_cap
+        t_tail = _min_slot(ts, _occupied(st) & (aux != 0))
+        aux = aux.at[t_tail].set(jnp.where(demote, 0, aux[t_tail]))
+        ts = ts.at[t_tail].set(jnp.where(demote, now, ts[t_tail]))
+        now = now + demote.astype(jnp.int32)
+        size_t = size_t - demote.astype(jnp.int32)
+        regs = st.regs.at[R_NOW].set(now).at[R_SIZET].set(size_t)
+        ops = _ops4(delink=1, head=1 + demote.astype(jnp.int32),
+                    tail=demote)
+        return st._replace(ts=ts, aux=aux, regs=regs), NIL, ops
+
+    def on_miss(st: FlatState):
+        def fresh(st: FlatState):
+            return st, st.regs[R_SIZE], NIL, _ops4()
+
+        def evict(st: FlatState):
+            occ = _occupied(st)
+            b_mask = occ & (st.aux == 0)
+            # dlist order: evict B's tail, falling back to T's tail only
+            # when B is empty.
+            victim = jnp.where(
+                jnp.any(b_mask),
+                _min_slot(st.ts, b_mask),
+                _min_slot(st.ts, occ & (st.aux != 0)),
+            )
+            old_key = st.slot2key[victim]
+            k2s = _clear_key(st.key2slot, old_key)
+            s2k = st.slot2key.at[victim].set(NIL)
+            st = st._replace(key2slot=k2s, slot2key=s2k)
+            return st, victim, old_key, _ops4(tail=1)
+
+        st, new_slot, old_key, ops = lax.cond(
+            st.regs[R_SIZE] < cap, fresh, evict, st
+        )
+        now = st.regs[R_NOW]
+        # the victim may have come from T (B empty): shrink sizeT using
+        # the *pre-clear* membership bit, then mark the slot probationary.
+        size_t = st.regs[R_SIZET] - (st.aux[new_slot] != 0).astype(jnp.int32)
+        k2s = st.key2slot.at[key].set(new_slot)
+        s2k = st.slot2key.at[new_slot].set(key)
+        ts = st.ts.at[new_slot].set(now)
+        aux = st.aux.at[new_slot].set(0)
+        regs = st.regs.at[R_NOW].set(now + 1).at[R_SIZET].set(size_t)
+        regs = regs.at[R_SIZE].set(jnp.minimum(st.regs[R_SIZE] + 1, cap))
+        st = st._replace(key2slot=k2s, slot2key=s2k, ts=ts, aux=aux,
+                         regs=regs)
+        return st, old_key, ops + _ops4(head=1)
+
+    def on_hit_any(st: FlatState):
+        return lax.cond(hit_T, on_hit_T, on_hit_B, st)
+
+    st, evicted, ops = lax.cond(hit, on_hit_any, on_miss, st)
+    return st, hit, evicted, ops
+
+
+# ---------------------------------------------------------------------------
+# S3-FIFO — small (aux=0) + main (aux=1) masks + ghost ring.
+# ---------------------------------------------------------------------------
+
+
+def _s3_evict_m(st: FlatState, p: jnp.ndarray):
+    """Evict from M with the CLOCK scan; returns (st, old_key, ops)."""
+    m_mask = _occupied(st) & (st.aux != 0)
+    ts, bit, now, victim, n_re = _clock_scan_evict(
+        st.ts, st.bit, st.regs[R_NOW], m_mask, p[P_MAX_SCAN]
+    )
+    old_key = st.slot2key[victim]
+    k2s = _clear_key(st.key2slot, old_key)
+    s2k = st.slot2key.at[victim].set(NIL)
+    aux = st.aux.at[victim].set(0)
+    regs = st.regs.at[R_NOW].set(now)
+    regs = regs.at[R_SIZEM].set(st.regs[R_SIZEM] - 1)
+    st = st._replace(key2slot=k2s, slot2key=s2k, ts=ts, bit=bit, aux=aux,
+                     regs=regs)
+    return st, old_key, _ops4(head=n_re, tail=1, scan=n_re)
+
+
+def _s3fifo_step(st: FlatState, key: jnp.ndarray, u: jnp.ndarray,
+                 p: jnp.ndarray, q: jnp.ndarray):
+    del u, q
+    slot = st.key2slot[key]
+    hit = slot != NIL
+    cap = p[P_CAP]
+
+    def on_hit(st: FlatState):
+        bit = st.bit.at[jnp.maximum(slot, 0)].set(1)
+        return st._replace(bit=bit), NIL, _ops4()
+
+    def on_miss(st: FlatState):
+        in_ghost = jnp.any(st.ghost == key)
+        evicted = NIL
+        ops = _ops4()
+
+        def mk_room_m(args):
+            st, ops, evicted = args
+            st, old_key, eops = _s3_evict_m(st, p)
+            return st, ops + eops, old_key
+
+        need_m = in_ghost & (st.regs[R_SIZEM] >= p[P_M_CAP])
+        st, ops, evicted = lax.cond(
+            need_m, mk_room_m, lambda a: a, (st, ops, evicted)
+        )
+
+        def mk_room_s(args):
+            st, ops, evicted = args
+            s_mask = _occupied(st) & (st.aux == 0)
+            s_tail = _min_slot(st.ts, s_mask)
+            promote = st.bit[s_tail] != 0
+
+            def do_promote(args):
+                st, ops, evicted = args
+                st, ops, evicted = lax.cond(
+                    st.regs[R_SIZEM] >= p[P_M_CAP], mk_room_m,
+                    lambda a: a, (st, ops, evicted)
+                )
+                now = st.regs[R_NOW]
+                ts = st.ts.at[s_tail].set(now)
+                aux = st.aux.at[s_tail].set(1)
+                bit = st.bit.at[s_tail].set(0)
+                regs = st.regs.at[R_NOW].set(now + 1)
+                regs = regs.at[R_SIZES].set(st.regs[R_SIZES] - 1)
+                regs = regs.at[R_SIZEM].set(st.regs[R_SIZEM] + 1)
+                st = st._replace(ts=ts, aux=aux, bit=bit, regs=regs)
+                return st, ops + _ops4(head=1, tail=1), evicted
+
+            def do_evict(args):
+                st, ops, evicted = args
+                old_key = st.slot2key[s_tail]
+                k2s = _clear_key(st.key2slot, old_key)
+                s2k = st.slot2key.at[s_tail].set(NIL)
+                gpos = st.regs[R_GPOS]
+                ghost = st.ghost.at[gpos].set(old_key)
+                regs = st.regs.at[R_GPOS].set((gpos + 1) % p[P_GHOST_CAP])
+                regs = regs.at[R_SIZES].set(st.regs[R_SIZES] - 1)
+                st = st._replace(key2slot=k2s, slot2key=s2k, ghost=ghost,
+                                 regs=regs)
+                return st, ops + _ops4(tail=1), old_key
+
+            return lax.cond(promote, do_promote, do_evict,
+                            (st, ops, evicted))
+
+        need_s = (~in_ghost) & (st.regs[R_SIZES] >= p[P_S_CAP])
+        st, ops, evicted = lax.cond(
+            need_s, mk_room_s, lambda a: a, (st, ops, evicted)
+        )
+
+        # place: next warmup slot while filling, else first freed slot
+        # (room-making above guarantees one exists).
+        new_slot = jnp.where(
+            st.regs[R_SIZE] < cap,
+            st.regs[R_SIZE],
+            jnp.argmax(st.slot2key == NIL).astype(jnp.int32),
+        )
+        now = st.regs[R_NOW]
+        to_m = in_ghost
+        k2s = st.key2slot.at[key].set(new_slot)
+        s2k = st.slot2key.at[new_slot].set(key)
+        ts = st.ts.at[new_slot].set(now)
+        aux = st.aux.at[new_slot].set(to_m.astype(jnp.int32))
+        bit = st.bit.at[new_slot].set(0)
+        regs = st.regs.at[R_NOW].set(now + 1)
+        regs = regs.at[R_SIZES].set(
+            st.regs[R_SIZES] + (~to_m).astype(jnp.int32)
+        )
+        regs = regs.at[R_SIZEM].set(st.regs[R_SIZEM] + to_m.astype(jnp.int32))
+        regs = regs.at[R_SIZE].set(jnp.minimum(st.regs[R_SIZE] + 1, cap))
+        st = st._replace(key2slot=k2s, slot2key=s2k, ts=ts, aux=aux,
+                         bit=bit, regs=regs)
+        return st, evicted, ops + _ops4(head=1)
+
+    st, evicted, ops = lax.cond(hit, on_hit, on_miss, st)
+    return st, hit, evicted, ops
+
+
+# ---------------------------------------------------------------------------
+# SIEVE — lazy promotion; the hand is a slot index, NIL when unset.
+# ---------------------------------------------------------------------------
+
+
+def _sieve_step(st: FlatState, key: jnp.ndarray, u: jnp.ndarray,
+                p: jnp.ndarray, q: jnp.ndarray):
+    del u, q
+    slot = st.key2slot[key]
+    hit = slot != NIL
+    cap = p[P_CAP]
+
+    def on_hit(st: FlatState):
+        bit = st.bit.at[jnp.maximum(slot, 0)].set(1)
+        return st._replace(bit=bit), NIL, _ops4()
+
+    def on_miss(st: FlatState):
+        def fresh(st: FlatState):
+            return st, st.regs[R_SIZE], NIL, _ops4()
+
+        def evict(st: FlatState):
+            occ = _occupied(st)
+            tail = _min_slot(st.ts, occ)
+            hand = st.regs[R_HAND]
+            start = jnp.where(hand == NIL, tail, hand)
+
+            # The hand walk visits occupied slots in cyclic ts order from
+            # ``start`` (toward the head, wrapping to the tail), clearing
+            # bits until the first clear-bit slot — which makes the victim
+            # and the cleared set computable in ONE vectorized pass instead
+            # of an O(P)-per-step while loop: the victim is the first
+            # original-bit-0 slot in cyclic order (upper segment
+            # ts >= ts[start] first, then the wrapped lower segment), or
+            # ``start`` itself after a full clearing cycle; the cleared
+            # slots are exactly the cyclic prefix strictly before it.
+            ts_start = st.ts[start]
+            bit0 = occ & (st.bit == 0)
+            # Cyclic order collapses to one argmin by biasing the wrapped
+            # lower segment (ts < ts[start]) above the upper one; ts stays
+            # far below the bias (one bump per push), so no overflow.
+            ck = st.ts + jnp.where(st.ts < ts_start, _WRAP_BIAS, 0)
+            idx = jnp.argmin(jnp.where(bit0, ck, _INT32_MAX))
+            found = bit0[idx]  # gather beats an any() reduction
+            victim = jnp.where(found, idx, start)
+            ts_v = st.ts[victim]
+            # Cleared set = cyclic prefix strictly before the victim; a
+            # full clearing cycle (no clear bit anywhere) clears the lot.
+            scanned = occ & jnp.where(found, ck < ck[victim], True)
+            bit = jnp.where(scanned, 0, st.bit)
+            scans = jnp.sum(scanned.astype(jnp.int32))
+            # hand moves one step past the victim (NIL at the head ->
+            # restart from the tail next eviction), computed *before* the
+            # victim leaves the list, exactly like dl.prv[victim].
+            above = occ & (st.ts > ts_v)
+            nh = jnp.argmin(jnp.where(above, st.ts, _INT32_MAX))
+            new_hand = jnp.where(above[nh], nh, NIL)
+            old_key = st.slot2key[victim]
+            k2s = _clear_key(st.key2slot, old_key)
+            s2k = st.slot2key.at[victim].set(NIL)
+            regs = st.regs.at[R_HAND].set(new_hand)
+            st = st._replace(key2slot=k2s, slot2key=s2k, bit=bit, regs=regs)
+            return st, victim, old_key, _ops4(tail=1, scan=scans)
+
+        st, new_slot, old_key, ops = lax.cond(
+            st.regs[R_SIZE] < cap, fresh, evict, st
+        )
+        now = st.regs[R_NOW]
+        k2s = st.key2slot.at[key].set(new_slot)
+        s2k = st.slot2key.at[new_slot].set(key)
+        ts = st.ts.at[new_slot].set(now)
+        bit = st.bit.at[new_slot].set(0)
+        regs = st.regs.at[R_NOW].set(now + 1)
+        regs = regs.at[R_SIZE].set(jnp.minimum(st.regs[R_SIZE] + 1, cap))
+        st = st._replace(key2slot=k2s, slot2key=s2k, ts=ts, bit=bit,
+                         regs=regs)
+        return st, old_key, ops + _ops4(head=1)
+
+    st, evicted, ops = lax.cond(hit, on_hit, on_miss, st)
+    return st, hit, evicted, ops
+
+
+FLAT_STEPS: Dict[str, Callable[..., Any]] = {
+    "lru": _lru_step,
+    "fifo": _fifo_step,
+    "prob_lru": _prob_lru_step,
+    "clock": _clock_step,
+    "slru": _slru_step,
+    "s3fifo": _s3fifo_step,
+    "sieve": _sieve_step,
+}

@@ -292,10 +292,76 @@ def refetch_attempts(n: int, fail_prob: float, seed: int = 0) -> np.ndarray:
     return rng.geometric(1.0 - fail_prob, size=n).astype(np.int64)
 
 
+def _window_stream(window: ArrayLike | None, n_t: int, fail_prob: float,
+                   fail_seed: int) -> np.ndarray:
+    """Shared window plumbing: scalar or (T,) windows, validated and
+    stretched by TTL re-issue attempts, resolved to an int32 (T,) stream.
+
+    This is the single source of the fetch-expiry semantics — the host
+    classifier below, the device classifier, and the fused pallas replay
+    kernel (:mod:`repro.kernels.replay`) all consume windows through it,
+    so the three stay bit-identical by construction."""
+    windows = np.asarray(0 if window is None else window, dtype=np.int64)
+    if windows.ndim > 1:
+        raise ValueError(f"window must be a scalar or (T,), got {windows.shape}")
+    if np.any(windows < 0):
+        raise ValueError("window must be >= 0")
+    if windows.ndim == 1 and windows.shape[0] != n_t:
+        raise ValueError(f"per-request windows {windows.shape} vs "
+                         f"{n_t} requests")
+    out = np.broadcast_to(windows, (n_t,))
+    if fail_prob:
+        out = out * refetch_attempts(n_t, fail_prob, fail_seed)
+    return out.astype(np.int32)
+
+
+def _classify_inflight_device(keys: ArrayLike, hits: jax.Array,
+                              window: ArrayLike, key_space: int | None,
+                              fail_prob: float, fail_seed: int) -> jax.Array:
+    """Device-resident classification — no host round-trip.
+
+    The pallas replay engine (:mod:`repro.kernels.replay`) returns device
+    arrays; pulling them through ``np.asarray`` just to push them back for
+    the vmapped classifier costs a device->host->device bounce per call.
+    Here ``hits`` stays on device end to end: the host only does shape
+    plumbing and the (host-input) window stream.  ``key_space`` must be
+    explicit — inferring it from the trace would force a device sync,
+    which is the bounce this path exists to avoid."""
+    if key_space is None or int(key_space) <= 0:
+        raise ValueError("device-resident hits need an explicit key_space "
+                         "(inferring it from the trace would sync the device)")
+    if not isinstance(keys, jax.Array):
+        _resolve_key_space(np.asarray(keys), int(key_space))
+    kj = jnp.asarray(keys, jnp.int32)
+    if kj.ndim == 1:
+        kj = kj[None, :]
+    elif kj.ndim != 2:
+        raise ValueError(f"keys must be (T,) or (S, T), got {kj.shape}")
+    n_t = int(kj.shape[-1])
+    if int(hits.shape[-1]) != n_t:
+        raise ValueError(f"hits {hits.shape} vs keys {kj.shape}: "
+                         "trailing request axes differ")
+    windows = _window_stream(window, n_t, fail_prob, fail_seed)
+    n_s = int(kj.shape[0])
+    flat_h = hits.astype(bool).reshape(-1, n_t)
+    if n_s > 1:
+        if hits.ndim < 2 or int(hits.shape[-2]) != n_s:
+            raise ValueError(f"hits {hits.shape} second-to-last axis "
+                             f"must match {n_s} key streams")
+        key_lane = np.tile(np.arange(n_s), flat_h.shape[0] // n_s)
+    else:
+        key_lane = np.zeros(flat_h.shape[0], np.int64)
+    lanes = _classify_grid(
+        kj[jnp.asarray(key_lane)], flat_h, jnp.asarray(windows, jnp.int32),
+        jnp.zeros((int(key_space),), jnp.int32),
+    )
+    return lanes.reshape(hits.shape)
+
+
 def classify_inflight(keys: ArrayLike, hits: ArrayLike, window: ArrayLike,
                       key_space: int | None = None,
                       fail_prob: float = 0.0,
-                      fail_seed: int = 0) -> np.ndarray:
+                      fail_seed: int = 0) -> np.ndarray | jax.Array:
     """Classify each replayed request as true hit / delayed hit / true miss.
 
     Overlays an MSHR-style in-flight window on an *already replayed* trace:
@@ -341,22 +407,19 @@ def classify_inflight(keys: ArrayLike, hits: ArrayLike, window: ArrayLike,
     ``n_delayed / (n_delayed + n_true_miss)`` — plugs directly into
     :func:`repro.core.queueing.coalesced_network` as the measured
     ``sigma``, with the *true-hit* ratio as its ``p_hit``.
+
+    When ``hits`` is a device-resident ``jax.Array`` (e.g. straight off
+    :func:`repro.kernels.replay.replay_grid_pallas`) the classification
+    runs end-to-end on device and returns a ``jax.Array`` — no
+    device->host->device bounce; ``key_space`` must then be explicit,
+    since inferring it from the trace would force a device sync.
     """
+    if isinstance(hits, jax.Array):
+        return _classify_inflight_device(keys, hits, window, key_space,
+                                         fail_prob, fail_seed)
     keys = np.asarray(keys)
     hits_np = np.asarray(hits)
-    windows = np.asarray(window, dtype=np.int64)
-    if windows.ndim > 1:
-        raise ValueError(f"window must be a scalar or (T,), got {windows.shape}")
-    if np.any(windows < 0):
-        raise ValueError("window must be >= 0")
-    if windows.ndim == 1 and windows.shape[0] != keys.shape[-1]:
-        raise ValueError(f"per-request windows {windows.shape} vs "
-                         f"{keys.shape[-1]} requests")
-    windows = np.broadcast_to(windows, (keys.shape[-1],))
-    if fail_prob:
-        windows = windows * refetch_attempts(keys.shape[-1], fail_prob,
-                                             fail_seed)
-    windows = windows.astype(np.int32)
+    windows = _window_stream(window, int(keys.shape[-1]), fail_prob, fail_seed)
     key_space = _resolve_key_space(keys, key_space)
     if keys.ndim == 1:
         keys2 = keys[None, :]

@@ -199,12 +199,18 @@ def run_cache_trace(policy: str, capacity: int, trace: np.ndarray, seed: int = 0
         (:mod:`repro.cache.replay`).  ``key_space`` bounds the key-indexed
         arrays (inferred from the trace when omitted) and ``pad_to`` sizes
         the slot arrays so different capacities share a compiled program.
+    ``backend="pallas"``
+        dispatches the flat-state accelerator engine
+        (:mod:`repro.kernels.replay`): the replay runs as a pallas kernel
+        with the cache state in scratch memory (its compiled scan twin on
+        CPU), same ``key_space``/``pad_to`` knobs.
 
-    Both consume the same float32 coin substream (admission randomness
-    independent of the trace stream) and must return bit-identical
-    (hits, ops) arrays — ``tests/test_replay.py`` pins that contract
-    element-wise for every policy, which is what keeps py_ref usable as
-    the differential oracle for any new replay feature.
+    All backends consume the same float32 coin substream (admission
+    randomness independent of the trace stream) and must return
+    bit-identical (hits, ops) arrays — ``tests/test_replay.py`` and
+    ``tests/test_pallas_replay.py`` pin that contract element-wise for
+    every policy, which is what keeps py_ref usable as the differential
+    oracle for any new replay feature.
     """
     us = coin_stream(len(trace), seed)
     if backend == "jax":
@@ -214,8 +220,16 @@ def run_cache_trace(policy: str, capacity: int, trace: np.ndarray, seed: int = 0
                            key_space=key_space, pad_to=pad_to,
                            **policy_kwargs)
         return np.asarray(res.hits), res.ops
+    if backend == "pallas":
+        from repro.kernels.replay import replay_grid_pallas, unpack_grid_ops
+
+        pres = replay_grid_pallas(policy, trace, us, [int(capacity)],
+                                  key_space=key_space, pad_to=pad_to,
+                                  **policy_kwargs)
+        return np.asarray(pres.hits)[0, 0], unpack_grid_ops(pres)[0, 0]
     if backend != "py":
-        raise ValueError(f"unknown backend {backend!r} (want 'py' or 'jax')")
+        raise ValueError(f"unknown backend {backend!r} "
+                         "(want 'py', 'jax' or 'pallas')")
     cache = PY_POLICIES[policy](capacity, **policy_kwargs)
     hits = np.empty(len(trace), dtype=bool)
     ops = np.empty((len(trace), 4), dtype=np.int64)
@@ -352,6 +366,17 @@ def parameterized_network(
                          tuple(branches), mpl)
 
 
+def _class_fracs(cls, warmup_frac: float = 0.25) -> np.ndarray:
+    """(true miss, true hit, delayed hit) fractions after warmup, from an
+    int8 class stream — host- or device-resident (e.g. the fused ``cls``
+    output of :func:`repro.kernels.replay.replay_grid_pallas`)."""
+    w = int(cls.shape[-1] * warmup_frac)
+    cls_m = np.asarray(cls)[..., w:]
+    return np.stack(
+        [(cls_m == c).mean(axis=-1) for c in range(3)], axis=-1
+    )
+
+
 def _classify(trace, hits, window, key_space: int, backend: str,
               warmup_frac: float = 0.25, fail_prob: float = 0.0,
               fail_seed: int = 0) -> np.ndarray:
@@ -360,7 +385,7 @@ def _classify(trace, hits, window, key_space: int, backend: str,
     ``window`` is a scalar or a (T,) per-request array — passed straight
     to the classifiers, which share the fetch-expiry semantics (including
     the ``fail_prob`` TTL re-issue stretch)."""
-    if backend == "jax":
+    if backend in ("jax", "pallas"):
         from repro.cache.replay import classify_inflight  # lazy: pulls in jax
 
         cls = classify_inflight(trace, hits, window, key_space=key_space,
@@ -370,11 +395,7 @@ def _classify(trace, hits, window, key_space: int, backend: str,
 
         cls = classify_inflight_py(trace, hits, window, fail_prob=fail_prob,
                                    fail_seed=fail_seed)
-    w = int(cls.shape[-1] * warmup_frac)
-    cls_m = cls[..., w:]
-    return np.stack(
-        [(cls_m == c).mean(axis=-1) for c in range(3)], axis=-1
-    )
+    return _class_fracs(cls, warmup_frac)
 
 
 def measure_cache(
@@ -409,20 +430,43 @@ def measure_cache(
     fetch re-issues on failure, stretching its window by a geometric
     attempt count (see :func:`repro.cache.replay.refetch_attempts`);
     0 keeps the classification unchanged.
+
+    ``backend`` is ``"py"`` (the oracle loop), ``"jax"`` (the compiled
+    scan engine) or ``"pallas"`` (the flat-state accelerator engine,
+    :mod:`repro.kernels.replay` — replay *and* classification fuse into
+    a single dispatch); all three return identical measurements.
     """
     trace = zipf_trace(n_requests, key_space, theta, seed)
-    hits, ops = run_cache_trace(policy, capacity, trace, seed=seed,
-                                backend=backend, key_space=key_space,
-                                **policy_kwargs)
+    classify = bool(np.any(miss_latency_requests))
+    fracs_fused = None
+    if backend == "pallas":
+        # replay + classification fused in ONE dispatch (the scan/py
+        # backends replay first, then run the classifier as a post-pass)
+        from repro.kernels.replay import replay_grid_pallas, unpack_grid_ops
+
+        pres = replay_grid_pallas(
+            policy, trace, coin_stream(n_requests, seed), [capacity],
+            key_space=key_space,
+            window=miss_latency_requests if classify else None,
+            fail_prob=fetch_fail_prob, fail_seed=seed, **policy_kwargs)
+        hits = np.asarray(pres.hits)[0, 0]
+        ops = unpack_grid_ops(pres)[0, 0]
+        if pres.cls is not None:
+            fracs_fused = _class_fracs(pres.cls[0, 0])
+    else:
+        hits, ops = run_cache_trace(policy, capacity, trace, seed=seed,
+                                    backend=backend, key_space=key_space,
+                                    **policy_kwargs)
     service = dataclasses.replace(
         PAPER_SERVICES.get(policy, ServiceTimes()), disk=disk_us
     )
     meas = empirical_network(policy, hits, ops, service=service, mpl=mpl,
                              disk_servers=disk_servers)
     meas = dataclasses.replace(meas, capacity=capacity)
-    if np.any(miss_latency_requests):
-        fracs = _classify(trace, hits, miss_latency_requests, key_space,
-                          backend, fail_prob=fetch_fail_prob, fail_seed=seed)
+    if classify:
+        fracs = fracs_fused if fracs_fused is not None else _classify(
+            trace, hits, miss_latency_requests, key_space, backend,
+            fail_prob=fetch_fail_prob, fail_seed=seed)
         meas = dataclasses.replace(
             meas,
             miss_latency_requests=int(round(float(
@@ -454,9 +498,14 @@ def sweep_cache_sizes(
     ``backend="jax"`` (default) replays every size in one compiled
     dispatch: a single Mattson stack-distance pass for LRU, the vmapped
     (capacity x seed) scan grid for everything else.  ``backend="py"``
-    keeps the oracle loop (~10-80x slower, zero jax imports) — the two
-    backends consume identical trace/coin streams and return identical
-    arrays, so either can cross-check the other.
+    keeps the oracle loop (~10-80x slower, zero jax imports).
+    ``backend="pallas"`` runs the flat-state accelerator engine
+    (:mod:`repro.kernels.replay`) — every size is a grid lane of ONE
+    kernel dispatch with the delayed-hit classification fused into the
+    same pass when the sizes share a window stream (per-size scalar
+    windows that differ fall back to the device classifier per size).
+    All backends consume identical trace/coin streams and return
+    identical arrays, so any can cross-check another.
 
     ``miss_latency_requests`` — a scalar, one window per size (in a
     closed system the window ~= X·L *depends on the operating point*, so
@@ -474,8 +523,9 @@ def sweep_cache_sizes(
     """
     from repro.core.simulator import simulate_network  # lazy: pulls in jax
 
-    if backend not in ("py", "jax"):
-        raise ValueError(f"unknown backend {backend!r} (want 'py' or 'jax')")
+    if backend not in ("py", "jax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r} "
+                         "(want 'py', 'jax' or 'pallas')")
     sizes = [int(c) for c in sizes]
     mlr = np.asarray(miss_latency_requests)
     if mlr.ndim == 1 and mlr.size == n_requests:
@@ -505,7 +555,25 @@ def sweep_cache_sizes(
                 )
             return
         trace = zipf_trace(n_requests, key_space, theta, seed)
-        if policy == "lru":
+        cls_g = hits_dev = None
+        if backend == "pallas":
+            from repro.kernels.replay import (replay_grid_pallas,
+                                              unpack_grid_ops)
+
+            # all sizes + (when the windows agree) the classification in
+            # ONE kernel dispatch — the fused prong-C pipeline
+            same_w = all(np.array_equal(w, windows[0]) for w in windows[1:])
+            pres = replay_grid_pallas(
+                policy, trace, coin_stream(n_requests, seed), sizes,
+                key_space=key_space,
+                window=windows[0] if (classify and same_w) else None,
+                fail_prob=fetch_fail_prob, fail_seed=seed, **policy_kwargs)
+            hits_dev = pres.hits[:, 0]  # device-resident, for the classifier
+            hits_g = np.asarray(hits_dev)
+            ops_g = unpack_grid_ops(pres)[:, 0]
+            if pres.cls is not None:
+                cls_g = pres.cls[:, 0]
+        elif policy == "lru":
             from repro.cache.replay import lru_sweep
 
             hits_g, ops_g = lru_sweep(trace, sizes)
@@ -524,9 +592,14 @@ def sweep_cache_sizes(
                                      disk_servers=disk_servers)
             meas = dataclasses.replace(meas, capacity=c)
             if np.any(w):
-                fracs = _classify(trace, np.asarray(hits_g[i]), w,
-                                  key_space, backend,
-                                  fail_prob=fetch_fail_prob, fail_seed=seed)
+                if cls_g is not None:
+                    fracs = _class_fracs(cls_g[i])
+                else:
+                    h_i = (hits_dev[i] if hits_dev is not None
+                           else np.asarray(hits_g[i]))
+                    fracs = _classify(trace, h_i, w, key_space, backend,
+                                      fail_prob=fetch_fail_prob,
+                                      fail_seed=seed)
                 meas = dataclasses.replace(
                     meas,
                     miss_latency_requests=int(round(float(np.mean(w)))),

@@ -1,0 +1,145 @@
+"""Network -> simulator-spec compilation, shared by both event engines.
+
+:func:`compile_network` freezes a :class:`repro.core.queueing.ClosedNetwork`
+at one hit ratio into flat arrays (:class:`SimSpec`) that an event loop can
+index with traced station ids; :func:`stack_specs` stacks a grid of them
+for vmap.  The layer lives below the engines so that both the threefry
+scan simulator (:mod:`repro.core.simulator`) and the pallas kernel engine
+(:mod:`repro.kernels.event_sim`) can import it without the kernels package
+and the core package importing each other.
+
+:class:`SimResult` is the closed-loop summary both engines return.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.queueing import QUEUE, ClosedNetwork
+
+# Sentinels: "idle / not ready" times and "not enqueued" sequence numbers.
+# int32 max keeps every traced comparison in 32-bit (jit-hash64 lint).
+INF_NS = np.int32(2**31 - 1)
+BIG_SEQ = np.int32(2**31 - 1)
+
+_DIST_IDS = {"det": 0, "exp": 1, "pareto": 2}
+
+
+class SimSpec(NamedTuple):
+    """A closed network compiled to arrays at one (or a grid of) p_hit."""
+
+    is_queue: jax.Array  # (K,) bool
+    svc_ns: jax.Array  # (K,) f32 mean service in ns
+    dist_id: jax.Array  # (K,) i32
+    dist_params: jax.Array  # (K, 4) f32: alpha, lo, hi, raw_mean (pareto)
+    branch_cum: jax.Array  # (B,) f32 cumulative branch probabilities
+    visits: jax.Array  # (B, L) i32 station indices, -1 padded
+    servers: jax.Array  # (K,) i32 FCFS server count (1 for think stations)
+    disk_rank: jax.Array  # (K,) i32 backing-store group id, -1 for non-disks
+    mpl: int
+
+
+def _bounded_pareto_mean(alpha: float, lo: float, hi: float) -> float:
+    if abs(alpha - 1.0) < 1e-9:
+        return lo * hi / (hi - lo) * math.log(hi / lo)
+    num = lo**alpha * alpha * (lo ** (1 - alpha) - hi ** (1 - alpha))
+    den = (alpha - 1.0) * (1.0 - (lo / hi) ** alpha)
+    return num / den
+
+
+def compile_network(net: ClosedNetwork, p_hit: float) -> SimSpec:
+    """Freeze a network at a given hit ratio into simulator arrays."""
+    names = [s.name for s in net.stations]
+    idx = {n: i for i, n in enumerate(names)}
+    K = len(names)
+    is_queue = np.array([s.kind == QUEUE for s in net.stations], dtype=bool)
+    svc_ns = np.array(
+        [s.mean_service(p_hit) * 1e3 for s in net.stations], dtype=np.float32
+    )
+    dist_id = np.array([_DIST_IDS[s.dist] for s in net.stations], dtype=np.int32)
+    dist_params = np.zeros((K, 4), dtype=np.float32)
+    for i, s in enumerate(net.stations):
+        if s.dist == "pareto":
+            alpha, lo, hi = s.dist_params
+            dist_params[i] = (alpha, lo, hi, _bounded_pareto_mean(alpha, lo, hi))
+        else:
+            dist_params[i] = (1.0, 1.0, 1.0, 1.0)
+
+    probs = np.array([b.probability(p_hit) for b in net.branches], dtype=np.float64)
+    if not math.isclose(probs.sum(), 1.0, abs_tol=1e-5):
+        raise ValueError(f"branch probs sum to {probs.sum()} at p={p_hit}")
+    probs = np.maximum(probs, 0.0)
+    branch_cum = np.cumsum(probs / probs.sum()).astype(np.float32)
+
+    L = max(len(b.visits) for b in net.branches)
+    if min(len(b.visits) for b in net.branches) == 0:
+        raise ValueError("empty branch routes are not supported")
+    visits = np.full((len(net.branches), L), -1, dtype=np.int32)
+    for bi, b in enumerate(net.branches):
+        for vi, v in enumerate(b.visits):
+            visits[bi, vi] = idx[v]
+    if is_queue[visits[:, 0]].any():
+        # init places all mpl jobs straight into service at their first
+        # station; a queue-first route would bypass the busy accounting.
+        raise ValueError("branch routes must start at a think station")
+
+    servers = np.array(
+        [s.servers if s.kind == QUEUE else 1 for s in net.stations],
+        dtype=np.int32,
+    )
+
+    # A station is a backing store if it is named "disk" — either the bare
+    # single-node disk or a per-shard replica ("s3:disk", the cluster
+    # composition's naming).  Each disk gets its own MSHR flow group, so
+    # miss coalescing is local to the shard whose disk serves the fetch.
+    disk_rank = np.full(K, -1, dtype=np.int32)
+    rank = 0
+    for i, name in enumerate(names):
+        if name.split(":")[-1] == "disk":
+            disk_rank[i] = rank
+            rank += 1
+
+    return SimSpec(
+        is_queue=jnp.asarray(is_queue),
+        svc_ns=jnp.asarray(svc_ns),
+        dist_id=jnp.asarray(dist_id),
+        dist_params=jnp.asarray(dist_params),
+        branch_cum=jnp.asarray(branch_cum),
+        visits=jnp.asarray(visits),
+        servers=jnp.asarray(servers),
+        disk_rank=jnp.asarray(disk_rank),
+        mpl=net.mpl,
+    )
+
+
+def stack_specs(specs) -> SimSpec:
+    """Stack per-p_hit specs along a leading axis for vmap."""
+    mpl = specs[0].mpl
+    assert all(s.mpl == mpl for s in specs)
+    return SimSpec(
+        *[jnp.stack([getattr(s, f) for s in specs]) for f in SimSpec._fields[:-1]],
+        mpl=mpl,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    p_hit: np.ndarray
+    throughput: np.ndarray  # requests/µs == M req/s
+    ci95: np.ndarray  # 95% CI half-width across seeds
+    n_requests: int
+    # fraction of measured completions that were delayed hits (coalesced
+    # onto an in-flight fetch); zeros unless coalesce_flows > 0.
+    delayed_frac: np.ndarray | None = None
+    # per-branch completion rates (requests/µs), (P, B) in the order of
+    # ``net.branches``; ``branch_delayed`` is the delayed-hit subset of the
+    # same completions.  The cluster prong folds these into per-shard
+    # throughput / hit-ratio / delayed-hit breakdowns.
+    branch_throughput: np.ndarray | None = None
+    branch_delayed: np.ndarray | None = None

@@ -1,0 +1,334 @@
+"""Pallas event-driven simulator: the closed-loop (p_hit x seed) grid.
+
+Prong B's measurement grid (`repro.core.simulator.simulate_network`) is a
+vmapped ``lax.while_loop`` whose per-event cost is dominated by RNG
+plumbing: every event splits a threefry key 4 (closed) to 7 (coalescing)
+ways before drawing at most 3 variates.  On an accelerator the split
+chains serialize; this kernel replaces them with a **counter-based 32-bit
+hash stream** (a splitmix-style finalizer over ``seed ^ ctr``) — one
+multiply-xorshift chain per variate, vectorizes over lanes, and stays in
+uint32 end to end (the repo's jit-hash64 lint bans 64-bit dtypes in
+traced scopes).
+
+Everything else — FIFO release by enqueue sequence, multi-server busy
+accounting, route advance, warmup snapshots — is the exact event loop of
+``_simulate``, restricted to the closed-loop non-coalescing case (the
+open-loop/MSHR prongs keep the scan backend; ``simulate_network`` raises
+if you ask the pallas backend for them).
+
+Because the RNG stream differs, agreement with ``simulate_network`` is
+*statistical* (same network, same mean/dispersion laws — pinned within a
+few percent by tests), while the pallas kernel and the vmapped twin share
+:func:`_sim_lane` verbatim and are therefore bit-identical, the same
+twin-pair structure as the replay kernel.
+
+``interpret=None`` auto-selects: real kernel on TPU, jitted vmapped twin
+on CPU; ``interpret=True`` runs the kernel body under the pallas
+interpreter (CI fallback, tests only).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.simspec import (BIG_SEQ, INF_NS, SimResult, compile_network,
+                                stack_specs)
+from repro.kernels import CompilerParams
+
+_GOLDEN = np.uint32(0x9E3779B9)
+_MIX1 = np.uint32(0x21F0AAAD)
+_MIX2 = np.uint32(0x735A2D97)
+_INV24 = np.float32(1.0 / (1 << 24))
+
+
+def _mix(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3-style 32-bit finalizer (full avalanche)."""
+    x = x ^ (x >> 16)
+    x = x * _MIX1
+    x = x ^ (x >> 15)
+    x = x * _MIX2
+    x = x ^ (x >> 15)
+    return x
+
+
+class _SpecArrays(NamedTuple):
+    """One lane's compiled network (the array fields of SimSpec)."""
+
+    is_queue: jnp.ndarray    # (K,) bool
+    svc_ns: jnp.ndarray      # (K,) f32
+    dist_id: jnp.ndarray     # (K,) i32
+    dist_params: jnp.ndarray  # (K, 4) f32
+    branch_cum: jnp.ndarray  # (B,) f32
+    visits: jnp.ndarray      # (B, L) i32
+    servers: jnp.ndarray     # (K,) i32
+
+
+def _service_ns(u: jnp.ndarray, spec: _SpecArrays, k: jnp.ndarray):
+    """Service draw (ns, int32 >= 1) — the `_sample_service_ns` formulas
+    with the uniform supplied by the caller's counter stream."""
+    mean = spec.svc_ns[k]
+    s_exp = -jnp.log(u)
+    alpha, lo, hi, raw_mean = (spec.dist_params[k, i] for i in range(4))
+    ratio = 1.0 - (lo / hi) ** alpha
+    s_par = lo * (1.0 - u * ratio) ** (-1.0 / alpha) / raw_mean
+    unit = jnp.select(
+        [spec.dist_id[k] == 0, spec.dist_id[k] == 1, spec.dist_id[k] == 2],
+        [jnp.float32(1.0), s_exp, s_par],
+    )
+    return jnp.maximum(jnp.round(unit * mean), 1.0).astype(jnp.int32)
+
+
+def _sim_lane(spec: _SpecArrays, seed: jnp.ndarray, *, n_requests: int,
+              warmup: int, mpl: int, max_events: int):
+    """One (p_hit, seed) lane of the closed-loop simulation.
+
+    Shared verbatim by the pallas kernel body and the vmapped CPU twin.
+    Returns (x, completed, events, t_measured_us).
+    """
+    n = mpl
+    base = _mix(seed.astype(jnp.uint32) + _GOLDEN)
+
+    def u01(ctr):
+        z = _mix(base + jnp.asarray(ctr).astype(jnp.uint32) * _GOLDEN)
+        u = (z >> np.uint32(8)).astype(jnp.float32) * _INV24
+        return jnp.clip(u, 1e-7, 1.0 - 1e-7)
+
+    def pick_branch(u):
+        # searchsorted-left over the cumulative branch law
+        return jnp.sum(spec.branch_cum < u).astype(jnp.int32)
+
+    # --- init: all mpl jobs start a request at their (think) first station.
+    idx = jnp.arange(n, dtype=jnp.int32)
+    branch0 = jnp.sum(
+        spec.branch_cum[None, :] < u01(idx)[:, None], axis=1
+    ).astype(jnp.int32)
+    station0 = spec.visits[branch0, 0]
+    svc0 = jax.vmap(lambda u, k: _service_ns(u, spec, k))(u01(n + idx),
+                                                          station0)
+
+    carry = (
+        svc0,                                    # ready_ns (N,)
+        station0,                                # station (N,)
+        branch0,                                 # branch (N,)
+        jnp.zeros((n,), jnp.int32),              # pos (N,)
+        jnp.full((n,), BIG_SEQ),                 # enq_seq (N,)
+        jnp.zeros(spec.is_queue.shape, jnp.int32),  # busy_count (K,)
+        jnp.int32(0),                            # seq_ctr
+        jnp.int32(0),                            # completed
+        jnp.float32(0.0),                        # elapsed_us
+        jnp.int32(-1),                           # warm_completed
+        jnp.float32(0.0),                        # warm_elapsed_us
+        jnp.int32(2 * n),                        # rng counter
+        jnp.int32(0),                            # events
+    )
+
+    def cond(carry):
+        completed, events = carry[7], carry[12]
+        return (completed < n_requests) & (events < max_events)
+
+    def body(carry):
+        (ready_ns, station, branch, pos, enq_seq, busy_count, seq_ctr,
+         completed, elapsed_us, warm_completed, warm_elapsed_us, ctr,
+         events) = carry
+        u_svc1 = u01(ctr)
+        u_svc2 = u01(ctr + 1)
+        u_branch = u01(ctr + 2)
+        ctr = ctr + 3
+
+        j = jnp.argmin(ready_ns).astype(jnp.int32)
+        t = ready_ns[j]
+        finite = ready_ns < INF_NS
+        ready = jnp.where(finite, ready_ns - t, INF_NS)
+        elapsed_us = elapsed_us + t.astype(jnp.float32) * 1e-3
+        k_cur = station[j]
+
+        # ---- hand the server job j held (if any) to its FIFO successor.
+        def release(args):
+            ready, busy_count, enq_seq = args
+            waiting = (station == k_cur) & (ready == INF_NS)
+            waiting = waiting.at[j].set(False)
+            seqs = jnp.where(waiting, enq_seq, BIG_SEQ)
+            w = jnp.argmin(seqs).astype(jnp.int32)
+            has_waiter = seqs[w] < BIG_SEQ
+            svc = _service_ns(u_svc1, spec, k_cur)
+            ready = jnp.where(has_waiter, ready.at[w].set(svc), ready)
+            enq_seq = jnp.where(has_waiter, enq_seq.at[w].set(BIG_SEQ),
+                                enq_seq)
+            busy_count = busy_count.at[k_cur].add(
+                jnp.where(has_waiter, 0, -1).astype(jnp.int32)
+            )
+            return ready, busy_count, enq_seq
+
+        ready, busy_count, enq_seq = lax.cond(
+            spec.is_queue[k_cur], release, lambda a: a,
+            (ready, busy_count, enq_seq),
+        )
+
+        # ---- advance job j along its route (or complete + restart).
+        nxt_pos = pos[j] + 1
+        route_len = spec.visits.shape[1]
+        route_next = jnp.where(
+            nxt_pos < route_len,
+            spec.visits[branch[j], nxt_pos % route_len], -1,
+        )
+        done = route_next < 0
+        new_branch = pick_branch(u_branch)
+        branch_j = jnp.where(done, new_branch, branch[j])
+        pos_j = jnp.where(done, 0, nxt_pos)
+        k_next = jnp.where(done, spec.visits[new_branch, 0], route_next)
+        completed = completed + done.astype(jnp.int32)
+
+        # ---- place j at k_next.
+        svc_next = _service_ns(u_svc2, spec, k_next)
+        is_q = spec.is_queue[k_next]
+        has_slot = busy_count[k_next] < spec.servers[k_next]
+        starts_now = (~is_q) | has_slot
+        waits = ~starts_now
+        ready = ready.at[j].set(jnp.where(starts_now, svc_next, INF_NS))
+        enq_seq = enq_seq.at[j].set(jnp.where(waits, seq_ctr, BIG_SEQ))
+        seq_ctr = seq_ctr + waits.astype(jnp.int32)
+        busy_count = busy_count.at[k_next].add(
+            (is_q & starts_now).astype(jnp.int32)
+        )
+
+        # ---- warmup bookkeeping.
+        warm_now = (completed >= warmup) & (warm_completed < 0)
+        warm_completed = jnp.where(warm_now, completed, warm_completed)
+        warm_elapsed_us = jnp.where(warm_now, elapsed_us, warm_elapsed_us)
+
+        return (ready, station.at[j].set(k_next), branch.at[j].set(branch_j),
+                pos.at[j].set(pos_j), enq_seq, busy_count, seq_ctr,
+                completed, elapsed_us, warm_completed, warm_elapsed_us, ctr,
+                events + 1)
+
+    carry = lax.while_loop(cond, body, carry)
+    (_, _, _, _, _, _, _, completed, elapsed_us, warm_completed,
+     warm_elapsed_us, _, events) = carry
+    n_measured = completed - warm_completed
+    t_measured = jnp.maximum(elapsed_us - warm_elapsed_us, 1e-6)
+    x = n_measured.astype(jnp.float32) / t_measured
+    return x, completed, events, t_measured
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_requests", "warmup", "mpl",
+                                    "max_events"))
+def _twin_grid(spec_arrays, seeds, *, n_requests: int, warmup: int,
+               mpl: int, max_events: int):
+    def lane(sp, seed):
+        return _sim_lane(_SpecArrays(*sp), seed, n_requests=n_requests,
+                         warmup=warmup, mpl=mpl, max_events=max_events)
+
+    return jax.vmap(lane, in_axes=(0, 0))(spec_arrays, seeds)
+
+
+def _sim_kernel(isq_ref, svc_ref, did_ref, dpar_ref, bcum_ref, visits_ref,
+                srv_ref, seed_ref, x_ref, comp_ref, ev_ref, tmeas_ref, *,
+                n_requests: int, warmup: int, mpl: int, max_events: int):
+    spec = _SpecArrays(
+        is_queue=isq_ref[0] != 0,
+        svc_ns=svc_ref[0],
+        dist_id=did_ref[0],
+        dist_params=dpar_ref[0],
+        branch_cum=bcum_ref[0],
+        visits=visits_ref[0],
+        servers=srv_ref[0],
+    )
+    x, completed, events, t_meas = _sim_lane(
+        spec, seed_ref[0], n_requests=n_requests, warmup=warmup, mpl=mpl,
+        max_events=max_events,
+    )
+    x_ref[0] = x
+    comp_ref[0] = completed
+    ev_ref[0] = events
+    tmeas_ref[0] = t_meas
+
+
+def _pallas_grid(spec_arrays, seeds, *, n_requests: int, warmup: int,
+                 mpl: int, max_events: int, interpret: bool):
+    isq, svc, did, dpar, bcum, visits, srv = spec_arrays
+    n_lanes = seeds.shape[0]
+    n_k = isq.shape[1]
+    n_b, n_l = visits.shape[1], visits.shape[2]
+    kernel = functools.partial(_sim_kernel, n_requests=n_requests,
+                               warmup=warmup, mpl=mpl, max_events=max_events)
+
+    def row(*block):
+        return pl.BlockSpec(block, lambda i: (i,) + (0,) * (len(block) - 1))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_lanes,),
+        in_specs=[
+            row(1, n_k), row(1, n_k), row(1, n_k), row(1, n_k, 4),
+            row(1, n_b), row(1, n_b, n_l), row(1, n_k), row(1),
+        ],
+        out_specs=[row(1), row(1), row(1), row(1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(isq.astype(jnp.int32), svc, did, dpar, bcum, visits, srv, seeds)
+    return out
+
+
+def simulate_grid_pallas(net, p_hits, n_requests: int = 40_000,
+                         seeds: Sequence[int] = (0, 1, 2),
+                         warmup_frac: float = 0.25,
+                         interpret: Optional[bool] = None) -> SimResult:
+    """Closed-loop (p_hit x seed) grid on the counter-RNG event engine.
+
+    Same grid construction, warmup and summary statistics as
+    ``simulate_network`` (per-p_hit specs tiled across seeds, one lane per
+    cell, ONE dispatch for the whole grid), but every lane runs
+    :func:`_sim_lane` — the kernel-resident event loop.  Agreement with
+    the threefry scan engine is statistical; the pallas kernel and the
+    CPU twin are bit-identical by shared code.
+    """
+    p_hits = np.atleast_1d(np.asarray(p_hits, dtype=np.float64))
+    specs = [compile_network(net, float(p)) for p in p_hits]
+    spec = stack_specs(specs)
+    warmup = int(n_requests * warmup_frac)
+    max_events = int(n_requests * (spec.visits.shape[-1] + 2) * 3)
+    n_p, n_s = len(p_hits), len(seeds)
+
+    def tile(a):
+        return jnp.concatenate([a] * n_s, axis=0) if n_s > 1 else a
+
+    # drop disk_rank (index 7) and the static mpl: the closed-loop
+    # non-coalescing kernel never touches the MSHR machinery
+    spec_arrays = tuple(tile(a) for a in spec[:7])
+    seed_v = jnp.concatenate(
+        [jnp.full((n_p,), s, jnp.int32) * 1000
+         + jnp.arange(n_p, dtype=jnp.int32) for s in seeds]
+    )
+
+    if interpret is None and jax.default_backend() != "tpu":
+        out = _twin_grid(spec_arrays, seed_v, n_requests=n_requests,
+                         warmup=warmup, mpl=net.mpl, max_events=max_events)
+    else:
+        out = _pallas_grid(
+            spec_arrays, seed_v, n_requests=n_requests, warmup=warmup,
+            mpl=net.mpl, max_events=max_events,
+            interpret=bool(interpret) if interpret is not None else False,
+        )
+    xs = np.asarray(out[0]).reshape(n_s, n_p)
+    mean = xs.mean(axis=0)
+    ci = (1.96 * xs.std(axis=0, ddof=1) / math.sqrt(n_s) if n_s > 1
+          else np.zeros_like(mean))
+    return SimResult(p_hit=p_hits, throughput=mean, ci95=ci,
+                     n_requests=n_requests)

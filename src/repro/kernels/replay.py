@@ -1,0 +1,284 @@
+"""Pallas replay engine: the whole (capacity x seed) grid in one dispatch.
+
+This is the promotion of :func:`repro.kernels.cache_update.lru_batch_update`
+from demo to engine.  That kernel showed the layout move — recency as a
+timestamp array, victim search as a masked argmin — on a single batched
+update; here the same flat layout (:mod:`repro.cache.flat`) carries a
+*full trace replay* for every policy in the suite:
+
+* the pallas grid axis enumerates (capacity x seed) lanes,
+* each lane's cache state (key->slot table, timestamp/presence/bit
+  vectors, scalar registers) lives in kernel scratch for the whole
+  replay — nothing round-trips through HBM between requests,
+* a ``fori_loop`` walks the request stream, calling the *same* pure
+  per-policy step functions the CPU twin scans over, and
+* the delayed-hit classifier (prong C's ``classify_inflight``) is fused
+  into the same loop via a per-key fetch-expiry table in scratch, so the
+  Mattson-style sweep + classification pipeline is ONE dispatch instead
+  of replay -> host -> classify -> host.
+
+The scan-policy evictions (CLOCK / SIEVE / S3-FIFO) run their hand scans
+*inside* the kernel body as bounded ``lax.while_loop``s over the scratch
+state — bounded by ``max_scan`` (CLOCK/S3) or the capacity (SIEVE's bit
+clearing), emitting the exact (hit, evicted, op-vector) outputs of the
+dlist engine.
+
+Three executables share the step functions, so they agree by construction
+and are pinned bit-identical in ``tests/test_pallas_replay.py``:
+
+``interpret=None``  auto: the compiled vmapped ``lax.scan`` twin on CPU
+                    (single jitted dispatch), the real kernel on TPU
+``interpret=True``  the pallas interpreter — the CI fallback that runs the
+                    actual kernel body on CPU (slow: grid cells execute
+                    sequentially; tests only)
+``interpret=False`` force ``pallas_call`` compilation (TPU)
+
+Op vectors are returned *packed* (one int32 per request, see
+``flat.pack_ops``) to keep the kernel's output streams narrow; unpack at
+the host boundary with ``flat.unpack_ops``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.cache import flat
+from repro.cache.replay import (DELAYED_HIT, TRUE_HIT, TRUE_MISS, _FAR_PAST,
+                                _resolve_key_space, _window_stream)
+from repro.cache.policies import _padded
+from repro.kernels import CompilerParams
+
+
+class PallasReplayResult(NamedTuple):
+    """Device-resident replay grid output, shaped (C, S, T).
+
+    ``ops`` is packed (``flat.unpack_ops`` appends the length-4 op axis);
+    ``cls`` is the fused delayed-hit classification (int8, the
+    ``classify_inflight`` classes) or None when no window was given.
+    Everything stays on device — feed ``hits``/``cls`` straight into the
+    downstream jitted reductions without a host bounce.
+    """
+
+    hits: jax.Array          # (C, S, T) bool
+    evicted: jax.Array       # (C, S, T) int32, -1 if none
+    ops: jax.Array           # (C, S, T) int32, packed op vectors
+    cls: Optional[jax.Array]  # (C, S, T) int8, or None
+
+
+def _lane_step(policy: str, carry, x, pvec, q):
+    """One request on one lane: policy step + fused classification."""
+    st, expiry = carry
+    t, k, u, w = x
+    st, hit, evicted, ops4 = flat.FLAT_STEPS[policy](st, k, u, pvec, q)
+    outstanding = t <= expiry[k]
+    cls = jnp.where(outstanding, DELAYED_HIT,
+                    jnp.where(hit, TRUE_HIT, TRUE_MISS)).astype(jnp.int8)
+    starts_fetch = (~outstanding) & (~hit)
+    # scatter a selected scalar (O(1)) rather than selecting between whole
+    # arrays — a full-width where would copy the (K,) table every request
+    expiry = expiry.at[k].set(jnp.where(starts_fetch, t + w, expiry[k]))
+    return (st, expiry), (hit, evicted, flat.pack_ops(ops4), cls)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "key_space", "pad"))
+def _twin_grid(policy: str, pvecs: jax.Array, qs: jax.Array,
+               keys: jax.Array, us: jax.Array, windows: jax.Array,
+               key_space: int, pad: int):
+    """The CPU twin: vmapped lax.scan over lanes, same step as the kernel."""
+    state0 = flat.flat_state_init(key_space, pad)
+    expiry0 = jnp.full((key_space,), _FAR_PAST, jnp.int32)
+    ts_idx = jnp.arange(keys.shape[-1], dtype=jnp.int32)
+
+    def lane(pvec, q, k, u, w):
+        def body(carry, x):
+            return _lane_step(policy, carry, x, pvec, q)
+
+        _, out = lax.scan(body, (state0, expiry0), (ts_idx, k, u, w))
+        return out
+
+    return jax.vmap(lane)(pvecs, qs, keys, us, windows)
+
+
+def _replay_kernel(pvec_ref, q_ref, keys_ref, us_ref, win_ref,
+                   hits_ref, ev_ref, ops_ref, cls_ref,
+                   k2s_s, s2k_s, ts_s, bit_s, aux_s, ghost_s, exp_s, regs_s,
+                   *, policy: str, key_space: int, pad: int):
+    """One grid cell = one (capacity, seed) lane's full replay.
+
+    All cache state lives in scratch; grid cells may share the physical
+    scratch allocation, so every field is re-initialised unconditionally
+    at cell entry (which is also what makes the lane axis safely
+    ``parallel``).
+    """
+    k2s_s[...] = jnp.full((key_space,), flat.NIL, jnp.int32)
+    s2k_s[...] = jnp.full((pad,), flat.NIL, jnp.int32)
+    ts_s[...] = jnp.zeros((pad,), jnp.int32)
+    bit_s[...] = jnp.zeros((pad,), jnp.int32)
+    aux_s[...] = jnp.zeros((pad,), jnp.int32)
+    ghost_s[...] = jnp.full((pad,), flat.NIL, jnp.int32)
+    exp_s[...] = jnp.full((key_space,), _FAR_PAST, jnp.int32)
+    regs_s[...] = jnp.zeros((flat.N_REGS,), jnp.int32).at[flat.R_HAND].set(
+        flat.NIL
+    )
+
+    pvec = pvec_ref[0]
+    q = q_ref[0]
+    n_t = keys_ref.shape[1]
+
+    def body(t, _):
+        st = flat.FlatState(k2s_s[...], s2k_s[...], ts_s[...], bit_s[...],
+                            aux_s[...], ghost_s[...], regs_s[...])
+        x = (t, keys_ref[0, t], us_ref[0, t], win_ref[0, t])
+        (st, expiry), (hit, evicted, packed, cls) = _lane_step(
+            policy, (st, exp_s[...]), x, pvec, q
+        )
+        k2s_s[...] = st.key2slot
+        s2k_s[...] = st.slot2key
+        ts_s[...] = st.ts
+        bit_s[...] = st.bit
+        aux_s[...] = st.aux
+        ghost_s[...] = st.ghost
+        regs_s[...] = st.regs
+        exp_s[...] = expiry
+        hits_ref[0, t] = hit.astype(jnp.int32)
+        ev_ref[0, t] = evicted
+        ops_ref[0, t] = packed
+        cls_ref[0, t] = cls.astype(jnp.int32)
+        return 0
+
+    lax.fori_loop(0, n_t, body, 0)
+
+
+def _pallas_grid(policy: str, pvecs, qs, keys, us, windows,
+                 key_space: int, pad: int, interpret: bool):
+    n_lanes, n_t = keys.shape
+    kernel = functools.partial(_replay_kernel, policy=policy,
+                               key_space=key_space, pad=pad)
+    lane_row = pl.BlockSpec((1, n_t), lambda i: (i, 0))
+    hits, evicted, ops, cls = pl.pallas_call(
+        kernel,
+        grid=(n_lanes,),
+        in_specs=[
+            pl.BlockSpec((1, flat.N_PARAMS), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            lane_row, lane_row, lane_row,
+        ],
+        out_specs=[lane_row, lane_row, lane_row, lane_row],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_lanes, n_t), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, n_t), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, n_t), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, n_t), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((key_space,), jnp.int32),   # key2slot
+            pltpu.VMEM((pad,), jnp.int32),         # slot2key
+            pltpu.VMEM((pad,), jnp.int32),         # ts
+            pltpu.VMEM((pad,), jnp.int32),         # bit
+            pltpu.VMEM((pad,), jnp.int32),         # aux
+            pltpu.VMEM((pad,), jnp.int32),         # ghost
+            pltpu.VMEM((key_space,), jnp.int32),   # fetch expiry
+            pltpu.SMEM((flat.N_REGS,), jnp.int32),  # scalar registers
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(pvecs, qs, keys, us, windows)
+    return hits != 0, evicted, ops, cls.astype(jnp.int8)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _lane_inputs(policy: str, keys, us, capacities, key_space, pad_to,
+                 params) -> Tuple[np.ndarray, ...]:
+    """Host-side lane setup: validate, normalise to (S, T), build per-lane
+    parameter vectors, and tile everything to the (C*S,) lane axis
+    (lane = c * S + s, so outputs reshape to (C, S, T))."""
+    keys = np.asarray(keys)
+    us = np.asarray(us)
+    if keys.shape != us.shape:
+        raise ValueError(f"keys {keys.shape} vs us {us.shape} shape mismatch")
+    if keys.ndim == 1:
+        keys = keys[None, :]
+        us = us[None, :]
+    elif keys.ndim != 2:
+        raise ValueError(f"keys must be (T,) or (S, T), got {keys.shape}")
+    key_space = _resolve_key_space(keys, key_space)
+    caps = [int(c) for c in np.atleast_1d(np.asarray(capacities))]
+    if not caps:
+        raise ValueError("need at least one capacity")
+    pad = _padded(max(caps), pad_to)
+    per_cap = [flat.flat_lane_params(policy, c, **params) for c in caps]
+    pvecs = np.stack([v for v, _ in per_cap])
+    qs = np.asarray([q for _, q in per_cap], np.float32)
+    n_s = keys.shape[0]
+    keys_l = np.tile(keys, (len(caps), 1)).astype(np.int32)
+    us_l = np.tile(us, (len(caps), 1)).astype(np.float32)
+    pvecs_l = np.repeat(pvecs, n_s, axis=0)
+    qs_l = np.repeat(qs, n_s)
+    return keys_l, us_l, pvecs_l, qs_l, key_space, pad, len(caps), n_s
+
+
+def replay_grid_pallas(policy: str, keys, us, capacities, *,
+                       key_space: Optional[int] = None,
+                       pad_to: Optional[int] = None,
+                       window=None, fail_prob: float = 0.0,
+                       fail_seed: int = 0,
+                       interpret: Optional[bool] = None,
+                       **params: Any) -> PallasReplayResult:
+    """Replay a (capacity x seed) grid with the flat-state engine, fusing
+    the delayed-hit classification into the same dispatch.
+
+    Drop-in grid semantics of :func:`repro.cache.replay.replay_grid` (same
+    hits / evicted keys / op counts, bit-identical, pinned by tests) plus
+    the ``classify_inflight`` post-pass computed in the same pass over the
+    stream when ``window`` is given (scalar or per-request (T,) array;
+    ``fail_prob`` stretches windows by geometric re-issue attempts exactly
+    like the classifier).
+
+    ``interpret=None`` picks the fastest correct executable for the
+    backend: the real pallas kernel on TPU, the jitted scan twin on CPU
+    (same step functions, one dispatch).  ``True`` forces the pallas
+    interpreter (the kernel body itself, run on CPU — the CI fallback).
+    """
+    (keys_l, us_l, pvecs_l, qs_l, key_space, pad,
+     n_caps, n_s) = _lane_inputs(policy, keys, us, capacities, key_space,
+                                 pad_to, params)
+    win_l = np.broadcast_to(
+        _window_stream(window, keys_l.shape[1], fail_prob, fail_seed),
+        keys_l.shape,
+    )
+    args = (jnp.asarray(pvecs_l), jnp.asarray(qs_l), jnp.asarray(keys_l),
+            jnp.asarray(us_l), jnp.asarray(win_l))
+    if interpret is None and not _on_tpu():
+        hits, evicted, ops, cls = _twin_grid(
+            policy, *args, key_space=key_space, pad=pad
+        )
+    else:
+        hits, evicted, ops, cls = _pallas_grid(
+            policy, *args, key_space=key_space, pad=pad,
+            interpret=bool(interpret) if interpret is not None else False,
+        )
+    shape = (n_caps, n_s, keys_l.shape[1])
+    return PallasReplayResult(
+        hits=hits.reshape(shape),
+        evicted=evicted.reshape(shape),
+        ops=ops.reshape(shape),
+        cls=cls.reshape(shape) if window is not None else None,
+    )
+
+
+def unpack_grid_ops(res: PallasReplayResult) -> np.ndarray:
+    """Host-side (C, S, T, 4) int64 op counts, matching ReplayResult.ops."""
+    return np.asarray(flat.unpack_ops(res.ops), np.int64)

@@ -78,7 +78,8 @@ REGISTRY: Tuple[TwinPair, ...] = (
         name="event-simulator",
         fast="repro.core.simulator:simulate_network",
         oracle="repro.core.py_sim:simulate_py",
-        fast_only=("p_hits", "seeds"),       # vmapped (p_hit x seed) grid
+        # vmapped (p_hit x seed) grid; backend routes to the pallas kernel
+        fast_only=("p_hits", "seeds", "backend"),
         oracle_only=("p_hit", "seed", "full"),
         default_exempt={
             "n_requests": "heapq oracle runs shorter traces (statistical "
@@ -101,6 +102,25 @@ REGISTRY: Tuple[TwinPair, ...] = (
             "n_requests": "heapq oracle runs shorter traces (statistical "
                           "agreement, not bit-identity)",
         },
+    ),
+    TwinPair(
+        name="pallas-replay-grid",
+        fast="repro.kernels.replay:replay_grid_pallas",
+        oracle="repro.cache.replay:replay_grid",
+        # the kernel additionally fuses the delayed-hit classifier
+        # (window/fail_*) and exposes the executable switch (interpret);
+        # the scan twin runs those as separate post-passes.
+        fast_only=("window", "fail_prob", "fail_seed", "interpret"),
+    ),
+    TwinPair(
+        name="pallas-event-sim",
+        fast="repro.kernels.event_sim:simulate_grid_pallas",
+        oracle="repro.core.simulator:simulate_network",
+        fast_only=("interpret",),
+        # the scan simulator keeps the coalescing / open-loop / burst
+        # extensions (and the backend switch that routes here).
+        oracle_only=("coalesce_flows", "coalesce_theta", "arrival_rate",
+                     "max_in_system", "burst", "backend"),
     ),
     TwinPair(
         name="mattson-sweep",
