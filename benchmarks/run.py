@@ -35,6 +35,7 @@ BENCHES = [
     "fig_delayed_hits",  # beyond-paper: miss coalescing / delayed hits
     "fig_latency",  # beyond-paper: open-loop response time / SLO p*
     "fig_cluster",  # beyond-paper: sharded cluster, cluster-level p*
+    "fig_hierarchy",  # beyond-paper: tiered L1 -> sharded L2 -> origin
     "table2_classify",  # Tables 1-2
     "bypass_mitigation",  # Sec. 5.2
     "serving_integration",  # beyond-paper: prefix-cache controller at pod scale
@@ -58,8 +59,8 @@ def main() -> None:
     bench_seconds = {}
     # benches whose return value is recorded in the --json payload
     captured = {"replay_bench": "replay", "fig_latency": "latency",
-                "fig_cluster": "cluster", "kernel_bench": "kernels",
-                "roofline": "roofline"}
+                "fig_cluster": "cluster", "fig_hierarchy": "hierarchy",
+                "kernel_bench": "kernels", "roofline": "roofline"}
     results = {}
     for name in BENCHES:
         if only and name not in only:

@@ -59,3 +59,22 @@ for policy in ("lru", "s3fifo"):
               f"(hit-path delink becomes the bottleneck)")
     else:
         print("  -> throughput is monotone in hit ratio (no hit-path ops)")
+
+# Tiered differential: the cross-tier MSHR event kernel and its heapq
+# oracle must agree on an L1 -> sharded L2 -> origin hierarchy (throughput
+# and the per-tier delayed-hit split -- statistical twins, not bit twins).
+from repro.hierarchy import hierarchy_network  # noqa: E402
+from repro.hierarchy.sim import (  # noqa: E402
+    simulate_hierarchy, simulate_hierarchy_py)
+
+hier = hierarchy_network("lru", "lru", n_clients=2, n_shards=2,
+                         mpl=16, disk_us=50.0)
+tj = simulate_hierarchy(hier, [0.5], n_requests=12_000, seeds=(0, 1),
+                        coalesce_flows=2)
+tp = simulate_hierarchy_py(hier, 0.5, n_requests=12_000, seed=0,
+                           coalesce_flows=2)
+x_jax, x_py = float(tj.throughput[0]), float(tp.throughput[0])
+assert abs(x_jax - x_py) / max(x_jax, x_py) < 0.2, (x_jax, x_py)
+assert abs(float(tj.delayed_l1_frac[0]) - float(tp.delayed_l1_frac[0])) < 0.1
+print(f"\ntiered differential OK: jax X={x_jax:.3f} vs heapq oracle "
+      f"X={x_py:.3f} (cross-tier MSHR twins agree)")

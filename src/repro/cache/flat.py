@@ -143,6 +143,10 @@ def flat_lane_params(policy: str, capacity: int,
             f"policy {policy!r} got unexpected params {sorted(unknown)}"
         )
     cap = int(capacity)
+    if policy == "s3fifo" and cap < 2:
+        # mirror s3fifo_init: m_cap == 0 has no main list to evict from
+        raise ValueError(
+            "s3fifo needs capacity >= 2 (one small + one main slot)")
     s_cap = max(1, int(cap * float(params.get("small_frac", 0.1))))
     vec = np.zeros((N_PARAMS,), np.int32)
     vec[P_CAP] = cap

@@ -514,6 +514,10 @@ class S3FIFOState(NamedTuple):
 
 def s3fifo_init(capacity: int, key_space: int, small_frac: float = 0.1,
                 max_scan: int = 3, pad_to: int | None = None) -> S3FIFOState:
+    if capacity < 2:
+        # m_cap would be 0: evicting from an empty M list aliases the NIL
+        # sentinel onto a live slot (pad-dependent results) — reject loudly.
+        raise ValueError("s3fifo needs capacity >= 2 (one small + one main slot)")
     pad = _padded(capacity, pad_to)
     s_cap = max(1, int(capacity * small_frac))
     m_cap = capacity - s_cap

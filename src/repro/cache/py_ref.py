@@ -215,6 +215,10 @@ class S3FIFO:
     lru_like = False
 
     def __init__(self, capacity: int, small_frac: float = 0.1, max_scan: int = 3):
+        if capacity < 2:
+            # mirror the jax init: m_cap == 0 has no main list to evict from
+            raise ValueError(
+                "s3fifo needs capacity >= 2 (one small + one main slot)")
         self.capacity = capacity
         self.s_cap = max(1, int(capacity * small_frac))
         self.m_cap = capacity - self.s_cap

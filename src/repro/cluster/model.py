@@ -34,11 +34,13 @@ a shared per-shard capacity grid, built either analytically from the key
 popularity (:func:`ideal_shard_profile`) or measured from a partitioned
 trace via per-shard Mattson sweeps (:func:`measured_shard_profile`).
 
-Caveat (documented, deliberate): the *analytic* composition does not
-model miss coalescing across shards — ``coalesced_network``'s sigma
-fixed point is a single-node construct.  Shard-local MSHR coalescing is
-exact in the simulators (each ``sK:disk`` owns its own flow group); see
-``repro.cluster.sim``.
+Miss coalescing: the simulators keep shard-local MSHR tables (each
+``sK:disk`` owns its own flow group; see ``repro.cluster.sim``), and the
+analytic composition matches them through
+:meth:`ClusterModel.coalesced` — ``coalesced_network`` solves one
+``sigma_k`` fixed point per shard disk against that shard's own miss
+rate, so hot shards coalesce more (the former single-flat-sigma caveat
+is closed).
 """
 
 from __future__ import annotations
@@ -320,6 +322,20 @@ class ClusterModel:
 
     def mva_throughput(self, p_hit, **kw):
         return self.network.mva_throughput(p_hit, **kw)
+
+    def coalesced(self, flows: int = 64, window_us=None,
+                  flow_theta: float = 0.0, window_mode: str = "service",
+                  ) -> ClosedNetwork:
+        """Analytic shard-local miss coalescing: the composed network
+        with one ``sigma_k`` fixed point per shard disk (matching the
+        simulator's per-shard MSHR flow groups — ``flows`` hot flows per
+        shard).  See :func:`repro.core.queueing.coalesced_network`."""
+        from repro.core.queueing import coalesced_network
+
+        return coalesced_network(self.network, flows=flows,
+                                 window_us=window_us,
+                                 window_mode=window_mode,
+                                 flow_theta=flow_theta)
 
     # ---- open loop -------------------------------------------------------
     def lambda_max(self, p_hit, tail_mode: str = "zero"):

@@ -56,6 +56,7 @@ def simulate_py(
     arrival_rate: float | None = None,
     max_in_system: int = 128,
     burst=None,
+    tiers=None,
 ):
     """Simulate and return throughput in requests/µs.
 
@@ -82,6 +83,15 @@ def simulate_py(
     sojourn statistics (``sojourn_mean``/``sojourn_p50``/``sojourn_p99``,
     ``class_frac``, ``class_sojourn``, ``drop_frac`` — the oracle twin of
     :class:`repro.core.simulator.OpenSimResult`).
+
+    ``tiers`` (an :class:`repro.core.simspec.MshrSpec`) switches MSHR
+    coalescing to the **cross-tier** tables of a composed hierarchy
+    network: acquire/park/release points come from the annotation arrays
+    instead of the ``disk_rank`` convention, and fills cascade across
+    tiers (a woken delayed hit force-frees its own held entries, waking
+    its followers).  Needs ``coalesce_flows > 0``; with 0 the annotations
+    are ignored (the no-coalescing reference).  The oracle twin of
+    ``simulate_network(tiers=...)``.
     """
     rng = random.Random(seed)
     spec = compile_network(net, p_hit)
@@ -110,6 +120,15 @@ def simulate_py(
     def new_branch() -> int:
         return int(np.searchsorted(cum, rng.random()))
 
+    if tiers is not None and coalesce_flows:
+        if arrival_rate is not None or burst is not None:
+            raise ValueError("tiered MSHR coalescing runs the closed loop "
+                             "only (no arrival_rate/burst)")
+        tiers.validate(visits)
+        return _simulate_py_tiered(
+            rng, is_q, visits, servers, sample, new_branch, sample_flow,
+            tiers, coalesce_flows, net.mpl, n_requests, warmup_frac, full,
+        )
     if arrival_rate is not None:
         return _simulate_py_open(
             rng, is_q, svc, dist, cum, visits, servers, disk_rank, sample,
@@ -215,6 +234,143 @@ def simulate_py(
         "x": x,
         "delayed": delayed - warm_d,
         "delayed_frac": (delayed - warm_d) / n_meas,
+        "branch_done": np.array(branch_done) - np.array(warm_bd),
+        "branch_delayed": np.array(branch_delayed) - np.array(warm_bdel),
+        "t_measured": t - warm_t,
+    }
+
+
+def _simulate_py_tiered(
+    rng, is_q, visits, servers, sample, new_branch, sample_flow,
+    tiers, coalesce_flows, mpl, n_requests, warmup_frac, full,
+):
+    """Closed-loop heapq twin of simulator._simulate_tiered: cross-tier
+    MSHR acquire/park/release driven by the MshrSpec annotation arrays,
+    with cascading fills (a woken delayed hit frees its own held entries,
+    recursively waking their followers at the same instant)."""
+    acq_group = np.asarray(tiers.acq_group)
+    acq_slot = np.asarray(tiers.acq_slot)
+    rel_slot = np.asarray(tiers.rel_slot)
+    max_held = int(tiers.max_held)
+    F = coalesce_flows
+    K = len(is_q)
+    B = acq_group.shape[0]
+    N = mpl
+
+    heap: list = []
+    queues = {k: [] for k in range(K) if is_q[k]}
+    busy = {k: 0 for k in range(K) if is_q[k]}
+    leader: dict = {}  # slot (group*F + f) -> leader job
+    parked: dict = {}  # slot -> [(job, level)]
+    job_flow = [-1] * N  # per-request flow, sampled at the first acquire
+    job_held = [[-1] * max_held for _ in range(N)]
+    job_branch = [0] * N
+    job_pos = [0] * N
+    for j in range(N):
+        b = new_branch()
+        job_branch[j] = b
+        k = int(visits[b, 0])
+        heapq.heappush(heap, (sample(k), j, k))
+
+    t = 0.0
+    done = 0
+    delayed = 0
+    delayed_lvl = [0] * max_held
+    branch_done = [0] * B
+    branch_delayed = [0] * B
+    warm_target = int(n_requests * warmup_frac)
+    warm_t = warm_c = None
+    warm_d = 0
+    warm_dlvl = [0] * max_held
+    warm_bd = [0] * B
+    warm_bdel = [0] * B
+
+    def complete(j: int, now: float, was_delayed: bool = False) -> None:
+        nonlocal done, warm_c, warm_t, warm_d
+        branch_done[job_branch[j]] += 1
+        if was_delayed:
+            branch_delayed[job_branch[j]] += 1
+        done += 1
+        if warm_c is None and done >= warm_target:
+            warm_c, warm_t, warm_d = done, now, delayed
+            warm_dlvl[:] = delayed_lvl
+            warm_bd[:] = branch_done
+            warm_bdel[:] = branch_delayed
+        job_flow[j] = -1
+        b = new_branch()
+        job_branch[j] = b
+        job_pos[j] = 0
+        k0 = int(visits[b, 0])
+        heapq.heappush(heap, (now + sample(k0), j, k0))
+
+    def free_slot(slot: int, now: float) -> None:
+        """The fill for ``slot`` landed: retire the leader entry and
+        complete everyone parked on it as delayed hits; their own held
+        entries are fills that just landed too — free them recursively
+        (strictly shallower levels, so the recursion is bounded)."""
+        nonlocal delayed
+        leader.pop(slot, None)
+        for w, lvl in parked.pop(slot, []):
+            delayed += 1
+            delayed_lvl[lvl] += 1
+            held_w = job_held[w]
+            job_held[w] = [-1] * max_held
+            complete(w, now, was_delayed=True)
+            for sl in held_w:
+                if sl >= 0:
+                    free_slot(sl, now)
+
+    while done < n_requests:
+        t, j, k = heapq.heappop(heap)
+
+        # fill: completing this visit may release one of j's held entries.
+        b = job_branch[j]
+        rel = int(rel_slot[b, job_pos[j]])
+        if rel >= 0 and job_held[j][rel] >= 0:
+            slot = job_held[j][rel]
+            job_held[j][rel] = -1
+            free_slot(slot, t)
+
+        if is_q[k]:
+            if queues[k]:
+                w = queues[k].pop(0)
+                heapq.heappush(heap, (t + sample(k), w, k))
+            else:
+                busy[k] -= 1
+        pos = job_pos[j] + 1
+        if pos >= visits.shape[1] or visits[b, pos] < 0:
+            complete(j, t)
+            continue
+        job_pos[j] = pos
+        k2 = int(visits[b, pos])
+        g = int(acq_group[b, pos])
+        if g >= 0:
+            if job_flow[j] < 0:
+                job_flow[j] = sample_flow()
+            slot = g * F + job_flow[j]
+            if slot in leader:  # fetch in flight: park across the tier
+                parked.setdefault(slot, []).append(
+                    (j, int(acq_slot[b, pos])))
+                continue
+            leader[slot] = j
+            job_held[j][int(acq_slot[b, pos])] = slot
+        if is_q[k2]:
+            if busy[k2] >= servers[k2]:
+                queues[k2].append(j)
+                continue
+            busy[k2] += 1
+        heapq.heappush(heap, (t + sample(k2), j, k2))
+
+    n_meas = done - warm_c
+    x = n_meas / (t - warm_t)
+    if not full:
+        return x
+    return {
+        "x": x,
+        "delayed": delayed - warm_d,
+        "delayed_frac": (delayed - warm_d) / n_meas,
+        "delayed_tier_frac": (np.array(delayed_lvl)
+                              - np.array(warm_dlvl)) / n_meas,
         "branch_done": np.array(branch_done) - np.array(warm_bd),
         "branch_delayed": np.array(branch_delayed) - np.array(warm_bdel),
         "t_measured": t - warm_t,

@@ -415,8 +415,17 @@ def exponential_analogue(net: ClosedNetwork) -> ClosedNetwork:
 INFLIGHT = "inflight"
 
 
+def _disk_stations(net: ClosedNetwork, disk_name: str) -> list[str]:
+    """All backing-store stations matching ``disk_name`` by suffix: the
+    bare single-node ``"disk"`` and the cluster composition's per-shard
+    replicas (``"s0:disk"``, ...), in station order."""
+    return [s.name for s in net.stations
+            if s.name == disk_name or s.name.split(":")[-1] == disk_name]
+
+
 def _disk_branches(net: ClosedNetwork, disk_name: str) -> list[Branch]:
-    return [b for b in net.branches if disk_name in b.visits]
+    names = set(_disk_stations(net, disk_name))
+    return [b for b in net.branches if names & set(b.visits)]
 
 
 def sigma_of(net: ClosedNetwork, p_hit: float) -> float:
@@ -424,9 +433,10 @@ def sigma_of(net: ClosedNetwork, p_hit: float) -> float:
 
     Reads the probability mass of the ``*_delayed`` branches that
     :func:`coalesced_network` creates, relative to all fill-requiring
-    traffic (delayed + leader/disk branches).  Returns 0 for a network
-    without coalescing.  Lives here so the ``_delayed`` naming convention
-    stays private to this module.
+    traffic (delayed + leader/disk branches).  On a multi-disk (sharded)
+    network this is the miss-share-weighted mean of the per-shard
+    sigma_k.  Returns 0 for a network without coalescing.  Lives here so
+    the ``_delayed`` naming convention stays private to this module.
     """
     delayed = sum(
         b.probability(p_hit) for b in net.branches
@@ -523,38 +533,67 @@ def coalesced_network(
     identity on every demand and think time: sigma solves to 0, the
     delayed branches carry probability 0, and bounds/MVA/simulation all
     reduce to the base network's values.
+
+    **Sharded networks.**  ``disk_name`` matches by suffix, so a cluster
+    composition with per-shard disks (``"s0:disk"``, ..., the PR 5
+    naming) gets one coalescing factor **per shard**: each disk gets its
+    own ``inflight`` station (``"s0:inflight"``) and its own fixed point
+    ``sigma_k = sum_f w_f mu_{k,f} L_k / (1 + mu_{k,f} L_k)`` against
+    that shard's *own* miss rate ``mu_{k,f} = X m_k w_f / 1`` (with
+    ``m_k`` the probability mass of branches visiting shard ``k``'s
+    disk), solved jointly with the shared throughput bound ``X`` — the
+    simulator's shard-local MSHR tables, analytically.  Hot shards
+    coalesce more; a single flat sigma would average that away.  With
+    one disk this reduces exactly to the single fixed point above.
     """
-    if not _disk_branches(net, disk_name):
+    disks = _disk_stations(net, disk_name)
+    if not disks or not _disk_branches(net, disk_name):
         raise ValueError(f"{net.name} has no branch visiting {disk_name!r}")
     if window_mode not in ("service", "mva"):
         raise ValueError(f"unknown window_mode {window_mode!r}")
     weights = zipf_flow_weights(flows, flow_theta)
-    disk = net.station(disk_name)
-    window_fn = _as_fn(window_us) if window_us is not None else disk.mean_service
+    if window_us is not None:
+        base_window = {d: _as_fn(window_us) for d in disks}
+    else:
+        base_window = {d: net.station(d).mean_service for d in disks}
     use_mva = window_mode == "mva" and window_us is None
 
-    def build(sigma_fn: Callable[[float], float],
-              window_eff: Callable[[float], float]) -> ClosedNetwork:
-        stations = net.stations + (
-            Station(INFLIGHT, THINK, lambda p: 0.5 * window_eff(p), dist="exp"),
+    def inflight_name(d: str) -> str:
+        return (f"{d[:-len(disk_name)]}{INFLIGHT}"
+                if d.endswith(":" + disk_name) else INFLIGHT)
+
+    def branch_disk(b: Branch) -> str | None:
+        for v in b.visits:
+            if v in disks:
+                return v
+        return None
+
+    # sigma_fns / window_fns: disk station name -> callable of p.
+    def build(sigma_fns: dict, window_fns: dict) -> ClosedNetwork:
+        stations = net.stations + tuple(
+            Station(inflight_name(d), THINK,
+                    lambda p, d=d: 0.5 * window_fns[d](p), dist="exp")
+            for d in disks
         )
         branches = []
         for b in net.branches:
-            if disk_name not in b.visits:
+            d = branch_disk(b)
+            if d is None:
                 branches.append(b)
                 continue
             pf = _as_fn(b.prob)
-            pre = b.visits[: b.visits.index(disk_name)]
+            sfn = sigma_fns[d]
+            pre = b.visits[: b.visits.index(d)]
             branches.append(
                 dataclasses.replace(
-                    b, prob=lambda p, pf=pf: pf(p) * (1.0 - sigma_fn(p))
+                    b, prob=lambda p, pf=pf, sfn=sfn: pf(p) * (1.0 - sfn(p))
                 )
             )
             branches.append(
                 Branch(
                     b.name + "_delayed",
-                    lambda p, pf=pf: pf(p) * sigma_fn(p),
-                    pre + (INFLIGHT,),
+                    lambda p, pf=pf, sfn=sfn: pf(p) * sfn(p),
+                    pre + (inflight_name(d),),
                 )
             )
         return dataclasses.replace(
@@ -564,71 +603,89 @@ def coalesced_network(
             branches=tuple(branches),
         )
 
-    def mva_window(p: float, net_s: ClosedNetwork, base_L: float) -> float:
+    def mva_window(p: float, net_s: ClosedNetwork, d: str,
+                   base_L: float) -> float:
         """Per-visit disk residence (service + estimated wait) of the
         coalesced network at its current sigma — the queueing-aware
         in-flight window.  A think-station disk has no queueing term, so
         this degenerates to the base window."""
-        v = net_s.visit_counts(p).get(disk_name, 0.0)
+        v = net_s.visit_counts(p).get(d, 0.0)
         if v <= 0.0:
             return base_L
         X, Q, _ = net_s.mva(p, mode="auto")
-        if disk_name not in Q or X <= 0.0:
+        if d not in Q or X <= 0.0:
             return base_L
         # Little's law per visit: residence = Q_disk / (X * V_disk).
-        return max(base_L, Q[disk_name] / (X * v))
+        return max(base_L, Q[d] / (X * v))
 
     if sigma is not None:
         sfn = _as_fn(sigma)
+        sigma_fns = {d: sfn for d in disks}
         if not use_mva:
-            return build(sfn, window_fn)
+            return build(sigma_fns, base_window)
         memo_w: dict = {}
 
-        def window_eff(p: float) -> float:
-            key = round(float(p), 12)
+        def window_eff(p: float, d: str) -> float:
+            key = (round(float(p), 12), d)
             if key not in memo_w:
                 memo_w[key] = mva_window(
-                    float(p), build(sfn, window_fn), float(window_fn(p))
+                    float(p), build(sigma_fns, base_window), d,
+                    float(base_window[d](p))
                 )
             return memo_w[key]
 
-        return build(sfn, window_eff)
+        return build(sigma_fns,
+                     {d: (lambda p, d=d: window_eff(p, d)) for d in disks})
 
-    def miss_share(p: float) -> float:
-        return sum(b.probability(p) for b in _disk_branches(net, disk_name))
+    def miss_share(p: float, d: str) -> float:
+        return sum(b.probability(p) for b in net.branches
+                   if branch_disk(b) == d)
 
-    memo: dict = {}  # p -> (sigma, effective window)
+    memo: dict = {}  # p -> ({disk: sigma}, {disk: effective window})
 
-    def solve(p: float) -> tuple[float, float]:
+    def solve(p: float) -> tuple[dict, dict]:
         key = round(float(p), 12)
         if key in memo:
             return memo[key]
-        base_L = float(window_fn(p))
-        L = base_L
-        m = miss_share(p)
-        s = 0.0
-        if base_L > 0.0 and m > 0.0:
+        base_L = {d: float(base_window[d](p)) for d in disks}
+        L = dict(base_L)
+        m = {d: miss_share(p, d) for d in disks}
+        s = {d: 0.0 for d in disks}
+        live = [d for d in disks if base_L[d] > 0.0 and m[d] > 0.0]
+        if live:
             for _ in range(100):
-                net_s = build(lambda _p, s=s: s, lambda _p, L=L: L)
+                net_s = build(
+                    {d: (lambda _p, v=s[d]: v) for d in disks},
+                    {d: (lambda _p, v=L[d]: v) for d in disks},
+                )
                 X = float(net_s.throughput_upper(p, tail_mode="zero"))
                 if use_mva:
-                    L = mva_window(p, net_s, base_L)
-                if flow_theta == 0.0:
-                    mu = X * m / flows
-                    s_new = mu * L / (1.0 + mu * L)
-                else:
-                    mu_f = X * m * weights
-                    s_new = float((weights * mu_f * L / (1.0 + mu_f * L)).sum())
-                if abs(s_new - s) < 1e-12:
+                    for d in live:
+                        L[d] = mva_window(p, net_s, d, base_L[d])
+                s_new = dict(s)
+                for d in live:
+                    if flow_theta == 0.0:
+                        mu = X * m[d] / flows
+                        s_new[d] = mu * L[d] / (1.0 + mu * L[d])
+                    else:
+                        mu_f = X * m[d] * weights
+                        s_new[d] = float(
+                            (weights * mu_f * L[d] / (1.0 + mu_f * L[d])).sum()
+                        )
+                if all(abs(s_new[d] - s[d]) < 1e-12 for d in live):
                     s = s_new
                     break
                 # the MVA window couples L to sigma; damp that richer fixed
                 # point (plain iteration stays exact for the service window)
-                s = 0.5 * (s + s_new) if use_mva else s_new
+                s = ({d: 0.5 * (s[d] + s_new[d]) for d in disks}
+                     if use_mva else s_new)
         memo[key] = (s, L)
         return memo[key]
 
-    return build(lambda p: solve(p)[0], lambda p: solve(p)[1])
+    return build(
+        {d: (lambda p, d=d: solve(p)[0][d]) for d in disks},
+        {d: (lambda p, d=d: solve(p)[1][d]) for d in disks},
+    )
 
 
 # --------------------------------------------------------------------------

@@ -374,6 +374,323 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             jnp.maximum(t_measured, 1e-6))
 
 
+class _TieredState(NamedTuple):
+    """Closed-loop state extended with the cross-tier MSHR tables.
+
+    A job can hold up to ``max_held`` outstanding-fetch entries at once
+    (its L1 client table + a shard-local origin table) and can be parked
+    on any one entry; fills cascade — releasing an entry completes every
+    request parked on it as a delayed hit, which force-frees *their*
+    held entries, waking their own followers (bounded by ``max_held``
+    strictly-deeper-level waves, so the unroll is static)."""
+
+    key: jax.Array
+    ready_ns: jax.Array  # (N,) i32, INF when waiting or parked
+    station: jax.Array  # (N,) i32
+    branch: jax.Array  # (N,) i32
+    pos: jax.Array  # (N,) i32
+    enq_seq: jax.Array  # (N,) i32, BIG when not waiting
+    busy_count: jax.Array  # (K,) i32
+    seq_ctr: jax.Array  # i32
+    completed: jax.Array  # i32
+    elapsed_us: jax.Array  # f32
+    warm_completed: jax.Array  # i32
+    warm_elapsed_us: jax.Array  # f32
+    flow_f: jax.Array  # (N,) i32 per-request hot-key flow, -1 until acquired
+    held: jax.Array  # (N, max_held) i32 leader slot per level, -1 = none
+    parked_on: jax.Array  # (N,) i32 slot the job is parked on, -1 = live
+    parked_lvl: jax.Array  # (N,) i32 acq level it parked at, -1 = live
+    leader: jax.Array  # (G*F,) i32 job leading each (group, flow), -1 idle
+    delayed: jax.Array  # i32
+    warm_delayed: jax.Array  # i32
+    delayed_lvl: jax.Array  # (max_held+1,) i32, last entry = scatter pad
+    warm_delayed_lvl: jax.Array  # (max_held+1,) i32
+    branch_done: jax.Array  # (B,) i32
+    branch_delayed: jax.Array  # (B,) i32
+    warm_branch_done: jax.Array  # (B,) i32
+    warm_branch_delayed: jax.Array  # (B,) i32
+
+
+@partial(jax.jit,
+         static_argnames=("n_requests", "warmup", "mpl", "max_events",
+                          "n_flows", "flow_theta", "n_groups", "max_held"))
+def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
+                     n_requests: int, warmup: int, mpl: int,
+                     max_events: int, n_flows: int,
+                     flow_theta: float = 0.0, n_groups: int = 1,
+                     max_held: int = 1) -> tuple:
+    """Tiered (hierarchy) twin of :func:`_simulate`.
+
+    The ``disk_rank`` convention is replaced by explicit
+    :class:`~repro.core.simspec.MshrSpec` tables: ``acq_*[b, i]`` marks
+    the MSHR group a job acquires on ARRIVAL at visit ``(b, i)`` (or
+    parks behind, if that group×flow entry already has a leader) and
+    ``rel_slot[b, i]`` the held level it releases on COMPLETION of that
+    visit.  One flow is sampled per request at its first acquire and
+    reused at every deeper acquire (it is the same key that missed), so
+    an L1 miss can coalesce at its client's table *or* — leading there —
+    at the shard-local origin table.  Fills cascade: completing a fill
+    wakes the requests parked on it as delayed hits; a woken job's own
+    held entries are force-freed (its fills just landed too), waking
+    their followers — at most ``max_held`` waves, because a job parked
+    at acquire level ``l`` holds entries strictly shallower than ``l``.
+    """
+    N = mpl
+    F = n_flows
+    GF = n_groups * F
+    B = spec.branch_cum.shape[0]
+    key = jax.random.PRNGKey(seed)
+
+    def sample_branch(key):
+        u = jax.random.uniform(key, ())
+        return jnp.searchsorted(spec.branch_cum, u).astype(jnp.int32)
+
+    key, bk, sk = jax.random.split(key, 3)
+    branch0 = jax.vmap(sample_branch)(jax.random.split(bk, N))
+    station0 = spec.visits[branch0, 0]
+    svc0 = jax.vmap(lambda k, s: _sample_service_ns(k, spec, s))(
+        jax.random.split(sk, N), station0
+    )
+    state = _TieredState(
+        key=key,
+        ready_ns=svc0,
+        station=station0,
+        branch=branch0,
+        pos=jnp.zeros((N,), jnp.int32),
+        enq_seq=jnp.full((N,), BIG_SEQ),
+        busy_count=jnp.zeros(spec.is_queue.shape, jnp.int32),
+        seq_ctr=jnp.int32(0),
+        completed=jnp.int32(0),
+        elapsed_us=jnp.float32(0.0),
+        warm_completed=jnp.int32(-1),
+        warm_elapsed_us=jnp.float32(0.0),
+        flow_f=jnp.full((N,), -1, jnp.int32),
+        held=jnp.full((N, max_held), -1, jnp.int32),
+        parked_on=jnp.full((N,), -1, jnp.int32),
+        parked_lvl=jnp.full((N,), -1, jnp.int32),
+        leader=jnp.full((GF,), -1, jnp.int32),
+        delayed=jnp.int32(0),
+        warm_delayed=jnp.int32(0),
+        delayed_lvl=jnp.zeros((max_held + 1,), jnp.int32),
+        warm_delayed_lvl=jnp.zeros((max_held + 1,), jnp.int32),
+        branch_done=jnp.zeros((B,), jnp.int32),
+        branch_delayed=jnp.zeros((B,), jnp.int32),
+        warm_branch_done=jnp.zeros((B,), jnp.int32),
+        warm_branch_delayed=jnp.zeros((B,), jnp.int32),
+    )
+
+    def cond(carry):
+        state, events = carry
+        return (state.completed < n_requests) & (events < max_events)
+
+    def body(carry):
+        state, events = carry
+        (key, k_svc1, k_svc2, k_branch, k_flow, k_wake_b,
+         k_wake_s) = jax.random.split(state.key, 7)
+
+        j = jnp.argmin(state.ready_ns).astype(jnp.int32)
+        t = state.ready_ns[j]
+        finite = state.ready_ns < INF_NS
+        ready = jnp.where(finite, state.ready_ns - t, INF_NS)
+        elapsed_us = state.elapsed_us + t.astype(jnp.float32) * 1e-3
+
+        k_cur = state.station[j]
+        busy_count = state.busy_count
+        enq_seq = state.enq_seq
+        station = state.station
+        branch = state.branch
+        pos = state.pos
+        flow_f = state.flow_f
+        held = state.held
+        parked_on = state.parked_on
+        parked_lvl = state.parked_lvl
+        leader = state.leader
+        completed = state.completed
+        delayed = state.delayed
+        delayed_lvl = state.delayed_lvl
+        branch_done = state.branch_done
+        branch_delayed = state.branch_delayed
+
+        # ---- fill: j completes visit (branch, pos); if this visit
+        # releases a held level, the fill lands — wake every request
+        # parked on that entry, cascading their own held entries.
+        rel = rel_slot[branch[j], pos[j]]
+        rel_entry = held[j, jnp.maximum(rel, 0)]
+        valid0 = (rel >= 0) & (rel_entry >= 0)
+        slot0 = jnp.where(valid0, rel_entry, GF)
+        held = held.at[j, jnp.maximum(rel, 0)].set(
+            jnp.where(rel >= 0, -1, rel_entry)
+        )
+        freed = jnp.zeros((GF + 1,), bool).at[slot0].set(True)
+        freed = freed.at[GF].set(False)
+        freed_all = freed
+        woken = jnp.zeros((N,), bool)
+        for _ in range(max_held):
+            wave = (parked_on >= 0) & freed[jnp.maximum(parked_on, 0)] & ~woken
+            nf = jnp.zeros((GF + 1,), bool)
+            for lvl in range(max_held):
+                sl = jnp.where(wave & (held[:, lvl] >= 0), held[:, lvl], GF)
+                nf = nf.at[sl].set(True)
+            nf = nf.at[GF].set(False)
+            woken = woken | wave
+            freed_all = freed_all | nf
+            freed = nf
+        leader = jnp.where(freed_all[:GF], -1, leader)
+        held = jnp.where(woken[:, None], -1, held)
+
+        # woken jobs complete as delayed hits under the branch they parked
+        # on, split by the tier level of the entry they parked behind.
+        wcount = woken.astype(jnp.int32)
+        branch_done = branch_done.at[branch].add(wcount)
+        branch_delayed = branch_delayed.at[branch].add(wcount)
+        delayed_lvl = delayed_lvl.at[
+            jnp.where(woken, jnp.maximum(parked_lvl, 0), max_held)
+        ].add(wcount)
+        wake_branch = jax.vmap(sample_branch)(jax.random.split(k_wake_b, N))
+        wake_station = spec.visits[wake_branch, 0]
+        wake_svc = jax.vmap(lambda k, s: _sample_service_ns(k, spec, s))(
+            jax.random.split(k_wake_s, N), wake_station
+        )
+        ready = jnp.where(woken, wake_svc, ready)
+        station = jnp.where(woken, wake_station, station)
+        branch = jnp.where(woken, wake_branch, branch)
+        pos = jnp.where(woken, 0, pos)
+        n_woken = woken.sum().astype(jnp.int32)
+        completed = completed + n_woken
+        delayed = delayed + n_woken
+        parked_on = jnp.where(woken, -1, parked_on)
+        parked_lvl = jnp.where(woken, -1, parked_lvl)
+        flow_f = jnp.where(woken, -1, flow_f)
+
+        # ---- hand the server job j held (if any) to its FIFO successor.
+        def release(args):
+            ready, busy_count, enq_seq = args
+            waiting = (station == k_cur) & (ready == INF_NS)
+            waiting = waiting.at[j].set(False)
+            seqs = jnp.where(waiting, enq_seq, BIG_SEQ)
+            w = jnp.argmin(seqs).astype(jnp.int32)
+            has_waiter = seqs[w] < BIG_SEQ
+            svc = _sample_service_ns(k_svc1, spec, k_cur)
+            ready = jnp.where(has_waiter, ready.at[w].set(svc), ready)
+            enq_seq = jnp.where(has_waiter, enq_seq.at[w].set(BIG_SEQ), enq_seq)
+            busy_count = busy_count.at[k_cur].add(
+                jnp.where(has_waiter, 0, -1).astype(jnp.int32)
+            )
+            return ready, busy_count, enq_seq
+
+        ready, busy_count, enq_seq = jax.lax.cond(
+            spec.is_queue[k_cur], release, lambda a: a,
+            (ready, busy_count, enq_seq),
+        )
+
+        # ---- advance job j (or complete + start a new request).
+        nxt_pos = pos[j] + 1
+        L = spec.visits.shape[1]
+        route_next = jnp.where(nxt_pos < L, spec.visits[branch[j], nxt_pos % L], -1)
+        done = route_next < 0
+
+        new_branch = sample_branch(k_branch)
+        branch_done = branch_done.at[branch[j]].add(done.astype(jnp.int32))
+        branch_j = jnp.where(done, new_branch, branch[j])
+        pos_j = jnp.where(done, 0, nxt_pos)
+        k_next = jnp.where(done, spec.visits[new_branch, 0], route_next)
+        completed = completed + done.astype(jnp.int32)
+
+        # ---- place j at k_next, acquiring / parking on the MSHR tables.
+        # Position 0 never acquires (MshrSpec.validate), so a fresh
+        # request can't park before sampling its flow.
+        acq_g = acq_group[branch_j, pos_j]
+        acq_s = acq_slot[branch_j, pos_j]
+        at_acq = acq_g >= 0
+        f_req = jnp.where(flow_f[j] >= 0, flow_f[j],
+                          _sample_flow(k_flow, n_flows, flow_theta))
+        slot_new = jnp.maximum(acq_g, 0) * F + f_req
+        parks = at_acq & (leader[slot_new] >= 0)
+        leads = at_acq & ~parks
+        leader = jnp.where(leads, leader.at[slot_new].set(j), leader)
+        held = jnp.where(
+            leads,
+            held.at[j, jnp.maximum(acq_s, 0)].set(slot_new),
+            held,
+        )
+        flow_f = flow_f.at[j].set(
+            jnp.where(at_acq, f_req, jnp.where(done, -1, flow_f[j]))
+        )
+        parked_on = parked_on.at[j].set(jnp.where(parks, slot_new, -1))
+        parked_lvl = parked_lvl.at[j].set(jnp.where(parks, acq_s, -1))
+
+        svc_next = _sample_service_ns(k_svc2, spec, k_next)
+        is_q = spec.is_queue[k_next]
+        has_slot = busy_count[k_next] < spec.servers[k_next]
+        starts_now = ((~is_q) | has_slot) & ~parks
+        waits = is_q & ~has_slot & ~parks
+        ready = ready.at[j].set(jnp.where(starts_now, svc_next, INF_NS))
+        enq_seq = enq_seq.at[j].set(jnp.where(waits, state.seq_ctr, BIG_SEQ))
+        seq_ctr = state.seq_ctr + waits.astype(jnp.int32)
+        busy_count = busy_count.at[k_next].add((is_q & starts_now).astype(jnp.int32))
+
+        # ---- warmup bookkeeping.
+        warm_now = (completed >= warmup) & (state.warm_completed < 0)
+        warm_completed = jnp.where(warm_now, completed, state.warm_completed)
+        warm_elapsed_us = jnp.where(warm_now, elapsed_us, state.warm_elapsed_us)
+        warm_delayed = jnp.where(warm_now, delayed, state.warm_delayed)
+        warm_delayed_lvl = jnp.where(warm_now, delayed_lvl,
+                                     state.warm_delayed_lvl)
+        warm_branch_done = jnp.where(warm_now, branch_done,
+                                     state.warm_branch_done)
+        warm_branch_delayed = jnp.where(warm_now, branch_delayed,
+                                        state.warm_branch_delayed)
+
+        new_state = _TieredState(
+            key=key,
+            ready_ns=ready,
+            station=station.at[j].set(k_next),
+            branch=branch.at[j].set(branch_j),
+            pos=pos.at[j].set(pos_j),
+            enq_seq=enq_seq,
+            busy_count=busy_count,
+            seq_ctr=seq_ctr,
+            completed=completed,
+            elapsed_us=elapsed_us,
+            warm_completed=warm_completed,
+            warm_elapsed_us=warm_elapsed_us,
+            flow_f=flow_f,
+            held=held,
+            parked_on=parked_on,
+            parked_lvl=parked_lvl,
+            leader=leader,
+            delayed=delayed,
+            warm_delayed=warm_delayed,
+            delayed_lvl=delayed_lvl,
+            warm_delayed_lvl=warm_delayed_lvl,
+            branch_done=branch_done,
+            branch_delayed=branch_delayed,
+            warm_branch_done=warm_branch_done,
+            warm_branch_delayed=warm_branch_delayed,
+        )
+        return new_state, events + 1
+
+    state, events = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+
+    n_measured = state.completed - state.warm_completed
+    t_measured = state.elapsed_us - state.warm_elapsed_us
+    x = n_measured.astype(jnp.float32) / jnp.maximum(t_measured, 1e-6)
+    delayed_frac = (
+        (state.delayed - state.warm_delayed).astype(jnp.float32)
+        / jnp.maximum(n_measured, 1).astype(jnp.float32)
+    )
+    tier_delayed = (
+        (state.delayed_lvl - state.warm_delayed_lvl)[:max_held]
+        .astype(jnp.float32)
+        / jnp.maximum(n_measured, 1).astype(jnp.float32)
+    )
+    return (x, state.completed, events, delayed_frac,
+            state.branch_done - state.warm_branch_done,
+            state.branch_delayed - state.warm_branch_delayed,
+            jnp.maximum(t_measured, 1e-6),
+            tier_delayed)
+
+
 class _OpenState(NamedTuple):
     key: jax.Array
     ready_ns: jax.Array  # (N,) i32, INF when idle / waiting / parked
@@ -743,6 +1060,7 @@ def simulate_network(
     max_in_system: int = 128,
     burst=None,
     backend: str = "jax",
+    tiers=None,
 ):
     """Simulate ``net`` over a grid of hit ratios.
 
@@ -776,6 +1094,21 @@ def simulate_network(
     separated by arrival-free OFF periods sized to restore the mean.
     ``None`` keeps Poisson arrivals (the exact original program).
 
+    ``tiers`` (an :class:`repro.core.simspec.MshrSpec`, built by
+    :func:`repro.hierarchy.model.compose_tiers`) switches the MSHR
+    machinery to **cross-tier** leader tables: acquire/park/release
+    points come from the per-(branch, position) annotation arrays
+    instead of the ``disk_rank`` convention — an L1 miss can park behind
+    its client's in-flight L2 fetch *or*, leading there, behind a
+    shard-local in-flight origin fetch, and fills cascade across tiers.
+    Requires ``coalesce_flows > 0`` to do anything (it sizes each
+    table's flow group); with 0 the annotations are ignored and the
+    plain closed kernel runs (the no-coalescing reference at identical
+    RNG).  Closed loop only.  The returned :class:`SimResult` carries
+    ``delayed_tier_frac`` — delayed hits split by the tier level parked
+    at (column 0: client-local L1 table; later: shard-local origin
+    tables).
+
     ``backend="pallas"`` routes the closed-loop grid to the accelerator
     event-sim kernel (:func:`repro.kernels.event_sim.simulate_grid_pallas`)
     — the whole (p_hit x seed) grid as one pallas dispatch with per-lane
@@ -788,11 +1121,12 @@ def simulate_network(
         raise ValueError(f"unknown backend {backend!r} (want 'jax' or "
                          "'pallas')")
     if backend == "pallas":
-        if coalesce_flows or arrival_rate is not None or burst is not None:
+        if (coalesce_flows or arrival_rate is not None or burst is not None
+                or tiers is not None):
             raise ValueError(
                 "backend='pallas' runs the plain closed loop only — "
-                "coalescing, open-loop arrivals and bursts need "
-                "backend='jax'")
+                "coalescing, tiered MSHR tables, open-loop arrivals and "
+                "bursts need backend='jax'")
         from repro.kernels.event_sim import simulate_grid_pallas  # lazy
 
         return simulate_grid_pallas(net, p_hits, n_requests=n_requests,
@@ -823,28 +1157,51 @@ def simulate_network(
         if burst is not None:
             raise ValueError("burst arrivals require arrival_rate "
                              "(open-loop mode)")
-        runner = jax.vmap(
-            lambda sp, seed: _simulate(
-                SimSpec(*sp, mpl=net.mpl), seed, n_requests=n_requests,
-                warmup=warmup, mpl=net.mpl, max_events=max_events,
-                n_flows=coalesce_flows, flow_theta=coalesce_theta,
-                n_disks=n_disks,
-            ),
-            in_axes=(0, 0),
-        )
+        if tiers is not None and coalesce_flows:
+            tiers.validate(np.asarray(specs[0].visits))
+            acq_g = jnp.asarray(np.asarray(tiers.acq_group, np.int32))
+            acq_s = jnp.asarray(np.asarray(tiers.acq_slot, np.int32))
+            rel_s = jnp.asarray(np.asarray(tiers.rel_slot, np.int32))
+            runner = jax.vmap(
+                lambda sp, seed: _simulate_tiered(
+                    SimSpec(*sp, mpl=net.mpl), acq_g, acq_s, rel_s, seed,
+                    n_requests=n_requests, warmup=warmup, mpl=net.mpl,
+                    max_events=max_events, n_flows=coalesce_flows,
+                    flow_theta=coalesce_theta,
+                    n_groups=int(tiers.n_groups),
+                    max_held=int(tiers.max_held),
+                ),
+                in_axes=(0, 0),
+            )
+        else:
+            runner = jax.vmap(
+                lambda sp, seed: _simulate(
+                    SimSpec(*sp, mpl=net.mpl), seed, n_requests=n_requests,
+                    warmup=warmup, mpl=net.mpl, max_events=max_events,
+                    n_flows=coalesce_flows, flow_theta=coalesce_theta,
+                    n_disks=n_disks,
+                ),
+                in_axes=(0, 0),
+            )
         out = runner(spec_arrays, seed_v)
         xs = np.asarray(out[0]).reshape(S, P)
         dl = np.asarray(out[3]).reshape(S, P)
         t_meas = np.asarray(out[6]).reshape(S, P, 1)
         bx = np.asarray(out[4]).reshape(S, P, -1) / t_meas
         bd = np.asarray(out[5]).reshape(S, P, -1) / t_meas
+        tier_dl = (np.asarray(out[7]).reshape(S, P, -1).mean(axis=0)
+                   if len(out) > 7 else None)
         mean = xs.mean(axis=0)
         ci = 1.96 * xs.std(axis=0, ddof=1) / math.sqrt(len(seeds)) if len(seeds) > 1 else np.zeros_like(mean)
         return SimResult(p_hit=p_hits, throughput=mean, ci95=ci,
                          n_requests=n_requests, delayed_frac=dl.mean(axis=0),
                          branch_throughput=bx.mean(axis=0),
-                         branch_delayed=bd.mean(axis=0))
+                         branch_delayed=bd.mean(axis=0),
+                         delayed_tier_frac=tier_dl)
 
+    if tiers is not None:
+        raise ValueError("tiered MSHR coalescing runs the closed loop only "
+                         "(no arrival_rate/burst)")
     lam = np.broadcast_to(
         np.asarray(arrival_rate, dtype=np.float64), (P,)
     ).copy()

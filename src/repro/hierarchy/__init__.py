@@ -1,0 +1,34 @@
+"""Tiered cache hierarchies (L1 clients → sharded L2 → origin).
+
+Composition and analytics live in :mod:`repro.hierarchy.model`; the
+tiered simulator twins in :mod:`repro.hierarchy.sim`.
+"""
+
+from repro.hierarchy.model import (
+    HierarchyModel,
+    TierSpec,
+    TieredProfile,
+    che_hit,
+    coalesced_hierarchy,
+    compose_tiers,
+    hierarchy_network,
+    measured_tiered_profile,
+    tier_sigma_of,
+    tiered_profile,
+)
+
+__all__ = [
+    "HierarchyModel", "TierSpec", "TieredProfile", "che_hit",
+    "coalesced_hierarchy", "compose_tiers", "hierarchy_network",
+    "measured_tiered_profile", "tier_sigma_of", "tiered_profile",
+    "HierarchySimResult", "simulate_hierarchy", "simulate_hierarchy_py",
+]
+
+
+def __getattr__(name):
+    if name in ("HierarchySimResult", "simulate_hierarchy",
+                "simulate_hierarchy_py"):
+        from repro.hierarchy import sim
+
+        return getattr(sim, name)
+    raise AttributeError(name)

@@ -1,0 +1,117 @@
+"""Simulating tiered hierarchies — the tentpole's measurement layer.
+
+* :func:`simulate_hierarchy` — the composed hierarchy network through
+  the JAX event machinery: one vmapped, jitted dispatch over the
+  (global-p × seed) grid running the cross-tier MSHR kernel
+  (``simulate_network(tiers=...)``), with per-branch completion counters
+  folded back into per-level (L1-hit / L2-hit / origin) throughput
+  shares and per-tier delayed-hit fractions.
+* :func:`simulate_hierarchy_py` — the heapq oracle twin at one global p
+  (``simulate_py(tiers=...)``), folded the same way.
+
+Both accept ``coalesce_flows=0`` as the no-coalescing reference: the
+same composed network through the plain kernels, annotations ignored.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.py_sim import simulate_py
+from repro.core.simulator import simulate_network
+from repro.hierarchy.model import HierarchyModel
+
+__all__ = ["HierarchySimResult", "simulate_hierarchy",
+           "simulate_hierarchy_py"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchySimResult:
+    """Tier-folded view of a hierarchy simulation.
+
+    ``level_throughput`` columns are [served at L1, served at L2,
+    served at origin] — delayed hits count where their *fill* came from
+    (the branch they parked on).  ``delayed_l1_frac`` is the fraction of
+    completions that coalesced at a client-local L1 table,
+    ``delayed_l2_frac`` at a shard-local origin table.
+    """
+
+    p_hit: np.ndarray  # (P,) global L1 hit-ratio knob
+    throughput: np.ndarray  # (P,) requests/µs
+    ci95: np.ndarray  # (P,)
+    level_throughput: np.ndarray  # (P, 3) requests/µs per serving level
+    shard_throughput: np.ndarray  # (P, N) L1-miss stream per L2 shard
+    delayed_frac: np.ndarray  # (P,)
+    delayed_l1_frac: np.ndarray  # (P,) parked at the client's L1 table
+    delayed_l2_frac: np.ndarray  # (P,) parked at a shard origin table
+    n_requests: int
+
+
+def _fold(model: HierarchyModel, p_hit, x, ci, bx, delayed, tier_dl,
+          n_requests: int) -> HierarchySimResult:
+    level = np.asarray(model.branch_level)
+    shard = np.asarray(model.branch_shard)
+    P = len(p_hit)
+    lvl_x = np.zeros((P, 3))
+    for lv in range(3):
+        lvl_x[:, lv] = bx[:, level == lv].sum(axis=1)
+    sh_x = np.zeros((P, model.n_shards))
+    for k in range(model.n_shards):
+        sh_x[:, k] = bx[:, shard == k].sum(axis=1)
+    if tier_dl is None:
+        tier_dl = np.zeros((P, 2))
+    return HierarchySimResult(
+        p_hit=np.asarray(p_hit), throughput=np.asarray(x),
+        ci95=np.asarray(ci), level_throughput=lvl_x, shard_throughput=sh_x,
+        delayed_frac=np.asarray(delayed),
+        delayed_l1_frac=tier_dl[:, 0], delayed_l2_frac=tier_dl[:, 1],
+        n_requests=n_requests,
+    )
+
+
+def simulate_hierarchy(model: HierarchyModel, p_hits,
+                       n_requests: int = 40_000, seeds=(0, 1, 2),
+                       warmup_frac: float = 0.25,
+                       coalesce_flows: int = 0,
+                       coalesce_theta: float = 0.0) -> HierarchySimResult:
+    """Simulate the composed hierarchy over a grid of global hit ratios.
+
+    ``coalesce_flows`` sizes every MSHR table's hot-flow group (per
+    client at L1, per shard at the origin); 0 runs the plain kernel as
+    the no-coalescing reference.  Wraps
+    :func:`repro.core.simulator.simulate_network`.
+    """
+    res = simulate_network(
+        model.network, p_hits, n_requests=n_requests, seeds=seeds,
+        warmup_frac=warmup_frac, coalesce_flows=coalesce_flows,
+        coalesce_theta=coalesce_theta,
+        tiers=model.mshr if coalesce_flows else None,
+    )
+    return _fold(model, res.p_hit, res.throughput, res.ci95,
+                 res.branch_throughput, res.delayed_frac,
+                 res.delayed_tier_frac, n_requests)
+
+
+def simulate_hierarchy_py(model: HierarchyModel, p_hit: float,
+                          n_requests: int = 20_000, seed: int = 0,
+                          warmup_frac: float = 0.25,
+                          coalesce_flows: int = 0,
+                          coalesce_theta: float = 0.0
+                          ) -> HierarchySimResult:
+    """Heapq-oracle twin of :func:`simulate_hierarchy` at one global p."""
+    out = simulate_py(
+        model.network, float(p_hit), n_requests=n_requests, seed=seed,
+        warmup_frac=warmup_frac, coalesce_flows=coalesce_flows,
+        coalesce_theta=coalesce_theta, full=True,
+        tiers=model.mshr if coalesce_flows else None,
+    )
+    bx = (np.asarray(out["branch_done"], np.float64)
+          / out["t_measured"])[None, :]
+    tier_dl = out.get("delayed_tier_frac")
+    tier_dl = (np.asarray(tier_dl)[None, :] if tier_dl is not None
+               else None)
+    return _fold(model, np.array([float(p_hit)]),
+                 np.array([out["x"]]), np.array([0.0]), bx,
+                 np.array([out["delayed_frac"]]), tier_dl, n_requests)

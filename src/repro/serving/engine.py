@@ -342,7 +342,9 @@ class Engine:
                          cores: int | None = None,
                          coalesce_flows: int = 0,
                          n_shards: int | None = None,
-                         shard_profile=None):
+                         shard_profile=None,
+                         tiers: int = 0,
+                         tier_profile=None):
         """Closed-network p* forecast for this engine's prefix controller.
 
         Uses the measured controller op profile plus the ServeConfig
@@ -368,10 +370,24 @@ class Engine:
         MPL ``n_shards * replicas * cores``, cluster-level p*.
         ``shard_profile`` (a :class:`repro.cluster.ShardProfile`) supplies
         routing skew + per-shard local hit ratios; the default is a
-        perfectly balanced homogeneous cluster.  Coalescing and sharding
-        are mutually exclusive here: the analytic sigma fixed point is a
-        single-node construct (shard-local coalescing lives in the
-        cluster simulators).
+        perfectly balanced homogeneous cluster.  ``coalesce_flows`` and
+        ``n_shards > 1`` compose: the cluster network is built first and
+        :func:`repro.core.queueing.coalesced_network` then solves one
+        shard-local sigma_k per ``sK:disk`` (prefill dedup never spans
+        shards — the router sends each chunk to exactly one pod).
+
+        ``tiers > 0`` lifts the forecast to a cache *hierarchy* instead:
+        ``tiers`` client-local L1 instances of this pod's measured
+        profile in front of ``n_shards`` L2 instances of the same
+        profile in front of the chunk-prefill origin, composed via
+        :func:`repro.hierarchy.compose_tiers`.  ``tier_profile`` (a
+        :class:`repro.hierarchy.TieredProfile`) maps the global knob to
+        (L1 hit ratio, per-shard residual hit ratios); the default is a
+        constant profile with every L2 shard at 0.5.  The return value
+        is still one ClosedNetwork — Thm-7.1 p*, MVA, and the Erlang-C
+        forecasts work on it unchanged; with ``coalesce_flows`` the
+        cross-tier :func:`repro.hierarchy.coalesced_hierarchy` transform
+        is applied on top.
         """
         from repro.core.harness import PAPER_SERVICES, ServiceTimes
         from repro.core.queueing import (QUEUE, THINK, Branch, ClosedNetwork,
@@ -407,19 +423,30 @@ class Engine:
         net = ClosedNetwork(f"serving-{self.serve.policy}", tuple(stations),
                             tuple(branches), mpl)
         n_shards = self.serve.n_shards if n_shards is None else int(n_shards)
-        if coalesce_flows:
-            if n_shards > 1:
-                raise ValueError(
-                    "coalesce_flows and n_shards > 1 are mutually exclusive "
-                    "in the analytic forecast; use repro.cluster.sim for "
-                    "shard-local coalescing")
-            net = coalesced_network(net, flows=coalesce_flows,
-                                    window_us=prefill_us)
+        if tiers:
+            from repro.hierarchy import (TieredProfile, TierSpec,
+                                         coalesced_hierarchy, compose_tiers)
+
+            profile = tier_profile or TieredProfile.constant(
+                0.5, n_shards=max(n_shards, 1))
+            hm = compose_tiers(
+                TierSpec(net=net, n_instances=int(tiers), name="l1"),
+                TierSpec(net=net, n_instances=max(n_shards, 1), name="l2"),
+                profile=profile, disk_us=prefill_us,
+                disk_servers=self.serve.disk_servers,
+                mpl=mpl * int(tiers))
+            if coalesce_flows:
+                return coalesced_hierarchy(hm, flows=coalesce_flows,
+                                           window_us=prefill_us)
+            return hm.network
         if n_shards > 1:
             from repro.cluster import compose_cluster, uniform_profile
 
             profile = shard_profile or uniform_profile(n_shards)
-            return compose_cluster(net, profile, mpl=mpl * n_shards).network
+            net = compose_cluster(net, profile, mpl=mpl * n_shards).network
+        if coalesce_flows:
+            net = coalesced_network(net, flows=coalesce_flows,
+                                    window_us=prefill_us)
         return net
 
     def forecast_slo(self, step_us: float, prefill_us: float,

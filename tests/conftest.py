@@ -1,0 +1,30 @@
+"""Shared pytest configuration.
+
+Registers the hypothesis profiles the CI matrix selects with
+``--hypothesis-profile``:
+
+``ci``
+    bounded example counts for the fast tier-1 leg (run with a fixed
+    ``--hypothesis-seed`` so failures reproduce across runners);
+``full``
+    the >=100-examples-per-property leg, run under the ``slow`` marker.
+
+hypothesis is a *dev* dependency (requirements-dev.txt); when it is not
+installed, tests/test_properties.py falls back to deterministic
+parametrized spot-checks of the same property functions, so the suite
+never hard-depends on it.
+"""
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    pass
+else:
+    _COMMON = dict(
+        deadline=None,  # jit compiles make per-example timing meaningless
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large],
+    )
+    settings.register_profile("ci", max_examples=25, **_COMMON)
+    settings.register_profile("full", max_examples=100, **_COMMON)
+    settings.load_profile("ci")

@@ -253,7 +253,7 @@ class TestTwinContracts:
     def test_live_registry_is_clean(self):
         violations, notes = run_checker("contracts", REPO_ROOT)
         assert violations == []
-        assert any("14 registered pairs" in n.text for n in notes)
+        assert any("15 registered pairs" in n.text for n in notes)
 
 
 # ----------------------------------------------- acceptance: seeded drift

@@ -1,0 +1,62 @@
+"""Registry-level smoke tests for the ``repro.configs`` wing.
+
+The per-arch config modules are mostly exercised indirectly (model smoke
+tests build reduced params); these tests pin the registry contract itself
+so a dormant module can't silently rot: every module listed in ``ARCHS``
+imports and produces a validated full-size :class:`ModelConfig`, every
+file in the package is reachable from the registry (no dead modules), and
+``reduced()`` / override plumbing behave as the smoke tests assume.
+"""
+
+import dataclasses
+import pathlib
+
+import pytest
+
+from repro.configs.registry import ARCHS, get_config
+
+FAMILIES = {"dense", "moe", "vlm", "ssm", "hybrid", "audio"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_loads_and_is_sane(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.family in FAMILIES
+    assert cfg.n_layers > 0 and cfg.d_model > 0 and cfg.vocab > 0
+    assert cfg.d_head > 0  # __post_init__ resolved the default
+    if cfg.block == "attn":
+        assert cfg.n_heads % cfg.n_kv_heads == 0
+    if cfg.family == "moe":
+        assert cfg.moe is not None and cfg.moe.n_experts >= cfg.moe.top_k
+    if cfg.family == "audio":
+        assert cfg.encdec and cfg.enc_layers > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_shrinks_but_keeps_shape_of_the_family(arch):
+    full = get_config(arch)
+    cfg = get_config(arch, reduced=True)
+    assert cfg.name == arch + "-reduced"
+    assert cfg.d_model < full.d_model and cfg.vocab <= full.vocab
+    # family-defining structure survives the shrink
+    assert (cfg.family, cfg.block, cfg.encdec) == (
+        full.family, full.block, full.encdec)
+    assert (cfg.moe is None) == (full.moe is None)
+    assert cfg.param_dtype == "float32"  # CPU smoke tests need f32
+
+
+def test_overrides_and_unknown_arch():
+    cfg = get_config("internlm2-1.8b", reduced=True, max_seq=1024)
+    assert cfg.max_seq == 1024
+    assert dataclasses.is_dataclass(cfg)
+    with pytest.raises(KeyError, match="unknown arch"):
+        get_config("not-a-model")
+
+
+def test_registry_covers_every_config_module():
+    """No dormant modules: configs/*.py <-> ARCHS is a bijection."""
+    pkg = pathlib.Path(__file__).resolve().parents[1] / "src/repro/configs"
+    modules = {p.stem for p in pkg.glob("*.py")} - {"registry", "__init__"}
+    from_registry = {a.replace("-", "_").replace(".", "_") for a in ARCHS}
+    assert modules == from_registry

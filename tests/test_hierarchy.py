@@ -1,0 +1,335 @@
+"""Tiered hierarchy prong (PR 8): composition, tier profiles, cross-tier
+MSHR twins, the analytic coalescing transform, and the per-shard sigma_k
+generalization of ``coalesced_network``.
+
+The twin tests here are the fast differential smoke layer; the headline
+(LRU-client inversion, forecast tolerances) is asserted in
+``benchmarks/fig_hierarchy.py`` and the property layer in
+``tests/test_properties.py``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    HashRing,
+    cluster_network,
+    ideal_shard_profile,
+    simulate_cluster,
+    zipf_key_probs,
+)
+from repro.core import build
+from repro.core.harness import zipf_trace
+from repro.core.queueing import (
+    THINK,
+    Branch,
+    ClosedNetwork,
+    Station,
+    coalesced_network,
+    sigma_of,
+)
+from repro.core.simulator import simulate_network
+from repro.hierarchy import (
+    TieredProfile,
+    TierSpec,
+    che_hit,
+    coalesced_hierarchy,
+    compose_tiers,
+    hierarchy_network,
+    measured_tiered_profile,
+    simulate_hierarchy,
+    simulate_hierarchy_py,
+    tier_sigma_of,
+    tiered_profile,
+)
+
+KEY_SPACE = 128
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    """2 LRU clients -> 2 LRU shards -> origin, constant p2=0.5."""
+    return hierarchy_network("lru", "lru", n_clients=2, n_shards=2,
+                             mpl=16, disk_us=50.0)
+
+
+@pytest.fixture(scope="module")
+def che_profile():
+    probs = zipf_key_probs(KEY_SPACE, 0.9, seed=0)
+    assign = np.arange(KEY_SPACE) % 2
+    return tiered_profile(probs, np.array([4, 16, 48, 96]), l2_cap=16,
+                          assign=assign, n_shards=2)
+
+
+# ---------------------------------------------------------------------------
+# Tier profiles (Che / measured)
+# ---------------------------------------------------------------------------
+
+
+def test_che_hit_basic_properties():
+    probs = zipf_key_probs(64, 1.0, seed=0)
+    h_small = che_hit(probs, 4)
+    h_big = che_hit(probs, 32)
+    assert h_small.shape == (64,)
+    assert np.all((0.0 <= h_small) & (h_small <= 1.0))
+    # monotone in capacity, and popular keys hit more
+    assert np.all(h_big >= h_small - 1e-12)
+    assert probs @ h_big > probs @ h_small
+    # the characteristic-time constraint: expected occupancy == capacity
+    assert h_big.sum() == pytest.approx(32, rel=1e-6)
+    # degenerate: cache the whole key space
+    assert np.allclose(che_hit(probs, 64), 1.0)
+
+
+def test_tiered_profile_filters_the_shards(che_profile):
+    prof = che_profile
+    assert np.all(np.diff(prof.l1_hit) > 0)
+    np.testing.assert_allclose(prof.shard_weights.sum(axis=1), 1.0,
+                               atol=1e-9)
+    # filtering: a bigger L1 strips the head of the Zipf curve, so the
+    # residual stream seen by the shards is colder
+    p2 = (prof.shard_weights * prof.l2_hit).sum(axis=1)
+    assert p2[-1] < p2[0]
+    p1, w, p2k = prof.tier_p(0.5 * sum(prof.p_range()))
+    assert 0.0 < p1 < 1.0 and w.shape == (2,) and p2k.shape == (2,)
+
+
+def test_measured_profile_matches_che_shape(che_profile):
+    trace = zipf_trace(6_000, KEY_SPACE, 0.9, seed=0)
+    assign = np.arange(KEY_SPACE) % 2
+    meas = measured_tiered_profile(trace, np.array([4, 16, 48, 96]),
+                                   l2_cap=16, assign=assign, n_clients=2,
+                                   seed=0)
+    assert np.all(np.diff(meas.l1_hit) >= 0)
+    np.testing.assert_allclose(meas.shard_weights.sum(axis=1), 1.0,
+                               atol=1e-9)
+    # same qualitative filtering as the analytic profile, and the two
+    # agree on the L1 hit curve within Che-approximation error
+    np.testing.assert_allclose(meas.l1_hit, che_profile.l1_hit, atol=0.12)
+
+
+def test_constant_profile_knob_is_p1():
+    prof = TieredProfile.constant(0.5, n_shards=3)
+    p1, w, p2 = prof.tier_p(0.42)
+    assert p1 == pytest.approx(0.42)
+    np.testing.assert_allclose(w, 1.0 / 3)
+    np.testing.assert_allclose(p2, 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Composition
+# ---------------------------------------------------------------------------
+
+
+def test_compose_probabilities_and_levels(small_model):
+    net = small_model.network
+    net.validate()
+    for p in (0.01, 0.3, 0.77, 0.99):
+        total = sum(b.probability(p) for b in net.branches)
+        assert total == pytest.approx(1.0, abs=1e-12)
+        lvl = small_model.level_fractions(p)
+        assert lvl[0] == pytest.approx(p, abs=1e-12)
+        assert lvl[1] == pytest.approx((1 - p) * 0.5, abs=1e-12)
+        assert lvl.sum() == pytest.approx(1.0, abs=1e-12)
+
+
+def test_compose_station_naming_and_mpl(small_model):
+    names = {s.name for s in small_model.network.stations}
+    # queue stations replicate per instance; thinks are shared per tier
+    assert {"l1_0:head", "l1_1:head", "l2_0:head", "l2_1:head",
+            "l1:lookup", "l2:lookup", "disk"} <= names
+    assert not any(n.endswith(":disk") for n in names)
+    assert small_model.network.mpl == 16  # explicit override respected
+    # default cluster MPL: per-client closed loops times n_clients
+    default = hierarchy_network("lru", "lru", n_clients=2, n_shards=2)
+    assert default.network.mpl == 2 * build("lru").mpl
+
+
+def test_compose_rejects_route_ending_at_origin():
+    bare = ClosedNetwork(
+        "bare",
+        (Station("lookup", THINK, 0.5), Station("disk", THINK, 50.0)),
+        (Branch("hit", lambda p: p, ("lookup",)),
+         Branch("miss", lambda p: 1.0 - p, ("lookup", "disk"))),
+        mpl=8,
+    )
+    with pytest.raises(ValueError, match="disk"):
+        compose_tiers(TierSpec(policy="lru", n_instances=2),
+                      TierSpec(net=bare, n_instances=2, name="l2"))
+
+
+def test_mshr_annotations_validate(small_model):
+    mshr = small_model.mshr
+    assert mshr.n_groups == 2 + 2  # per-client L1 + per-shard origin
+    B = len(small_model.network.branches)
+    assert np.asarray(mshr.acq_group).shape[0] == B
+    # L1-hit branches acquire nothing; origin branches acquire both slots
+    ag = np.asarray(mshr.acq_group)
+    for bi in range(B):
+        lvl = small_model.branch_level[bi]
+        n_acq = int((ag[bi] >= 0).sum())
+        assert n_acq == (0 if lvl == 0 else 1 if lvl == 1 else 2)
+
+
+def test_analytics_delegate(small_model):
+    p = np.array([0.3, 0.6])
+    assert np.all(small_model.throughput_upper(p) > 0)
+    assert small_model.mva_throughput(0.5) > 0
+    assert 0.0 < small_model.p_star(grid=501) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Tiered simulator twins
+# ---------------------------------------------------------------------------
+
+
+def test_plain_path_is_the_untiered_kernel(small_model):
+    """coalesce_flows=0 must dispatch the exact plain kernel."""
+    ref = simulate_network(small_model.network, [0.5], n_requests=3_000,
+                           seeds=(0,))
+    res = simulate_hierarchy(small_model, [0.5], n_requests=3_000,
+                             seeds=(0,))
+    assert res.throughput[0] == ref.throughput[0]
+    assert res.delayed_l1_frac[0] == 0.0
+    np.testing.assert_allclose(res.level_throughput.sum(axis=1),
+                               res.throughput, rtol=1e-6)
+
+
+def test_tiered_twins_agree(small_model):
+    """Cross-tier MSHR: JAX kernel vs heapq oracle, X and tier splits."""
+    jx = simulate_hierarchy(small_model, [0.35], n_requests=8_000,
+                            seeds=(0, 1), coalesce_flows=2)
+    py = simulate_hierarchy_py(small_model, 0.35, n_requests=4_000,
+                               seed=2, coalesce_flows=2)
+    assert jx.throughput[0] == pytest.approx(py.throughput[0], rel=0.15)
+    assert jx.delayed_l1_frac[0] == pytest.approx(py.delayed_l1_frac[0],
+                                                  abs=0.08)
+    assert jx.delayed_l2_frac[0] == pytest.approx(py.delayed_l2_frac[0],
+                                                  abs=0.05)
+    # the tier split partitions the delayed mass
+    for r in (jx, py):
+        assert r.delayed_frac[0] == pytest.approx(
+            r.delayed_l1_frac[0] + r.delayed_l2_frac[0], abs=1e-6)
+        assert r.delayed_l1_frac[0] > r.delayed_l2_frac[0] > 0.0
+
+
+def test_tiered_sim_levels_match_analytic(small_model):
+    res = simulate_hierarchy(small_model, [0.4], n_requests=8_000,
+                             seeds=(0,), coalesce_flows=2)
+    frac = res.level_throughput[0] / res.throughput[0]
+    np.testing.assert_allclose(frac, small_model.level_fractions(0.4),
+                               atol=0.05)
+    np.testing.assert_allclose(res.shard_throughput[0].sum(),
+                               res.level_throughput[0, 1:].sum(), rtol=1e-6)
+
+
+def test_tiers_requires_coalescing_and_closed_loop(small_model):
+    with pytest.raises(ValueError):
+        simulate_network(small_model.network, [0.5], n_requests=500,
+                         tiers=small_model.mshr, coalesce_flows=2,
+                         arrival_rate=0.5)
+    with pytest.raises(ValueError):
+        simulate_network(small_model.network, [0.5], n_requests=500,
+                         tiers=small_model.mshr, coalesce_flows=2,
+                         backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# Analytic cross-tier coalescing
+# ---------------------------------------------------------------------------
+
+
+def test_coalesced_hierarchy_masses_and_sigma(small_model):
+    net = small_model.coalesced(flows=2)
+    for p in (0.2, 0.5, 0.8):
+        assert sum(b.probability(p) for b in net.branches) == pytest.approx(
+            1.0, abs=1e-9)
+    s1_lo, s2_lo = tier_sigma_of(net, 0.2)
+    s1_hi, s2_hi = tier_sigma_of(net, 0.9)
+    assert 0.0 < s1_lo < 1.0 and 0.0 < float(np.mean(s2_lo)) < 1.0
+    # starvation: a higher L1 hit ratio thins both park streams
+    assert s1_hi < s1_lo
+    assert float(np.mean(s2_hi)) < float(np.mean(s2_lo))
+    # the plain-network reader sees no single-node "_delayed" branches
+    assert sigma_of(net, 0.5) == 0.0
+
+
+def test_coalesced_sigma_tracks_sim(small_model):
+    """The analytic sigma1 must track the sim's measured park share
+    (loose: MVA cannot represent fill-synchronized convoys)."""
+    p = 0.35
+    net = small_model.coalesced(flows=2)
+    s1, _ = tier_sigma_of(net, p)
+    sim = simulate_hierarchy(small_model, [p], n_requests=8_000,
+                             seeds=(0, 1), coalesce_flows=2)
+    sim_s1 = sim.delayed_l1_frac[0] / (1.0 - p)
+    assert s1 == pytest.approx(sim_s1, rel=0.3)
+
+
+# ---------------------------------------------------------------------------
+# Per-shard sigma_k in coalesced_network (PR 5 carried-over item)
+# ---------------------------------------------------------------------------
+
+
+def _shard_delayed_frac(net, p, k):
+    """Delayed-hit share of shard k's traffic (the sim-comparable
+    quantity: ``(1 - p_k) * sigma_k``)."""
+    mine = [b for b in net.branches
+            if any(v.startswith(f"s{k}:") for v in b.visits)]
+    delayed = sum(b.probability(p) for b in mine
+                  if b.name.endswith("_delayed"))
+    total = sum(b.probability(p) for b in mine)
+    return delayed / total
+
+
+def test_single_disk_fixed_point_unchanged():
+    """The multi-disk generalization must reduce exactly to the old
+    single-node fixed point when there is one disk."""
+    net = build("lru", disk_us=100.0)
+    coal = coalesced_network(net, flows=8)
+    sig = sigma_of(coal, 0.5)
+    assert 0.0 < sig < 1.0
+    names = {s.name for s in coal.stations}
+    assert "inflight" in names and not any(":" in n and n.endswith("inflight")
+                                           for n in names)
+
+
+def test_cluster_coalescing_per_shard_sigma():
+    probs, assign = (zipf_key_probs(KEY_SPACE, 1.0, seed=0),
+                     HashRing(2, vnodes=64, seed=1).assignment(KEY_SPACE))
+    prof = ideal_shard_profile(assign, probs)
+    cm = cluster_network("lru", 2, profile=prof, disk_us=100.0, mpl=24)
+    coal = cm.coalesced(flows=8)
+    names = {s.name for s in coal.stations}
+    assert {"s0:inflight", "s1:inflight"} <= names
+    # shard-locality (the fig_cluster sim claim, now analytic too): the
+    # hot shard runs at a higher local hit ratio, so a smaller share of
+    # its traffic parks as delayed hits than on the cold shard
+    pk = prof.shard_p(0.6)
+    hot, cold = int(np.argmax(pk)), int(np.argmin(pk))
+    assert (_shard_delayed_frac(coal, 0.6, hot)
+            < _shard_delayed_frac(coal, 0.6, cold))
+
+
+def test_cluster_coalesced_analytic_vs_sim_regression():
+    """Regression pin for the per-shard fixed point: the analytic
+    per-shard delayed-hit fractions track the shard-local-MSHR cluster
+    sim shard by shard — the quantity a single global sigma cannot
+    produce at all (it collapses the hot/cold split)."""
+    probs, assign = (zipf_key_probs(KEY_SPACE, 1.0, seed=0),
+                     HashRing(2, vnodes=64, seed=1).assignment(KEY_SPACE))
+    prof = ideal_shard_profile(assign, probs)
+    cm = cluster_network("lru", 2, profile=prof, disk_us=100.0, mpl=24)
+    coal = cm.coalesced(flows=8)
+    p = 0.6
+    sim = simulate_cluster(cm, np.array([p]), n_requests=12_000,
+                           seeds=(0, 1), coalesce_flows=8)
+    ana = np.array([_shard_delayed_frac(coal, p, k) for k in range(2)])
+    np.testing.assert_allclose(ana, sim.shard_delayed_frac[0], atol=0.1)
+    # the cross-shard ordering matches the sim's
+    assert ((ana[0] < ana[1])
+            == (sim.shard_delayed_frac[0, 0] < sim.shard_delayed_frac[0, 1]))
+    # total delayed mass within the same band
+    total = sum(b.probability(p) for b in coal.branches
+                if b.name.endswith("_delayed"))
+    assert total == pytest.approx(float(sim.delayed_frac[0]), abs=0.1)

@@ -1,0 +1,331 @@
+"""Property-based differential tests over the twin implementations.
+
+Every replay / classification / simulation engine in this repo ships as a
+twin pair: a compiled JAX (or pallas) fast path and a pure-Python oracle
+with identical semantics.  The unit suites pin hand-picked configurations;
+this module drives the same contracts from *random* corners — traces drawn
+at random Zipf skew, random policies and capacities (including capacities
+above the key space and deliberately non-tile-multiple pad sizes), random
+miss-latency windows, random hit ratios and coalescing-flow counts.
+
+When hypothesis (a dev dependency, see requirements-dev.txt) is installed
+the properties run under ``@given`` with the profile selected by
+``--hypothesis-profile`` (tests/conftest.py registers ``ci`` and ``full``);
+each property additionally gets a ``@pytest.mark.slow`` twin forced to
+>=100 examples for the slow CI leg.  Without hypothesis the same property
+functions run as deterministic parametrized spot-checks, so the suite
+degrades gracefully on minimal installs.
+
+Compile discipline: strategies draw *static* kernel parameters (trace
+length, key space, pad size, mpl, seed counts, flow-group sizes) from
+small fixed sets so the number of distinct jit compilations stays bounded
+no matter how many examples run; everything swept densely (hit ratios,
+Zipf skew, capacities, RNG seeds) enters the compiled programs as data.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.cache.py_ref import PY_POLICIES, classify_inflight_py
+from repro.core.harness import coin_stream, run_cache_trace, zipf_trace
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYP = True
+except ImportError:  # pragma: no cover - CI installs requirements-dev.txt
+    HAS_HYP = False
+
+# Static kernel parameters (fixed sets => bounded jit compiles).
+KEY_SPACE = 64
+TRACE_LEN = 200
+PADS = (97, 128)  # both > any drawn capacity; 97 is not a tile multiple
+MPLS = (4, 12)
+POLICIES = tuple(sorted(PY_POLICIES))
+
+SLOW_EXAMPLES = 100
+
+
+def _register(name, check, argnames, fallback, strategies):
+    """Expose ``check`` as ``test_<name>``.
+
+    With hypothesis: a profile-controlled ``@given`` test plus a
+    slow-marked ``test_<name>_full`` twin forced to ``SLOW_EXAMPLES``
+    examples (the >=100-examples acceptance leg).  Without: the same
+    function parametrized over deterministic fallback tuples.
+    """
+    if HAS_HYP:
+        globals()["test_" + name] = given(**strategies)(check)
+        globals()["test_" + name + "_full"] = pytest.mark.slow(
+            settings(max_examples=SLOW_EXAMPLES, deadline=None)(
+                given(**strategies)(check)))
+    else:
+        globals()["test_" + name] = pytest.mark.parametrize(
+            argnames, fallback)(check)
+
+
+# ---------------------------------------------------------------------------
+# 1. Replay differential: py_ref oracle == lax.scan engine, bit for bit.
+# ---------------------------------------------------------------------------
+
+
+def _assert_degenerate_capacity_rejected(policy, capacity, trace, seed,
+                                         backend, **kw):
+    with pytest.raises(ValueError, match="capacity >= 2"):
+        run_cache_trace(policy, capacity, trace, seed=seed, backend=backend,
+                        **kw)
+
+
+def _check_replay_scan(policy, theta, capacity, seed, pad):
+    trace = zipf_trace(TRACE_LEN, KEY_SPACE, theta=theta, seed=seed)
+    if policy == "s3fifo" and capacity < 2:
+        # the degenerate split (m_cap == 0) must be rejected on BOTH sides
+        for backend, kw in (("py", {}),
+                            ("jax", dict(key_space=KEY_SPACE, pad_to=pad))):
+            _assert_degenerate_capacity_rejected(policy, capacity, trace,
+                                                 seed, backend, **kw)
+        return
+    h_py, o_py = run_cache_trace(policy, capacity, trace, seed=seed,
+                                 backend="py")
+    h_jx, o_jx = run_cache_trace(policy, capacity, trace, seed=seed,
+                                 backend="jax", key_space=KEY_SPACE,
+                                 pad_to=pad)
+    assert np.array_equal(h_py, np.asarray(h_jx))
+    assert np.array_equal(o_py, np.asarray(o_jx))
+
+
+_register(
+    "replay_scan_differential", _check_replay_scan,
+    "policy,theta,capacity,seed,pad",
+    [("lru", 0.9, 8, 0, 97), ("fifo", 0.0, 96, 1, 128),
+     ("clock", 1.2, 3, 2, 97), ("slru", 0.7, 33, 3, 128),
+     ("s3fifo", 0.99, 17, 4, 128), ("sieve", 0.5, 80, 5, 97),
+     ("prob_lru", 0.8, 12, 6, 128), ("s3fifo", 0.9, 1, 7, 128)],
+    dict(policy=st.sampled_from(POLICIES),
+         theta=st.floats(0.0, 1.3),
+         capacity=st.integers(1, 96),  # up to 1.5x the key space
+         seed=st.integers(0, 2**16 - 1),
+         pad=st.sampled_from(PADS)) if HAS_HYP else None,
+)
+
+
+# ---------------------------------------------------------------------------
+# 2. Replay differential: py_ref oracle == pallas flat-state kernel.
+# ---------------------------------------------------------------------------
+
+
+def _check_replay_pallas(policy, theta, capacity, seed):
+    trace = zipf_trace(TRACE_LEN, KEY_SPACE, theta=theta, seed=seed)
+    if policy == "s3fifo" and capacity < 2:
+        _assert_degenerate_capacity_rejected(
+            policy, capacity, trace, seed, "pallas",
+            key_space=KEY_SPACE, pad_to=PADS[-1])
+        return
+    h_py, o_py = run_cache_trace(policy, capacity, trace, seed=seed,
+                                 backend="py")
+    h_pl, o_pl = run_cache_trace(policy, capacity, trace, seed=seed,
+                                 backend="pallas", key_space=KEY_SPACE,
+                                 pad_to=PADS[-1])
+    assert np.array_equal(h_py, np.asarray(h_pl))
+    assert np.array_equal(o_py, np.asarray(o_pl))
+
+
+_register(
+    "replay_pallas_differential", _check_replay_pallas,
+    "policy,theta,capacity,seed",
+    [("lru", 0.9, 8, 0), ("clock", 0.3, 70, 1), ("s3fifo", 1.1, 16, 2),
+     ("s3fifo", 0.9, 1, 3)],
+    dict(policy=st.sampled_from(POLICIES),
+         theta=st.floats(0.0, 1.3),
+         capacity=st.integers(1, 96),
+         seed=st.integers(0, 2**16 - 1)) if HAS_HYP else None,
+)
+
+
+# ---------------------------------------------------------------------------
+# 3. Delayed-hit classification: vmapped window pass == py oracle.
+# ---------------------------------------------------------------------------
+
+
+def _check_classify(theta, window, fail_prob, seed, per_request):
+    from repro.cache.replay import classify_inflight
+
+    trace = zipf_trace(TRACE_LEN, KEY_SPACE, theta=theta, seed=seed)
+    hits, _ = run_cache_trace("lru", 16, trace, seed=seed, backend="py")
+    if per_request:  # each fetch carries its own miss latency
+        win = window + (np.arange(TRACE_LEN, dtype=np.int64) % 3)
+    else:
+        win = window
+    ref = classify_inflight_py(trace, hits, win, fail_prob=fail_prob,
+                               fail_seed=seed)
+    dev = classify_inflight(trace, hits, win, key_space=KEY_SPACE,
+                            fail_prob=fail_prob, fail_seed=seed)
+    assert np.array_equal(np.asarray(ref), np.asarray(dev))
+
+
+_register(
+    "classify_inflight_differential", _check_classify,
+    "theta,window,fail_prob,seed,per_request",
+    [(0.9, 0, 0.0, 0, False), (0.9, 5, 0.0, 1, False),
+     (0.3, 9, 0.3, 2, True), (1.2, 2, 0.0, 3, True)],
+    dict(theta=st.floats(0.0, 1.3),
+         window=st.integers(0, 12),
+         fail_prob=st.sampled_from([0.0, 0.3]),
+         seed=st.integers(0, 2**16 - 1),
+         per_request=st.booleans()) if HAS_HYP else None,
+)
+
+
+# ---------------------------------------------------------------------------
+# 4. Mattson sweep: stack-distance LRU == replayed grid, every capacity.
+# ---------------------------------------------------------------------------
+
+SWEEP_CAPS = (1, 2, 3, 5, 8, 13, 21, 34, 64, 80)
+
+
+def _check_mattson(theta, seed):
+    from repro.cache.replay import lru_sweep, replay_grid
+
+    trace = zipf_trace(TRACE_LEN, KEY_SPACE, theta=theta, seed=seed)
+    us = coin_stream(TRACE_LEN, seed)
+    h_sweep, o_sweep = lru_sweep(trace, SWEEP_CAPS)
+    grid = replay_grid("lru", trace, us, SWEEP_CAPS,
+                       key_space=KEY_SPACE, pad_to=PADS[-1])
+    assert np.array_equal(h_sweep, np.asarray(grid.hits)[:, 0])
+    assert np.array_equal(o_sweep, np.asarray(grid.ops)[:, 0])
+
+
+_register(
+    "mattson_sweep_differential", _check_mattson,
+    "theta,seed",
+    [(0.0, 0), (0.6, 1), (0.99, 2), (1.3, 3)],
+    dict(theta=st.floats(0.0, 1.3),
+         seed=st.integers(0, 2**16 - 1)) if HAS_HYP else None,
+)
+
+
+# ---------------------------------------------------------------------------
+# 5. Event simulator: vmapped JAX kernel ~= heapq oracle (X and delayed).
+# ---------------------------------------------------------------------------
+
+
+def _check_event_sim(policy, mpl, p, flows, seed):
+    from repro.core.policy_models import build
+    from repro.core.py_sim import simulate_py
+    from repro.core.simulator import simulate_network
+
+    net = build(policy, mpl=mpl)
+    res = simulate_network(net, [p], n_requests=8_000,
+                           seeds=(seed, seed + 1), coalesce_flows=flows)
+    ref = simulate_py(net, p, n_requests=8_000, seed=seed,
+                      coalesce_flows=flows, full=True)
+    x_jax = float(res.throughput[0])
+    rel = abs(x_jax - ref["x"]) / max(x_jax, ref["x"])
+    # statistical twins: closed-loop X at high p is dominated by rare
+    # (expensive) misses, so the gate is loose; semantics bugs show up as
+    # order-of-magnitude splits, not 10-20% noise.
+    assert rel < 0.25, (policy, mpl, p, flows, x_jax, ref["x"])
+    if flows:
+        assert abs(float(res.delayed_frac[0]) - ref["delayed_frac"]) < 0.1
+
+
+_register(
+    "event_sim_differential", _check_event_sim,
+    "policy,mpl,p,flows,seed",
+    [("lru", 4, 0.3, 0, 0), ("lru", 12, 0.7, 4, 1),
+     ("fifo", 12, 0.5, 4, 2), ("fifo", 4, 0.9, 0, 3)],
+    dict(policy=st.sampled_from(["lru", "fifo"]),
+         mpl=st.sampled_from(MPLS),
+         p=st.floats(0.05, 0.9),
+         flows=st.sampled_from([0, 4]),
+         seed=st.sampled_from([0, 1, 2])) if HAS_HYP else None,
+)
+
+
+# ---------------------------------------------------------------------------
+# 6. Tiered twins: cross-tier MSHR JAX kernel ~= heapq oracle.
+# ---------------------------------------------------------------------------
+
+_TIERED = None
+
+
+def _tiered_model():
+    global _TIERED
+    if _TIERED is None:
+        from repro.hierarchy import hierarchy_network
+
+        _TIERED = hierarchy_network("lru", "lru", n_clients=2, n_shards=2,
+                                    mpl=16, disk_us=50.0)
+    return _TIERED
+
+
+def _check_tiered_twins(p, flows, seed):
+    from repro.hierarchy.sim import simulate_hierarchy, simulate_hierarchy_py
+
+    model = _tiered_model()
+    res = simulate_hierarchy(model, [p], n_requests=10_000,
+                             seeds=(seed, seed + 1), coalesce_flows=flows)
+    ref = simulate_hierarchy_py(model, p, n_requests=10_000, seed=seed,
+                                coalesce_flows=flows)
+    x_jax = float(res.throughput[0])
+    x_ref = float(ref.throughput[0])
+    assert abs(x_jax - x_ref) / max(x_jax, x_ref) < 0.2, (p, flows, seed)
+    assert abs(float(res.delayed_l1_frac[0])
+               - float(ref.delayed_l1_frac[0])) < 0.1
+    assert abs(float(res.delayed_l2_frac[0])
+               - float(ref.delayed_l2_frac[0])) < 0.06
+
+
+_register(
+    "tiered_twins_differential", _check_tiered_twins,
+    "p,flows,seed",
+    [(0.2, 2, 0), (0.5, 4, 1), (0.8, 2, 2)],
+    dict(p=st.floats(0.1, 0.9),
+         flows=st.sampled_from([2, 4]),
+         seed=st.sampled_from([0, 1])) if HAS_HYP else None,
+)
+
+
+# ---------------------------------------------------------------------------
+# 7. Analytic invariants (pure numpy - cheap, fully random).
+# ---------------------------------------------------------------------------
+
+PROFILE_CAPS = (4, 8, 16, 32, 64, 96)
+
+
+def _check_analytic_invariants(theta, p, l2_cap, seed):
+    from repro.cluster.model import zipf_key_probs
+    from repro.core.policy_models import build
+    from repro.hierarchy import tiered_profile
+
+    q = zipf_key_probs(128, theta=theta, seed=seed)
+    prof = tiered_profile(q, PROFILE_CAPS, l2_cap, np.arange(128) % 2)
+    h1 = np.asarray(prof.l1_hit)
+    assert np.all((h1 >= 0.0) & (h1 <= 1.0))
+    assert np.all(np.diff(h1) >= -1e-9)  # Che hit is monotone in capacity
+    assert np.all((prof.l2_hit >= -1e-12) & (prof.l2_hit <= 1.0 + 1e-12))
+    live = h1 < 0.999  # rows with a non-vanishing L1 miss stream
+    assert np.allclose(prof.shard_weights[live].sum(axis=1), 1.0, atol=1e-9)
+
+    net = build("lru", mpl=24)
+    upper = net.throughput_upper(p)
+    assert net.mva_throughput(p) <= upper * (1.0 + 1e-7)
+    assert 0.0 <= net.p_star(grid=501) <= 1.0
+
+    hier = _tiered_model()
+    tot = sum(b.probability(p) for b in hier.network.branches)
+    assert tot == pytest.approx(1.0, abs=1e-9)
+
+
+_register(
+    "analytic_invariants", _check_analytic_invariants,
+    "theta,p,l2_cap,seed",
+    [(0.0, 0.1, 4.0, 0), (0.8, 0.5, 16.0, 1), (1.3, 0.9, 48.0, 2)],
+    dict(theta=st.floats(0.0, 1.3),
+         p=st.floats(0.0, 1.0),
+         l2_cap=st.floats(2.0, 64.0),
+         seed=st.integers(0, 2**16 - 1)) if HAS_HYP else None,
+)

@@ -243,7 +243,46 @@ def test_forecast_network_cluster(attn_model):
     saturated = dataclasses.replace(skewed, mpl=10**6)
     sat_single = dataclasses.replace(single, mpl=10**6)
     assert saturated.p_star(grid=2001) < sat_single.p_star(grid=2001)
-    # coalescing + sharding are mutually exclusive in the analytic path
-    with pytest.raises(ValueError):
-        eng.forecast_network(step_us=6000.0, prefill_us=40.0,
-                             coalesce_flows=8)
+    # coalescing now composes with sharding: one shard-local sigma_k
+    # fixed point per sK:disk (prefill dedup never spans shards)
+    coal = eng.forecast_network(step_us=6000.0, prefill_us=40.0,
+                                coalesce_flows=8)
+    coal.validate()
+    names = {s.name for s in coal.stations}
+    assert {f"s{k}:inflight" for k in range(4)} <= names
+    assert any(b.name.endswith("_delayed") for b in coal.branches)
+
+
+def test_forecast_network_tiers(attn_model):
+    """tiers=N lifts the measured-profile forecast to a cache hierarchy:
+    N client-local L1 pods -> n_shards L2 pods -> prefill origin, still
+    one ClosedNetwork with p*/MVA working unchanged."""
+    cfg, params = attn_model
+    reqs = zipf_request_stream(6, n_prefixes=3, prefix_len=16,
+                               vocab=cfg.vocab, seed=7, new_tokens=4)
+    eng = Engine(cfg, params, ServeConfig(
+        max_seqs=2, max_seq_len=128, page_size=8, n_pages=64,
+        prefix_capacity=32, policy="lru", max_new_tokens=4, cores=8,
+        n_shards=2))
+    for _, t in reqs:
+        eng.submit(t)
+    eng.run()
+
+    single = eng.forecast_network(step_us=6000.0, prefill_us=40.0,
+                                  n_shards=1)
+    hnet = eng.forecast_network(step_us=6000.0, prefill_us=40.0, tiers=3)
+    hnet.validate()
+    assert hnet.mpl == 3 * single.mpl
+    names = {s.name for s in hnet.stations}
+    assert any(n.startswith("l1_2:") for n in names)
+    assert any(n.startswith("l2_1:") for n in names)
+    assert 0.0 < hnet.p_star(grid=501) <= 1.0
+    assert sum(b.probability(0.6) for b in hnet.branches) == pytest.approx(
+        1.0, abs=1e-9)
+    # cross-tier coalescing applies on top
+    cnet = eng.forecast_network(step_us=6000.0, prefill_us=40.0, tiers=3,
+                                coalesce_flows=4)
+    cnames = {s.name for s in cnet.stations}
+    assert {"l1:inflight", "l2:inflight"} <= cnames
+    assert sum(b.probability(0.6) for b in cnet.branches) == pytest.approx(
+        1.0, abs=1e-9)

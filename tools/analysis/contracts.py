@@ -104,6 +104,17 @@ REGISTRY: Tuple[TwinPair, ...] = (
         },
     ),
     TwinPair(
+        name="hierarchy-simulator",
+        fast="repro.hierarchy.sim:simulate_hierarchy",
+        oracle="repro.hierarchy.sim:simulate_hierarchy_py",
+        fast_only=("p_hits", "seeds"),
+        oracle_only=("p_hit", "seed"),
+        default_exempt={
+            "n_requests": "heapq oracle runs shorter traces (statistical "
+                          "agreement, not bit-identity)",
+        },
+    ),
+    TwinPair(
         name="pallas-replay-grid",
         fast="repro.kernels.replay:replay_grid_pallas",
         oracle="repro.cache.replay:replay_grid",
@@ -117,10 +128,10 @@ REGISTRY: Tuple[TwinPair, ...] = (
         fast="repro.kernels.event_sim:simulate_grid_pallas",
         oracle="repro.core.simulator:simulate_network",
         fast_only=("interpret",),
-        # the scan simulator keeps the coalescing / open-loop / burst
-        # extensions (and the backend switch that routes here).
+        # the scan simulator keeps the coalescing / open-loop / burst /
+        # tiered-MSHR extensions (and the backend switch that routes here).
         oracle_only=("coalesce_flows", "coalesce_theta", "arrival_rate",
-                     "max_in_system", "burst", "backend"),
+                     "max_in_system", "burst", "backend", "tiers"),
     ),
     TwinPair(
         name="mattson-sweep",
