@@ -29,3 +29,58 @@ class timer:
 
     def __exit__(self, *a):
         self.elapsed = time.time() - self.t0
+
+
+class compile_monitor:
+    """Wall / compile-time split for a benchmark block.
+
+    Sums the durations of JAX compilation events (``jax.monitoring``
+    ``.../backend_compile...`` and friends — anything whose event name
+    contains ``"compil"``) that fire while the block runs, so bench
+    artifacts can report how much of a bench's wall time was tracing +
+    XLA compilation versus actual execution.  Listener registration is
+    process-global and permanent (jax exposes no unregister), so one
+    listener is installed lazily and dispatches to whichever monitors
+    are currently active; falls back to a zero compile split when the
+    monitoring hooks are unavailable.
+    """
+
+    _installed = False
+    _active: list = []
+
+    def __enter__(self):
+        self.compile_s = 0.0
+        self.wall_s = 0.0
+        self.t0 = time.time()
+        cls = type(self)
+        if not cls._installed:
+            try:
+                import jax
+
+                jax.monitoring.register_event_duration_secs_listener(
+                    cls._on_event
+                )
+                cls._installed = True
+            except Exception:
+                pass
+        cls._active.append(self)
+        return self
+
+    @classmethod
+    def _on_event(cls, event: str, duration: float, **kw) -> None:
+        if "compil" in event:
+            for mon in cls._active:
+                mon.compile_s += duration
+
+    def __exit__(self, *a):
+        self.wall_s = time.time() - self.t0
+        type(self)._active.remove(self)
+
+    @property
+    def split(self) -> dict:
+        """``{wall_s, compile_s, run_s}`` for the monitored block."""
+        return {
+            "wall_s": self.wall_s,
+            "compile_s": self.compile_s,
+            "run_s": max(self.wall_s - self.compile_s, 0.0),
+        }

@@ -56,22 +56,27 @@ class ClusterSimResult:
     shard_delayed_frac: np.ndarray  # (P, N)
     delayed_frac: np.ndarray  # (P,)
     n_requests: int
+    # [seed][p] per-request TraceRecords when trace=K was requested (the
+    # record's branch id resolves to a shard via model.branch_shard).
+    traces: list | None = None
 
 
 def simulate_cluster(model: ClusterModel, p_hits, n_requests: int = 40_000,
                      seeds=(0, 1, 2), warmup_frac: float = 0.25,
                      coalesce_flows: int = 0, coalesce_theta: float = 0.0,
-                     ) -> ClusterSimResult:
+                     trace: int = 0) -> ClusterSimResult:
     """Simulate the composed cluster over a grid of *global* hit ratios.
 
     ``coalesce_flows`` is the per-shard MSHR hot-flow count (each shard's
-    disk owns its own flow group).  Everything else matches
+    disk owns its own flow group); ``trace=K`` keeps the last K
+    per-request trace records per lane (see :mod:`repro.obs.trace`).
+    Everything else matches
     :func:`repro.core.simulator.simulate_network`, which this wraps.
     """
     res = simulate_network(model.network, p_hits, n_requests=n_requests,
                            seeds=seeds, warmup_frac=warmup_frac,
                            coalesce_flows=coalesce_flows,
-                           coalesce_theta=coalesce_theta)
+                           coalesce_theta=coalesce_theta, trace=trace)
     shard = np.asarray(model.branch_shard)
     is_hit = ~np.asarray(model.branch_has_disk)
     N = model.n_shards
@@ -92,6 +97,7 @@ def simulate_cluster(model: ClusterModel, p_hits, n_requests: int = 40_000,
         p_hit=res.p_hit, throughput=res.throughput, ci95=res.ci95,
         shard_throughput=sx, shard_hit_ratio=shit, shard_delayed_frac=sdel,
         delayed_frac=res.delayed_frac, n_requests=n_requests,
+        traces=res.traces,
     )
 
 

@@ -32,6 +32,7 @@ from repro.core.simulator import (
     CLS_MISS,
     compile_network,
 )
+from repro.obs.trace import PyTraceCollector
 
 
 def _flow_sampler(rng: random.Random, flows: int, theta: float):
@@ -57,6 +58,7 @@ def simulate_py(
     max_in_system: int = 128,
     burst=None,
     tiers=None,
+    trace: int = 0,
 ):
     """Simulate and return throughput in requests/µs.
 
@@ -92,6 +94,14 @@ def simulate_py(
     its followers).  Needs ``coalesce_flows > 0``; with 0 the annotations
     are ignored (the no-coalescing reference).  The oracle twin of
     ``simulate_network(tiers=...)``.
+
+    ``trace > 0`` collects per-request trace records in the
+    :mod:`repro.obs.trace` schema (same capping semantics as the JAX
+    kernels' ring buffers: the last ``trace`` records survive) and
+    returns them under the ``"trace"`` key as a decoded
+    :class:`~repro.obs.trace.TraceRecords` — the oracle side of the
+    trace twin contract.  Closed/tiered modes require ``full=True``
+    (the bare-float return has nowhere to put the trace).
     """
     rng = random.Random(seed)
     spec = compile_network(net, p_hit)
@@ -120,26 +130,36 @@ def simulate_py(
     def new_branch() -> int:
         return int(np.searchsorted(cum, rng.random()))
 
+    vis_rank = disk_rank[np.maximum(visits, 0)]
+    branch_has_disk = ((vis_rank >= 0) & (visits >= 0)).any(axis=1)
+    if trace and arrival_rate is None and not full:
+        raise ValueError("trace > 0 requires full=True in closed/tiered "
+                         "modes (the bare-float return drops the records)")
     if tiers is not None and coalesce_flows:
         if arrival_rate is not None or burst is not None:
             raise ValueError("tiered MSHR coalescing runs the closed loop "
                              "only (no arrival_rate/burst)")
         tiers.validate(visits)
+        branch_is_miss = (branch_has_disk
+                          | (np.asarray(tiers.acq_group) >= 0).any(axis=1))
         return _simulate_py_tiered(
             rng, is_q, visits, servers, sample, new_branch, sample_flow,
             tiers, coalesce_flows, net.mpl, n_requests, warmup_frac, full,
+            branch_is_miss, trace,
         )
     if arrival_rate is not None:
         return _simulate_py_open(
             rng, is_q, svc, dist, cum, visits, servers, disk_rank, sample,
             new_branch, sample_flow, n_requests, warmup_frac,
             coalesce_flows, float(arrival_rate), max_in_system, burst,
+            trace,
         )
     if burst is not None:
         raise ValueError("burst arrivals require arrival_rate "
                          "(open-loop mode)")
 
     N = net.mpl
+    tr = PyTraceCollector(trace, N, visits.shape[1]) if trace else None
     heap: list = []
     queues = {k: [] for k in range(K) if is_q[k]}
     # busy count per queue station: jobs in service, <= servers[k] (matches
@@ -155,6 +175,8 @@ def simulate_py(
         b = new_branch()
         job_branch[j] = b
         k = int(visits[b, 0])
+        if tr is not None:
+            tr.start(j, 0.0)
         heapq.heappush(heap, (sample(k), j, k))
 
     t = 0.0
@@ -174,6 +196,17 @@ def simulate_py(
         branch_done[job_branch[j]] += 1
         if was_delayed:
             branch_delayed[job_branch[j]] += 1
+        if tr is not None:
+            if was_delayed:  # the park visit ends with the fill, now
+                parked_us = now - tr.enter_at(j, job_pos[j])
+                tr.leave(j, job_pos[j], now)
+                cls_j = CLS_DELAYED
+            else:
+                parked_us = 0.0
+                cls_j = (CLS_MISS if branch_has_disk[job_branch[j]]
+                         else CLS_HIT)
+            tr.complete(j, job_branch[j], cls_j, job_pos[j] + 1, parked_us)
+            tr.start(j, now)  # the fresh request enters its think station
         done += 1
         if warm_c is None and done >= warm_target:
             warm_c, warm_t, warm_d = done, now, delayed
@@ -187,6 +220,8 @@ def simulate_py(
 
     while done < n_requests:
         t, j, k = heapq.heappop(heap)
+        if tr is not None:  # j's service at its current visit ends now
+            tr.leave(j, job_pos[j], t)
 
         # MSHR fill: j's fetch landed — wake everyone parked on its flow.
         if coalesce_flows and disk_rank[k] >= 0 and job_flow[j] >= 0:
@@ -210,6 +245,8 @@ def simulate_py(
             complete(j, t)
             continue
         job_pos[j] = pos
+        if tr is not None:  # j enters its next visit now (queue, park or svc)
+            tr.enter(j, pos, t)
         k2 = int(visits[b, pos])
         if coalesce_flows and disk_rank[k2] >= 0:
             # flows are local to the disk (shard) the miss arrives at
@@ -237,12 +274,15 @@ def simulate_py(
         "branch_done": np.array(branch_done) - np.array(warm_bd),
         "branch_delayed": np.array(branch_delayed) - np.array(warm_bdel),
         "t_measured": t - warm_t,
+        "warm_done": warm_c,
+        "trace": tr.finish(visits) if tr is not None else None,
     }
 
 
 def _simulate_py_tiered(
     rng, is_q, visits, servers, sample, new_branch, sample_flow,
     tiers, coalesce_flows, mpl, n_requests, warmup_frac, full,
+    branch_is_miss=None, trace: int = 0,
 ):
     """Closed-loop heapq twin of simulator._simulate_tiered: cross-tier
     MSHR acquire/park/release driven by the MshrSpec annotation arrays,
@@ -266,10 +306,13 @@ def _simulate_py_tiered(
     job_held = [[-1] * max_held for _ in range(N)]
     job_branch = [0] * N
     job_pos = [0] * N
+    tr = PyTraceCollector(trace, N, visits.shape[1]) if trace else None
     for j in range(N):
         b = new_branch()
         job_branch[j] = b
         k = int(visits[b, 0])
+        if tr is not None:
+            tr.start(j, 0.0)
         heapq.heappush(heap, (sample(k), j, k))
 
     t = 0.0
@@ -290,6 +333,17 @@ def _simulate_py_tiered(
         branch_done[job_branch[j]] += 1
         if was_delayed:
             branch_delayed[job_branch[j]] += 1
+        if tr is not None:
+            if was_delayed:  # the park visit ends with the fill, now
+                parked_us = now - tr.enter_at(j, job_pos[j])
+                tr.leave(j, job_pos[j], now)
+                cls_j = CLS_DELAYED
+            else:
+                parked_us = 0.0
+                cls_j = (CLS_MISS if branch_is_miss[job_branch[j]]
+                         else CLS_HIT)
+            tr.complete(j, job_branch[j], cls_j, job_pos[j] + 1, parked_us)
+            tr.start(j, now)
         done += 1
         if warm_c is None and done >= warm_target:
             warm_c, warm_t, warm_d = done, now, delayed
@@ -322,6 +376,8 @@ def _simulate_py_tiered(
 
     while done < n_requests:
         t, j, k = heapq.heappop(heap)
+        if tr is not None:
+            tr.leave(j, job_pos[j], t)
 
         # fill: completing this visit may release one of j's held entries.
         b = job_branch[j]
@@ -342,6 +398,8 @@ def _simulate_py_tiered(
             complete(j, t)
             continue
         job_pos[j] = pos
+        if tr is not None:
+            tr.enter(j, pos, t)
         k2 = int(visits[b, pos])
         g = int(acq_group[b, pos])
         if g >= 0:
@@ -374,13 +432,15 @@ def _simulate_py_tiered(
         "branch_done": np.array(branch_done) - np.array(warm_bd),
         "branch_delayed": np.array(branch_delayed) - np.array(warm_bdel),
         "t_measured": t - warm_t,
+        "warm_done": warm_c,
+        "trace": tr.finish(visits) if tr is not None else None,
     }
 
 
 def _simulate_py_open(
     rng, is_q, svc, dist, cum, visits, servers, disk_rank, sample,
     new_branch, sample_flow, n_requests, warmup_frac, coalesce_flows,
-    arrival_rate, max_in_system, burst=None,
+    arrival_rate, max_in_system, burst=None, trace: int = 0,
 ):
     """Open-loop heapq twin of simulator._simulate_open (same semantics:
     Poisson — or ON-OFF burst — arrivals into a bounded slot pool,
@@ -412,6 +472,7 @@ def _simulate_py_open(
     job_pos = [0] * N
     arrive_t = [0.0] * N
     free = list(range(N))
+    tr = PyTraceCollector(trace, N, visits.shape[1]) if trace else None
 
     records: list = []  # (sojourn, class) in completion order
     done = 0
@@ -422,6 +483,13 @@ def _simulate_py_open(
 
     def record(j: int, now: float, c: int) -> None:
         nonlocal done, warm_c, warm_t
+        if tr is not None:
+            if c == CLS_DELAYED:  # the park visit ends with the fill, now
+                parked_us = now - tr.enter_at(j, job_pos[j])
+                tr.leave(j, job_pos[j], now)
+            else:
+                parked_us = 0.0
+            tr.complete(j, job_branch[j], c, job_pos[j] + 1, parked_us)
         done += 1
         records.append((now - arrive_t[j], c))
         free.append(j)
@@ -468,9 +536,14 @@ def _simulate_py_open(
             job_branch[s] = b
             job_pos[s] = 0
             arrive_t[s] = t
+            if tr is not None:
+                tr.start(s, t)
             k0 = int(visits[b, 0])  # think station by network validation
             heapq.heappush(heap, (t + sample(k0), s, k0))
             continue
+
+        if tr is not None:  # j's service at its current visit ends now
+            tr.leave(j, job_pos[j], t)
 
         # MSHR fill: parked delayed hits complete with the fill.
         if coalesce_flows and disk_rank[k] >= 0 and job_flow[j] >= 0:
@@ -494,6 +567,8 @@ def _simulate_py_open(
             record(j, t, CLS_MISS if branch_has_disk[b] else CLS_HIT)
             continue
         job_pos[j] = pos
+        if tr is not None:
+            tr.enter(j, pos, t)
         k2 = int(visits[b, pos])
         if coalesce_flows and disk_rank[k2] >= 0:
             f = int(disk_rank[k2]) * F + sample_flow()
@@ -527,4 +602,6 @@ def _simulate_py_open(
         "delayed_frac": float((cls == CLS_DELAYED).mean()),
         "dropped": dropped,
         "drop_frac": dropped / max(done + dropped, 1),
+        "warm_done": warm_c,
+        "trace": tr.finish(visits) if tr is not None else None,
     }

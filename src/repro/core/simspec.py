@@ -227,3 +227,7 @@ class SimResult:
     # (client-local L1 coalescing), later columns the deeper tables
     # (shard-local origin coalescing).  None for non-tiered runs.
     delayed_tier_frac: np.ndarray | None = None
+    # decoded per-lane trace records ([seed][p] repro.obs.trace
+    # TraceRecords); None unless the run requested in-kernel tracing
+    # (simulate_network(trace=K) / simulate_grid_pallas(trace=K)).
+    traces: list | None = None

@@ -68,6 +68,8 @@ import numpy as np
 from repro.core.queueing import ClosedNetwork
 from repro.core.simspec import (BIG_SEQ, INF_NS, SimResult, SimSpec,
                                 compile_network, stack_specs)
+from repro.obs.trace import (TraceScratch, decode_trace_grid, init_trace,
+                             ring_write_many, ring_write_one)
 
 __all__ = [
     "BIG_SEQ", "INF_NS", "SimResult", "SimSpec", "OpenSimResult",
@@ -152,14 +154,20 @@ class _SimState(NamedTuple):
 
 @partial(jax.jit,
          static_argnames=("n_requests", "warmup", "mpl", "max_events",
-                          "n_flows", "flow_theta", "n_disks"))
+                          "n_flows", "flow_theta", "n_disks", "trace_cap"))
 def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
               max_events: int, n_flows: int = 0,
-              flow_theta: float = 0.0, n_disks: int = 1) -> tuple:
+              flow_theta: float = 0.0, n_disks: int = 1,
+              trace_cap: int = 0) -> tuple:
     N = mpl
     F = max(n_flows, 1)  # leader-table shape must be static even when unused
+    L = spec.visits.shape[1]
     B = spec.branch_cum.shape[0]
     key = jax.random.PRNGKey(seed)
+    if trace_cap:
+        # sojourn class of a completed branch: any disk visit => miss route
+        vis_rank = spec.disk_rank[jnp.maximum(spec.visits, 0)]
+        branch_has_disk = ((vis_rank >= 0) & (spec.visits >= 0)).any(axis=1)
 
     def sample_branch(key):
         u = jax.random.uniform(key, ())
@@ -196,13 +204,16 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         warm_branch_done=jnp.zeros((B,), jnp.int32),
         warm_branch_delayed=jnp.zeros((B,), jnp.int32),
     )
+    tr0 = init_trace(trace_cap, N, L)
 
     def cond(carry):
-        state, events = carry
+        state, events, _tr = carry
         return (state.completed < n_requests) & (events < max_events)
 
     def body(carry):
-        state, events = carry
+        state, events, tr = carry
+        if trace_cap:
+            rings, scr = tr
         if n_flows:
             (key, k_svc1, k_svc2, k_branch, k_flow, k_wake_b,
              k_wake_s) = jax.random.split(state.key, 7)
@@ -249,6 +260,22 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             wcount = woken.astype(jnp.int32)
             branch_done = branch_done.at[branch].add(wcount)
             branch_delayed = branch_delayed.at[branch].add(wcount)
+            if trace_cap:
+                # the woken requests' park visit ends now; they completed
+                # their whole parked interval at the visit they parked at.
+                rows = jnp.where(woken, jnp.arange(N), N)
+                leave_m = scr.leave_us.at[rows, pos].set(elapsed_us)
+                parked_w = elapsed_us - scr.enter_us[jnp.arange(N), pos]
+                rings = ring_write_many(
+                    rings, woken, state.completed, branch,
+                    jnp.full((N,), CLS_DELAYED, jnp.int32), pos + 1,
+                    jnp.where(woken, parked_w, 0.0), scr.enter_us, leave_m,
+                )
+                # the fresh requests the woken jobs start enter visit 0 now
+                scr = TraceScratch(
+                    enter_us=scr.enter_us.at[rows, 0].set(elapsed_us),
+                    leave_us=leave_m,
+                )
             ready = jnp.where(woken, wake_svc, ready)
             station = jnp.where(woken, wake_station, station)
             branch = jnp.where(woken, wake_branch, branch)
@@ -286,7 +313,6 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
 
         # ---- advance job j along its route (or complete + start new request).
         nxt_pos = pos[j] + 1
-        L = spec.visits.shape[1]
         route_next = jnp.where(nxt_pos < L, spec.visits[branch[j], nxt_pos % L], -1)
         done = route_next < 0
 
@@ -295,6 +321,19 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         branch_j = jnp.where(done, new_branch, branch[j])
         pos_j = jnp.where(done, 0, nxt_pos)
         k_next = jnp.where(done, spec.visits[new_branch, 0], route_next)
+        if trace_cap:
+            # j's visit ends now; on completion, emit its record (req id
+            # follows the woken jobs retired above, matching `completed`).
+            leave_m = scr.leave_us.at[j, pos[j]].set(elapsed_us)
+            cls_j = jnp.where(branch_has_disk[branch[j]], CLS_MISS,
+                              CLS_HIT).astype(jnp.int32)
+            rings = ring_write_one(rings, done, completed, branch[j], cls_j,
+                                   pos[j] + 1, jnp.float32(0.0),
+                                   scr.enter_us[j], leave_m[j])
+            scr = TraceScratch(
+                enter_us=scr.enter_us.at[j, pos_j].set(elapsed_us),
+                leave_us=leave_m,
+            )
         completed = completed + done.astype(jnp.int32)
 
         # ---- place j at k_next.
@@ -357,9 +396,11 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             warm_branch_done=warm_branch_done,
             warm_branch_delayed=warm_branch_delayed,
         )
-        return new_state, events + 1
+        return new_state, events + 1, ((rings, scr) if trace_cap else tr)
 
-    state, events = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    state, events, tr = jax.lax.while_loop(
+        cond, body, (state, jnp.int32(0), tr0)
+    )
 
     n_measured = state.completed - state.warm_completed
     t_measured = state.elapsed_us - state.warm_elapsed_us
@@ -368,10 +409,13 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         (state.delayed - state.warm_delayed).astype(jnp.float32)
         / jnp.maximum(n_measured, 1).astype(jnp.float32)
     )
-    return (x, state.completed, events, delayed_frac,
-            state.branch_done - state.warm_branch_done,
-            state.branch_delayed - state.warm_branch_delayed,
-            jnp.maximum(t_measured, 1e-6))
+    out = (x, state.completed, events, delayed_frac,
+           state.branch_done - state.warm_branch_done,
+           state.branch_delayed - state.warm_branch_delayed,
+           jnp.maximum(t_measured, 1e-6))
+    if trace_cap:
+        out = out + (tr[0],)
+    return out
 
 
 class _TieredState(NamedTuple):
@@ -413,12 +457,13 @@ class _TieredState(NamedTuple):
 
 @partial(jax.jit,
          static_argnames=("n_requests", "warmup", "mpl", "max_events",
-                          "n_flows", "flow_theta", "n_groups", "max_held"))
+                          "n_flows", "flow_theta", "n_groups", "max_held",
+                          "trace_cap"))
 def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
                      n_requests: int, warmup: int, mpl: int,
                      max_events: int, n_flows: int,
                      flow_theta: float = 0.0, n_groups: int = 1,
-                     max_held: int = 1) -> tuple:
+                     max_held: int = 1, trace_cap: int = 0) -> tuple:
     """Tiered (hierarchy) twin of :func:`_simulate`.
 
     The ``disk_rank`` convention is replaced by explicit
@@ -438,8 +483,15 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
     N = mpl
     F = n_flows
     GF = n_groups * F
+    L = spec.visits.shape[1]
     B = spec.branch_cum.shape[0]
     key = jax.random.PRNGKey(seed)
+    if trace_cap:
+        # a branch is a miss route if it ever acquires an MSHR entry or
+        # visits a disk-ranked station (the tiered networks use acq_*).
+        vis_rank = spec.disk_rank[jnp.maximum(spec.visits, 0)]
+        branch_has_disk = ((vis_rank >= 0) & (spec.visits >= 0)).any(axis=1)
+        branch_is_miss = branch_has_disk | (acq_group >= 0).any(axis=1)
 
     def sample_branch(key):
         u = jax.random.uniform(key, ())
@@ -478,13 +530,16 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
         warm_branch_done=jnp.zeros((B,), jnp.int32),
         warm_branch_delayed=jnp.zeros((B,), jnp.int32),
     )
+    tr0 = init_trace(trace_cap, N, L)
 
     def cond(carry):
-        state, events = carry
+        state, events, _tr = carry
         return (state.completed < n_requests) & (events < max_events)
 
     def body(carry):
-        state, events = carry
+        state, events, tr = carry
+        if trace_cap:
+            rings, scr = tr
         (key, k_svc1, k_svc2, k_branch, k_flow, k_wake_b,
          k_wake_s) = jax.random.split(state.key, 7)
 
@@ -546,6 +601,19 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
         delayed_lvl = delayed_lvl.at[
             jnp.where(woken, jnp.maximum(parked_lvl, 0), max_held)
         ].add(wcount)
+        if trace_cap:
+            rows = jnp.where(woken, jnp.arange(N), N)
+            leave_m = scr.leave_us.at[rows, pos].set(elapsed_us)
+            parked_w = elapsed_us - scr.enter_us[jnp.arange(N), pos]
+            rings = ring_write_many(
+                rings, woken, state.completed, branch,
+                jnp.full((N,), CLS_DELAYED, jnp.int32), pos + 1,
+                jnp.where(woken, parked_w, 0.0), scr.enter_us, leave_m,
+            )
+            scr = TraceScratch(
+                enter_us=scr.enter_us.at[rows, 0].set(elapsed_us),
+                leave_us=leave_m,
+            )
         wake_branch = jax.vmap(sample_branch)(jax.random.split(k_wake_b, N))
         wake_station = spec.visits[wake_branch, 0]
         wake_svc = jax.vmap(lambda k, s: _sample_service_ns(k, spec, s))(
@@ -585,7 +653,6 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
 
         # ---- advance job j (or complete + start a new request).
         nxt_pos = pos[j] + 1
-        L = spec.visits.shape[1]
         route_next = jnp.where(nxt_pos < L, spec.visits[branch[j], nxt_pos % L], -1)
         done = route_next < 0
 
@@ -594,6 +661,17 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
         branch_j = jnp.where(done, new_branch, branch[j])
         pos_j = jnp.where(done, 0, nxt_pos)
         k_next = jnp.where(done, spec.visits[new_branch, 0], route_next)
+        if trace_cap:
+            leave_m = scr.leave_us.at[j, pos[j]].set(elapsed_us)
+            cls_j = jnp.where(branch_is_miss[branch[j]], CLS_MISS,
+                              CLS_HIT).astype(jnp.int32)
+            rings = ring_write_one(rings, done, completed, branch[j], cls_j,
+                                   pos[j] + 1, jnp.float32(0.0),
+                                   scr.enter_us[j], leave_m[j])
+            scr = TraceScratch(
+                enter_us=scr.enter_us.at[j, pos_j].set(elapsed_us),
+                leave_us=leave_m,
+            )
         completed = completed + done.astype(jnp.int32)
 
         # ---- place j at k_next, acquiring / parking on the MSHR tables.
@@ -668,9 +746,11 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
             warm_branch_done=warm_branch_done,
             warm_branch_delayed=warm_branch_delayed,
         )
-        return new_state, events + 1
+        return new_state, events + 1, ((rings, scr) if trace_cap else tr)
 
-    state, events = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    state, events, tr = jax.lax.while_loop(
+        cond, body, (state, jnp.int32(0), tr0)
+    )
 
     n_measured = state.completed - state.warm_completed
     t_measured = state.elapsed_us - state.warm_elapsed_us
@@ -684,11 +764,14 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
         .astype(jnp.float32)
         / jnp.maximum(n_measured, 1).astype(jnp.float32)
     )
-    return (x, state.completed, events, delayed_frac,
-            state.branch_done - state.warm_branch_done,
-            state.branch_delayed - state.warm_branch_delayed,
-            jnp.maximum(t_measured, 1e-6),
-            tier_delayed)
+    out = (x, state.completed, events, delayed_frac,
+           state.branch_done - state.warm_branch_done,
+           state.branch_delayed - state.warm_branch_delayed,
+           jnp.maximum(t_measured, 1e-6),
+           tier_delayed)
+    if trace_cap:
+        out = out + (tr[0],)
+    return out
 
 
 class _OpenState(NamedTuple):
@@ -720,11 +803,11 @@ class _OpenState(NamedTuple):
 @partial(jax.jit,
          static_argnames=("n_requests", "warmup", "max_in_system",
                           "max_events", "n_flows", "flow_theta", "n_disks",
-                          "burst"))
+                          "burst", "trace_cap"))
 def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                    warmup: int, max_in_system: int, max_events: int,
                    n_flows: int = 0, flow_theta: float = 0.0,
-                   n_disks: int = 1, burst=None) -> tuple:
+                   n_disks: int = 1, burst=None, trace_cap: int = 0) -> tuple:
     """Arrival-driven (open-loop) twin of :func:`_simulate`.
 
     One extra event type — a Poisson arrival — competes with service
@@ -750,6 +833,7 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
     N = max_in_system
     F = max(n_flows, 1)
     R = n_requests + N  # a fill can complete up to N-1 parked jobs past n_requests
+    L = spec.visits.shape[1]
     key = jax.random.PRNGKey(seed)
     vis_rank = spec.disk_rank[jnp.maximum(spec.visits, 0)]
     branch_has_disk = ((vis_rank >= 0) & (spec.visits >= 0)).any(axis=1)
@@ -807,13 +891,14 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
         phase_on=jnp.bool_(True),
         phase_to_ns=phase_to0,
     )
+    tr0 = init_trace(trace_cap, N, L)
 
     def cond(carry):
-        state, events = carry
+        state, events, _tr = carry
         return (state.completed < n_requests) & (events < max_events)
 
     def body(carry):
-        state, events = carry
+        state, events, tr = carry
         n_keys = 7 if n_flows else 6
         if burst is not None:
             n_keys += 2
@@ -853,8 +938,9 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                              state.age_us),
         )
 
-        def toggle(s: _OpenState) -> _OpenState:
+        def toggle(args):
             # ON -> OFF: arrivals pause; OFF -> ON: fresh arrival clock.
+            s, tr = args
             going_on = ~s.phase_on
             return s._replace(
                 phase_on=going_on,
@@ -862,15 +948,25 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                                           jnp.int32(INF_NS)),
                 phase_to_ns=jnp.where(going_on, exp_ns(k_tog_p, mean_on_ns),
                                       exp_ns(k_tog_p, mean_off_ns)),
-            )
+            ), tr
 
-        def arrive(s: _OpenState) -> _OpenState:
+        def arrive(args):
+            s, tr = args
             free = s.station < 0
             admit = free.any()
             slot = jnp.argmax(free).astype(jnp.int32)
             b = sample_branch(k_branch)
             st0 = spec.visits[b, 0]  # think station by network validation
             svc = _sample_service_ns(k_svc0, spec, st0)
+            if trace_cap:
+                rings, scr = tr
+                # the admitted request enters its first visit now
+                row = jnp.where(admit, slot, N)
+                scr = TraceScratch(
+                    enter_us=scr.enter_us.at[row, 0].set(s.elapsed_us),
+                    leave_us=scr.leave_us,
+                )
+                tr = (rings, scr)
             return s._replace(
                 ready_ns=jnp.where(admit, s.ready_ns.at[slot].set(svc),
                                    s.ready_ns),
@@ -882,9 +978,12 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                                  s.age_us),
                 dropped=s.dropped + (~admit).astype(jnp.int32),
                 next_arrival_ns=interarrival(k_ia),
-            )
+            ), tr
 
-        def depart(s: _OpenState) -> _OpenState:
+        def depart(args):
+            s, tr = args
+            if trace_cap:
+                rings, scr = tr
             ready, station, branch = s.ready_ns, s.station, s.branch
             pos, enq_seq, busy_count = s.pos, s.enq_seq, s.busy_count
             flow, leader = s.flow, s.leader
@@ -902,6 +1001,19 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                 widx = jnp.where(woken, completed + jnp.cumsum(woken) - 1, R)
                 soj_us = soj_us.at[widx].set(now_soj)  # OOB rows dropped
                 cls = cls.at[widx].set(jnp.int8(CLS_DELAYED))
+                if trace_cap:
+                    rows = jnp.where(woken, jnp.arange(N), N)
+                    leave_m = scr.leave_us.at[rows, pos].set(s.elapsed_us)
+                    parked_w = (s.elapsed_us
+                                - scr.enter_us[jnp.arange(N), pos])
+                    rings = ring_write_many(
+                        rings, woken, completed, branch,
+                        jnp.full((N,), CLS_DELAYED, jnp.int32), pos + 1,
+                        jnp.where(woken, parked_w, 0.0), scr.enter_us,
+                        leave_m,
+                    )
+                    scr = TraceScratch(enter_us=scr.enter_us,
+                                       leave_us=leave_m)
                 n_woken = woken.sum().astype(jnp.int32)
                 completed = completed + n_woken
                 delayed = delayed + n_woken
@@ -938,7 +1050,6 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
 
             # ---- advance along the route, or record the finished request.
             nxt_pos = pos[j] + 1
-            L = spec.visits.shape[1]
             route_next = jnp.where(
                 nxt_pos < L, spec.visits[branch[j], nxt_pos % L], -1
             )
@@ -949,6 +1060,21 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                 jnp.where(branch_has_disk[branch[j]], CLS_MISS,
                           CLS_HIT).astype(jnp.int8)
             )
+            if trace_cap:
+                leave_m = scr.leave_us.at[j, pos[j]].set(s.elapsed_us)
+                cls_j = jnp.where(branch_has_disk[branch[j]], CLS_MISS,
+                                  CLS_HIT).astype(jnp.int32)
+                rings = ring_write_one(rings, done, completed, branch[j],
+                                       cls_j, pos[j] + 1, jnp.float32(0.0),
+                                       scr.enter_us[j], leave_m[j])
+                # if j advances, it enters its next visit now
+                row = jnp.where(done, N, j)
+                scr = TraceScratch(
+                    enter_us=scr.enter_us.at[
+                        row, jnp.minimum(nxt_pos, L - 1)
+                    ].set(s.elapsed_us),
+                    leave_us=leave_m,
+                )
             completed = completed + done.astype(jnp.int32)
 
             # ---- place j at its next station (no-op masks when done).
@@ -993,19 +1119,22 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                 flow=flow, leader=leader, delayed=delayed,
                 warm_delayed=jnp.where(warm_now, delayed, s.warm_delayed),
                 soj_us=soj_us, cls=cls,
-            )
+            ), ((rings, scr) if trace_cap else tr)
 
         if burst is not None:
-            new_state = jax.lax.cond(
+            new_state, tr = jax.lax.cond(
                 is_arrival, arrive,
-                lambda s: jax.lax.cond(is_toggle, toggle, depart, s),
-                state,
+                lambda a: jax.lax.cond(is_toggle, toggle, depart, a),
+                (state, tr),
             )
         else:
-            new_state = jax.lax.cond(is_arrival, arrive, depart, state)
-        return new_state, events + 1
+            new_state, tr = jax.lax.cond(is_arrival, arrive, depart,
+                                         (state, tr))
+        return new_state, events + 1, tr
 
-    state, events = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    state, events, tr = jax.lax.while_loop(
+        cond, body, (state, jnp.int32(0), tr0)
+    )
 
     n_measured = state.completed - state.warm_completed
     t_measured = state.elapsed_us - state.warm_elapsed_us
@@ -1014,8 +1143,11 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
         (state.delayed - state.warm_delayed).astype(jnp.float32)
         / jnp.maximum(n_measured, 1).astype(jnp.float32)
     )
-    return (x, state.completed, events, delayed_frac, state.dropped,
-            state.soj_us, state.cls)
+    out = (x, state.completed, events, delayed_frac, state.dropped,
+           state.soj_us, state.cls)
+    if trace_cap:
+        out = out + (tr[0],)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1046,6 +1178,9 @@ class OpenSimResult:
     # (deep overload): their statistics cover fewer completions than asked.
     truncated: np.ndarray
     n_requests: int
+    # decoded per-lane trace records ([seed][p] TraceRecords), None unless
+    # simulate_network(trace=K) requested in-kernel trace rings.
+    traces: list | None = None
 
 
 def simulate_network(
@@ -1061,6 +1196,7 @@ def simulate_network(
     burst=None,
     backend: str = "jax",
     tiers=None,
+    trace: int = 0,
 ):
     """Simulate ``net`` over a grid of hit ratios.
 
@@ -1109,6 +1245,15 @@ def simulate_network(
     at (column 0: client-local L1 table; later: shard-local origin
     tables).
 
+    ``trace > 0`` fills a fixed-capacity in-kernel ring buffer of
+    per-request trace records (:mod:`repro.obs.trace`) per lane — ``trace``
+    is the ring capacity (a static shape; on overflow the **last** ``trace``
+    records survive and the drop count is reported).  The decoded
+    ``[seed][p]`` :class:`~repro.obs.trace.TraceRecords` land on the
+    result's ``traces`` field.  ``trace=0`` (default) compiles no tracing
+    at all and is bit-identical to the untraced simulator; tracing draws
+    no RNG, so enabling it does not perturb the simulated system either.
+
     ``backend="pallas"`` routes the closed-loop grid to the accelerator
     event-sim kernel (:func:`repro.kernels.event_sim.simulate_grid_pallas`)
     — the whole (p_hit x seed) grid as one pallas dispatch with per-lane
@@ -1130,7 +1275,8 @@ def simulate_network(
         from repro.kernels.event_sim import simulate_grid_pallas  # lazy
 
         return simulate_grid_pallas(net, p_hits, n_requests=n_requests,
-                                    seeds=seeds, warmup_frac=warmup_frac)
+                                    seeds=seeds, warmup_frac=warmup_frac,
+                                    trace=trace)
     p_hits = np.atleast_1d(np.asarray(p_hits, dtype=np.float64))
     specs = [compile_network(net, float(p)) for p in p_hits]
     spec = stack_specs(specs)
@@ -1170,19 +1316,22 @@ def simulate_network(
                     flow_theta=coalesce_theta,
                     n_groups=int(tiers.n_groups),
                     max_held=int(tiers.max_held),
+                    trace_cap=trace,
                 ),
                 in_axes=(0, 0),
             )
+            tiered = True
         else:
             runner = jax.vmap(
                 lambda sp, seed: _simulate(
                     SimSpec(*sp, mpl=net.mpl), seed, n_requests=n_requests,
                     warmup=warmup, mpl=net.mpl, max_events=max_events,
                     n_flows=coalesce_flows, flow_theta=coalesce_theta,
-                    n_disks=n_disks,
+                    n_disks=n_disks, trace_cap=trace,
                 ),
                 in_axes=(0, 0),
             )
+            tiered = False
         out = runner(spec_arrays, seed_v)
         xs = np.asarray(out[0]).reshape(S, P)
         dl = np.asarray(out[3]).reshape(S, P)
@@ -1190,14 +1339,18 @@ def simulate_network(
         bx = np.asarray(out[4]).reshape(S, P, -1) / t_meas
         bd = np.asarray(out[5]).reshape(S, P, -1) / t_meas
         tier_dl = (np.asarray(out[7]).reshape(S, P, -1).mean(axis=0)
-                   if len(out) > 7 else None)
+                   if tiered else None)
+        traces = (decode_trace_grid(out[8 if tiered else 7],
+                                     specs[0].visits, S, P)
+                  if trace else None)
         mean = xs.mean(axis=0)
         ci = 1.96 * xs.std(axis=0, ddof=1) / math.sqrt(len(seeds)) if len(seeds) > 1 else np.zeros_like(mean)
         return SimResult(p_hit=p_hits, throughput=mean, ci95=ci,
                          n_requests=n_requests, delayed_frac=dl.mean(axis=0),
                          branch_throughput=bx.mean(axis=0),
                          branch_delayed=bd.mean(axis=0),
-                         delayed_tier_frac=tier_dl)
+                         delayed_tier_frac=tier_dl,
+                         traces=traces)
 
     if tiers is not None:
         raise ValueError("tiered MSHR coalescing runs the closed loop only "
@@ -1219,12 +1372,14 @@ def simulate_network(
             max_events=max_events, n_flows=coalesce_flows,
             flow_theta=coalesce_theta, n_disks=n_disks,
             burst=tuple(burst) if burst is not None else None,
+            trace_cap=trace,
         ),
         in_axes=(0, 0, 0),
     )
-    x, completed, _events, delayed, dropped, soj, cls = runner(
-        spec_arrays, seed_v, mean_ns
-    )
+    out = runner(spec_arrays, seed_v, mean_ns)
+    x, completed, _events, delayed, dropped, soj, cls = out[:7]
+    traces = (decode_trace_grid(out[7], specs[0].visits, S, P)
+              if trace else None)
     xs = np.asarray(x).reshape(S, P)
     comp = np.asarray(completed).reshape(S, P)
     dl = np.asarray(delayed).reshape(S, P)
@@ -1283,4 +1438,5 @@ def simulate_network(
         drop_frac=drop.sum(axis=0) / np.maximum(total_arrivals, 1),
         truncated=truncated,
         n_requests=n_requests,
+        traces=traces,
     )

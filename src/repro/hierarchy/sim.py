@@ -47,10 +47,14 @@ class HierarchySimResult:
     delayed_l1_frac: np.ndarray  # (P,) parked at the client's L1 table
     delayed_l2_frac: np.ndarray  # (P,) parked at a shard origin table
     n_requests: int
+    # per-request trace records when the run asked for tracing
+    # (``trace=K``): [seed][p] TraceRecords from the jax engine, a single
+    # TraceRecords from the heapq oracle.  None otherwise.
+    traces: object = None
 
 
 def _fold(model: HierarchyModel, p_hit, x, ci, bx, delayed, tier_dl,
-          n_requests: int) -> HierarchySimResult:
+          n_requests: int, traces=None) -> HierarchySimResult:
     level = np.asarray(model.branch_level)
     shard = np.asarray(model.branch_shard)
     P = len(p_hit)
@@ -67,7 +71,7 @@ def _fold(model: HierarchyModel, p_hit, x, ci, bx, delayed, tier_dl,
         ci95=np.asarray(ci), level_throughput=lvl_x, shard_throughput=sh_x,
         delayed_frac=np.asarray(delayed),
         delayed_l1_frac=tier_dl[:, 0], delayed_l2_frac=tier_dl[:, 1],
-        n_requests=n_requests,
+        n_requests=n_requests, traces=traces,
     )
 
 
@@ -75,12 +79,17 @@ def simulate_hierarchy(model: HierarchyModel, p_hits,
                        n_requests: int = 40_000, seeds=(0, 1, 2),
                        warmup_frac: float = 0.25,
                        coalesce_flows: int = 0,
-                       coalesce_theta: float = 0.0) -> HierarchySimResult:
+                       coalesce_theta: float = 0.0,
+                       trace: int = 0) -> HierarchySimResult:
     """Simulate the composed hierarchy over a grid of global hit ratios.
 
     ``coalesce_flows`` sizes every MSHR table's hot-flow group (per
     client at L1, per shard at the origin); 0 runs the plain kernel as
-    the no-coalescing reference.  Wraps
+    the no-coalescing reference.  ``trace=K`` keeps the last K
+    per-request trace records per (seed, p) lane (see
+    :mod:`repro.obs.trace`) on the result's ``traces`` field — the
+    branch id in each record resolves a request to its client / shard /
+    serving level through ``model.branch_client`` & friends.  Wraps
     :func:`repro.core.simulator.simulate_network`.
     """
     res = simulate_network(
@@ -88,24 +97,26 @@ def simulate_hierarchy(model: HierarchyModel, p_hits,
         warmup_frac=warmup_frac, coalesce_flows=coalesce_flows,
         coalesce_theta=coalesce_theta,
         tiers=model.mshr if coalesce_flows else None,
+        trace=trace,
     )
     return _fold(model, res.p_hit, res.throughput, res.ci95,
                  res.branch_throughput, res.delayed_frac,
-                 res.delayed_tier_frac, n_requests)
+                 res.delayed_tier_frac, n_requests, traces=res.traces)
 
 
 def simulate_hierarchy_py(model: HierarchyModel, p_hit: float,
                           n_requests: int = 20_000, seed: int = 0,
                           warmup_frac: float = 0.25,
                           coalesce_flows: int = 0,
-                          coalesce_theta: float = 0.0
-                          ) -> HierarchySimResult:
+                          coalesce_theta: float = 0.0,
+                          trace: int = 0) -> HierarchySimResult:
     """Heapq-oracle twin of :func:`simulate_hierarchy` at one global p."""
     out = simulate_py(
         model.network, float(p_hit), n_requests=n_requests, seed=seed,
         warmup_frac=warmup_frac, coalesce_flows=coalesce_flows,
         coalesce_theta=coalesce_theta, full=True,
         tiers=model.mshr if coalesce_flows else None,
+        trace=trace,
     )
     bx = (np.asarray(out["branch_done"], np.float64)
           / out["t_measured"])[None, :]
@@ -114,4 +125,5 @@ def simulate_hierarchy_py(model: HierarchyModel, p_hit: float,
                else None)
     return _fold(model, np.array([float(p_hit)]),
                  np.array([out["x"]]), np.array([0.0]), bx,
-                 np.array([out["delayed_frac"]]), tier_dl, n_requests)
+                 np.array([out["delayed_frac"]]), tier_dl, n_requests,
+                 traces=out.get("trace"))

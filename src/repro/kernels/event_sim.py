@@ -42,6 +42,8 @@ from jax.experimental import pallas as pl
 from repro.core.simspec import (BIG_SEQ, INF_NS, SimResult, compile_network,
                                 stack_specs)
 from repro.kernels import CompilerParams
+from repro.obs.trace import (CLS_HIT, CLS_MISS, TraceRings, TraceScratch,
+                             decode_trace_grid, init_trace, ring_write_one)
 
 _GOLDEN = np.uint32(0x9E3779B9)
 _MIX1 = np.uint32(0x21F0AAAD)
@@ -87,11 +89,15 @@ def _service_ns(u: jnp.ndarray, spec: _SpecArrays, k: jnp.ndarray):
 
 
 def _sim_lane(spec: _SpecArrays, seed: jnp.ndarray, *, n_requests: int,
-              warmup: int, mpl: int, max_events: int):
+              warmup: int, mpl: int, max_events: int, trace_cap: int = 0,
+              bmiss=None):
     """One (p_hit, seed) lane of the closed-loop simulation.
 
     Shared verbatim by the pallas kernel body and the vmapped CPU twin.
-    Returns (x, completed, events, t_measured_us).
+    Returns (x, completed, events, t_measured_us) — plus the filled
+    :class:`~repro.obs.trace.TraceRings` when ``trace_cap > 0``
+    (``bmiss`` is then the (B,) per-branch miss-class table; tracing
+    draws no RNG, so the simulated system is bit-identical either way).
     """
     n = mpl
     base = _mix(seed.astype(jnp.uint32) + _GOLDEN)
@@ -128,7 +134,7 @@ def _sim_lane(spec: _SpecArrays, seed: jnp.ndarray, *, n_requests: int,
         jnp.float32(0.0),                        # warm_elapsed_us
         jnp.int32(2 * n),                        # rng counter
         jnp.int32(0),                            # events
-    )
+    ) + init_trace(trace_cap, n, spec.visits.shape[1])
 
     def cond(carry):
         completed, events = carry[7], carry[12]
@@ -137,7 +143,9 @@ def _sim_lane(spec: _SpecArrays, seed: jnp.ndarray, *, n_requests: int,
     def body(carry):
         (ready_ns, station, branch, pos, enq_seq, busy_count, seq_ctr,
          completed, elapsed_us, warm_completed, warm_elapsed_us, ctr,
-         events) = carry
+         events) = carry[:13]
+        if trace_cap:
+            rings, scr = carry[13], carry[14]
         u_svc1 = u01(ctr)
         u_svc2 = u01(ctr + 1)
         u_branch = u01(ctr + 2)
@@ -184,6 +192,20 @@ def _sim_lane(spec: _SpecArrays, seed: jnp.ndarray, *, n_requests: int,
         branch_j = jnp.where(done, new_branch, branch[j])
         pos_j = jnp.where(done, 0, nxt_pos)
         k_next = jnp.where(done, spec.visits[new_branch, 0], route_next)
+        if trace_cap:
+            # Stamp j's departure from its current visit; on completion
+            # emit the finished request's record (req id = completed so
+            # far — the same id the threefry engine would assign).
+            leave_m = scr.leave_us.at[j, pos[j]].set(elapsed_us)
+            cls_j = jnp.where(bmiss[branch[j]], CLS_MISS,
+                              CLS_HIT).astype(jnp.int32)
+            rings = ring_write_one(rings, done, completed, branch[j], cls_j,
+                                   pos[j] + 1, jnp.float32(0.0),
+                                   scr.enter_us[j], leave_m[j])
+            scr = TraceScratch(
+                enter_us=scr.enter_us.at[j, pos_j].set(elapsed_us),
+                leave_us=leave_m,
+            )
         completed = completed + done.astype(jnp.int32)
 
         # ---- place j at k_next.
@@ -207,22 +229,33 @@ def _sim_lane(spec: _SpecArrays, seed: jnp.ndarray, *, n_requests: int,
         return (ready, station.at[j].set(k_next), branch.at[j].set(branch_j),
                 pos.at[j].set(pos_j), enq_seq, busy_count, seq_ctr,
                 completed, elapsed_us, warm_completed, warm_elapsed_us, ctr,
-                events + 1)
+                events + 1) + ((rings, scr) if trace_cap else ())
 
     carry = lax.while_loop(cond, body, carry)
     (_, _, _, _, _, _, _, completed, elapsed_us, warm_completed,
-     warm_elapsed_us, _, events) = carry
+     warm_elapsed_us, _, events) = carry[:13]
     n_measured = completed - warm_completed
     t_measured = jnp.maximum(elapsed_us - warm_elapsed_us, 1e-6)
     x = n_measured.astype(jnp.float32) / t_measured
+    if trace_cap:
+        return x, completed, events, t_measured, carry[13]
     return x, completed, events, t_measured
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_requests", "warmup", "mpl",
-                                    "max_events"))
-def _twin_grid(spec_arrays, seeds, *, n_requests: int, warmup: int,
-               mpl: int, max_events: int):
+                                    "max_events", "trace_cap"))
+def _twin_grid(spec_arrays, seeds, bmiss=None, *, n_requests: int,
+               warmup: int, mpl: int, max_events: int, trace_cap: int = 0):
+    if trace_cap:
+        def lane_tr(sp, seed, bm):
+            return _sim_lane(_SpecArrays(*sp), seed, n_requests=n_requests,
+                             warmup=warmup, mpl=mpl, max_events=max_events,
+                             trace_cap=trace_cap, bmiss=bm)
+
+        return jax.vmap(lane_tr, in_axes=(0, 0, 0))(spec_arrays, seeds,
+                                                    bmiss)
+
     def lane(sp, seed):
         return _sim_lane(_SpecArrays(*sp), seed, n_requests=n_requests,
                          warmup=warmup, mpl=mpl, max_events=max_events)
@@ -252,44 +285,111 @@ def _sim_kernel(isq_ref, svc_ref, did_ref, dpar_ref, bcum_ref, visits_ref,
     tmeas_ref[0] = t_meas
 
 
-def _pallas_grid(spec_arrays, seeds, *, n_requests: int, warmup: int,
-                 mpl: int, max_events: int, interpret: bool):
+def _sim_kernel_traced(isq_ref, svc_ref, did_ref, dpar_ref, bcum_ref,
+                       visits_ref, srv_ref, seed_ref, bmiss_ref, x_ref,
+                       comp_ref, ev_ref, tmeas_ref, tn_ref, treq_ref,
+                       tbr_ref, tcls_ref, tnv_ref, tpk_ref, ten_ref,
+                       tlv_ref, *, n_requests: int, warmup: int, mpl: int,
+                       max_events: int, trace_cap: int):
+    """Traced variant of :func:`_sim_kernel` — the ring-buffer outputs ride
+    along as extra (shape-static, ``trace_cap + 1``-row) out refs."""
+    spec = _SpecArrays(
+        is_queue=isq_ref[0] != 0,
+        svc_ns=svc_ref[0],
+        dist_id=did_ref[0],
+        dist_params=dpar_ref[0],
+        branch_cum=bcum_ref[0],
+        visits=visits_ref[0],
+        servers=srv_ref[0],
+    )
+    x, completed, events, t_meas, rings = _sim_lane(
+        spec, seed_ref[0], n_requests=n_requests, warmup=warmup, mpl=mpl,
+        max_events=max_events, trace_cap=trace_cap,
+        bmiss=bmiss_ref[0] != 0,
+    )
+    x_ref[0] = x
+    comp_ref[0] = completed
+    ev_ref[0] = events
+    tmeas_ref[0] = t_meas
+    tn_ref[0] = rings.n_count
+    treq_ref[0] = rings.req
+    tbr_ref[0] = rings.branch
+    tcls_ref[0] = rings.cls
+    tnv_ref[0] = rings.nvis
+    tpk_ref[0] = rings.parked_us
+    ten_ref[0] = rings.enter_us
+    tlv_ref[0] = rings.leave_us
+
+
+def _pallas_grid(spec_arrays, seeds, bmiss=None, *, n_requests: int,
+                 warmup: int, mpl: int, max_events: int, interpret: bool,
+                 trace_cap: int = 0):
     isq, svc, did, dpar, bcum, visits, srv = spec_arrays
     n_lanes = seeds.shape[0]
     n_k = isq.shape[1]
     n_b, n_l = visits.shape[1], visits.shape[2]
-    kernel = functools.partial(_sim_kernel, n_requests=n_requests,
-                               warmup=warmup, mpl=mpl, max_events=max_events)
 
     def row(*block):
         return pl.BlockSpec(block, lambda i: (i,) + (0,) * (len(block) - 1))
 
+    in_specs = [
+        row(1, n_k), row(1, n_k), row(1, n_k), row(1, n_k, 4),
+        row(1, n_b), row(1, n_b, n_l), row(1, n_k), row(1),
+    ]
+    out_specs = [row(1), row(1), row(1), row(1)]
+    out_shape = [
+        jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+        jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
+        jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
+        jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
+    ]
+    operands = [isq.astype(jnp.int32), svc, did, dpar, bcum, visits, srv,
+                seeds]
+    if trace_cap:
+        cap1 = trace_cap + 1
+        kernel = functools.partial(
+            _sim_kernel_traced, n_requests=n_requests, warmup=warmup,
+            mpl=mpl, max_events=max_events, trace_cap=trace_cap,
+        )
+        in_specs.append(row(1, n_b))
+        operands.append(bmiss.astype(jnp.int32))
+        out_specs += [row(1), row(1, cap1), row(1, cap1), row(1, cap1),
+                      row(1, cap1), row(1, cap1), row(1, cap1, n_l),
+                      row(1, cap1, n_l)]
+        out_shape += [
+            jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, cap1), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, cap1), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, cap1), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, cap1), jnp.int32),
+            jax.ShapeDtypeStruct((n_lanes, cap1), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes, cap1, n_l), jnp.float32),
+            jax.ShapeDtypeStruct((n_lanes, cap1, n_l), jnp.float32),
+        ]
+    else:
+        kernel = functools.partial(_sim_kernel, n_requests=n_requests,
+                                   warmup=warmup, mpl=mpl,
+                                   max_events=max_events)
+
     out = pl.pallas_call(
         kernel,
         grid=(n_lanes,),
-        in_specs=[
-            row(1, n_k), row(1, n_k), row(1, n_k), row(1, n_k, 4),
-            row(1, n_b), row(1, n_b, n_l), row(1, n_k), row(1),
-        ],
-        out_specs=[row(1), row(1), row(1), row(1)],
-        out_shape=[
-            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
-            jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
-            jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
-            jax.ShapeDtypeStruct((n_lanes,), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
-    )(isq.astype(jnp.int32), svc, did, dpar, bcum, visits, srv, seeds)
+    )(*operands)
     return out
 
 
 def simulate_grid_pallas(net, p_hits, n_requests: int = 40_000,
                          seeds: Sequence[int] = (0, 1, 2),
                          warmup_frac: float = 0.25,
-                         interpret: Optional[bool] = None) -> SimResult:
+                         interpret: Optional[bool] = None,
+                         trace: int = 0) -> SimResult:
     """Closed-loop (p_hit x seed) grid on the counter-RNG event engine.
 
     Same grid construction, warmup and summary statistics as
@@ -298,6 +398,12 @@ def simulate_grid_pallas(net, p_hits, n_requests: int = 40_000,
     :func:`_sim_lane` — the kernel-resident event loop.  Agreement with
     the threefry scan engine is statistical; the pallas kernel and the
     CPU twin are bit-identical by shared code.
+
+    ``trace=K`` keeps the last K per-request trace records per lane in a
+    kernel-resident ring buffer (shape-static: K is baked into the
+    compiled kernel) and decodes them onto the result's ``traces`` field,
+    the same schema as the threefry engine's; ``trace=0`` compiles no
+    tracing at all.
     """
     p_hits = np.atleast_1d(np.asarray(p_hits, dtype=np.float64))
     specs = [compile_network(net, float(p)) for p in p_hits]
@@ -305,6 +411,7 @@ def simulate_grid_pallas(net, p_hits, n_requests: int = 40_000,
     warmup = int(n_requests * warmup_frac)
     max_events = int(n_requests * (spec.visits.shape[-1] + 2) * 3)
     n_p, n_s = len(p_hits), len(seeds)
+    trace = int(trace)
 
     def tile(a):
         return jnp.concatenate([a] * n_s, axis=0) if n_s > 1 else a
@@ -316,19 +423,38 @@ def simulate_grid_pallas(net, p_hits, n_requests: int = 40_000,
         [jnp.full((n_p,), s, jnp.int32) * 1000
          + jnp.arange(n_p, dtype=jnp.int32) for s in seeds]
     )
+    bmiss_v = None
+    if trace:
+        # Per-branch sojourn class, precomputed host-side (the kernel's
+        # _SpecArrays carries no disk_rank): a branch whose route touches
+        # a backing store is a miss, anything else a hit (the pallas
+        # engine is closed-loop non-coalescing — no delayed hits).
+        vis = np.asarray(specs[0].visits)
+        dr = np.asarray(specs[0].disk_rank)
+        bmiss = ((dr[np.maximum(vis, 0)] >= 0) & (vis >= 0)).any(axis=1)
+        bmiss_v = jnp.asarray(
+            np.broadcast_to(bmiss, (n_p * n_s, bmiss.shape[0]))
+        )
 
     if interpret is None and jax.default_backend() != "tpu":
-        out = _twin_grid(spec_arrays, seed_v, n_requests=n_requests,
-                         warmup=warmup, mpl=net.mpl, max_events=max_events)
+        out = _twin_grid(spec_arrays, seed_v, bmiss_v,
+                         n_requests=n_requests, warmup=warmup, mpl=net.mpl,
+                         max_events=max_events, trace_cap=trace)
+        rings = out[4] if trace else None
     else:
         out = _pallas_grid(
-            spec_arrays, seed_v, n_requests=n_requests, warmup=warmup,
-            mpl=net.mpl, max_events=max_events,
+            spec_arrays, seed_v, bmiss_v, n_requests=n_requests,
+            warmup=warmup, mpl=net.mpl, max_events=max_events,
             interpret=bool(interpret) if interpret is not None else False,
+            trace_cap=trace,
         )
+        rings = TraceRings(*out[4:12]) if trace else None
+    traces = None
+    if trace:
+        traces = decode_trace_grid(rings, specs[0].visits, n_s, n_p)
     xs = np.asarray(out[0]).reshape(n_s, n_p)
     mean = xs.mean(axis=0)
     ci = (1.96 * xs.std(axis=0, ddof=1) / math.sqrt(n_s) if n_s > 1
           else np.zeros_like(mean))
     return SimResult(p_hit=p_hits, throughput=mean, ci95=ci,
-                     n_requests=n_requests)
+                     n_requests=n_requests, traces=traces)

@@ -25,6 +25,7 @@ from repro.latency.analytic import (
     analyze_open,
     erlang_c,
     lambda_max,
+    observed_response,
     response_percentile,
     response_time,
 )
@@ -36,6 +37,6 @@ from repro.latency.forecast import (
 
 __all__ = [
     "OpenAnalysis", "analyze_open", "erlang_c", "lambda_max",
-    "response_percentile", "response_time",
+    "observed_response", "response_percentile", "response_time",
     "LatencyForecast", "max_arrival_for_slo", "slo_forecast",
 ]

@@ -313,3 +313,40 @@ def response_percentile(net: ClosedNetwork, p_hit, arrival_rate: float,
         for p in p_arr
     ])
     return out if np.ndim(p_hit) else float(out[0])
+
+
+def observed_response(trace, qs=(0.5, 0.95, 0.99)) -> dict:
+    """Empirical response-time summary from per-request trace records.
+
+    ``trace`` is a :class:`repro.obs.trace.TraceRecords` (a traced open- or
+    closed-loop run); the returned overall / per-class sojourn means and
+    percentiles are directly comparable to :func:`response_time` /
+    :func:`response_percentile` at the matching (p, lambda) — the
+    measurement-side counterpart of the Erlang-C layer.
+    """
+    from repro.obs.trace import CLASS_NAMES
+
+    soj = np.asarray(trace.sojourn_us, dtype=np.float64)
+    cls = np.asarray(trace.cls)
+    out = {
+        "n_count": int(len(soj)),
+        "mean_us": float(soj.mean()) if len(soj) else math.nan,
+        "percentiles_us": {
+            q: (float(np.percentile(soj, 100.0 * q)) if len(soj)
+                else math.nan)
+            for q in qs
+        },
+    }
+    by_class = {}
+    for c, name in CLASS_NAMES.items():
+        sel = soj[cls == c]
+        if len(sel):
+            by_class[name] = {
+                "n_count": int(len(sel)),
+                "mean_us": float(sel.mean()),
+                "percentiles_us": {
+                    q: float(np.percentile(sel, 100.0 * q)) for q in qs
+                },
+            }
+    out["by_class"] = by_class
+    return out

@@ -1,0 +1,40 @@
+"""Observability layer: per-request trace records, per-station timelines,
+and provenance-stamped bench lineage.
+
+The paper's second prong is *implementation and measurement*: its
+throughput-vs-hit-ratio inversions were found by instrumenting a real
+cache.  This package is that instrument for the reproduction:
+
+* :mod:`repro.obs.trace` — the structured per-request trace-record
+  schema (request id, class, per-station enter/leave timestamps, MSHR
+  parked interval) plus the fixed-capacity ring-buffer helpers the
+  jitted simulators fill in-kernel and the collector the heapq oracles
+  use, so trace equality is a differential twin contract.
+* :mod:`repro.obs.metrics` — a small registry (counters, gauges,
+  distribution sketches, unit-suffixed names) and the trace-derived
+  per-station occupancy/utilization timelines and busy-period (convoy)
+  statistics.
+* :mod:`repro.obs.export` — Chrome/Perfetto ``trace_event`` JSON
+  rendering for timeline inspection.
+* :mod:`repro.obs.provenance` — git-sha / version / seed / config-hash
+  stamping of ``benchmarks/run.py --json`` payloads, payload schema
+  validation and the BENCH lineage diff.
+
+Tracing is **off by default** and bit-identical to the untraced
+simulators when off; when on, every ring-buffer capacity is a static
+(Python-int) shape so the compiled programs stay shape-static
+(``tools/analysis/obs_lint.py`` gates this).
+"""
+
+from __future__ import annotations
+
+from repro.obs.metrics import DistSketch, Metrics
+from repro.obs.trace import TraceRecords, make_records, trace_from_rings
+
+__all__ = [
+    "DistSketch",
+    "Metrics",
+    "TraceRecords",
+    "make_records",
+    "trace_from_rings",
+]

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
+from repro.obs.metrics import Metrics
 from repro.serving import kv_pages
 from repro.serving.kv_pages import PageAllocator
 from repro.serving.prefix_cache import PrefixCache, chunk_hashes
@@ -111,6 +112,7 @@ class Engine:
         self._rng = np.random.default_rng(serve.seed)
         self.ticks = 0
         self.decode_steps = 0
+        self.metrics = Metrics()
 
         self._decode = jax.jit(
             lambda p, t, c, l: transformer.decode_step(p, t, c, l, cfg)
@@ -184,6 +186,16 @@ class Engine:
         r.out = [first]
         r.slot = slot
         self.active[slot] = r
+        self.metrics.count("admissions_count")
+        self.metrics.count("prefill_tokens_computed_count",
+                           r.prefill_tokens_computed)
+        self.metrics.count("prefill_tokens_skipped_count",
+                           r.prefill_tokens_skipped)
+        self.metrics.observe(
+            "prefill_hit_frac",
+            r.prefill_tokens_skipped
+            / max(r.prefill_tokens_skipped + r.prefill_tokens_computed, 1),
+        )
 
     def _admit_state(self, r: Request, cache1, hashes):
         """SSM/hybrid admission: all-or-nothing snapshot of the recurrent
@@ -288,12 +300,17 @@ class Engine:
         """Admit waiting requests, run one batched decode step.
         Returns True while work remains."""
         self.ticks += 1
+        self.metrics.count("ticks_count")
         while self.waiting and self.free_slots:
             slot = self.free_slots.pop()
             self._admit(self.waiting.pop(0), slot)
+        self.metrics.gauge("active_slots_count", len(self.active))
+        self.metrics.gauge("waiting_count", len(self.waiting))
+        self.metrics.gauge("pages_free_count", self.allocator.n_free)
 
         if not self.active:
             return bool(self.waiting)
+        self.metrics.observe("decode_batch_count", len(self.active))
 
         B = self.serve.max_seqs
         tokens = np.zeros((B, 1), dtype=np.int32)
@@ -304,6 +321,8 @@ class Engine:
             self.params, jnp.asarray(tokens), self.caches, lens
         )
         self.decode_steps += 1
+        self.metrics.count("decode_steps_count")
+        self.metrics.count("decode_tokens_count", len(self.active))
         nxt = np.asarray(logits[:, 0].argmax(axis=-1))
 
         finished = []
@@ -318,6 +337,8 @@ class Engine:
             del self.active[slot]
             self.free_slots.append(slot)
             self.lengths[slot] = 0
+        if finished:
+            self.metrics.count("completions_count", len(finished))
         return bool(self.active or self.waiting)
 
     def run(self, max_ticks: int = 10_000):
@@ -336,6 +357,12 @@ class Engine:
             "bypassed": s.bypassed,
             "pages_free": self.allocator.n_free,
         }
+
+    def telemetry(self) -> dict:
+        """Full observability snapshot: the per-tick metric registry
+        (counters / gauges / distribution sketches, unit-suffixed names —
+        see :mod:`repro.obs.metrics`) alongside :meth:`stats`."""
+        return {"metrics": self.metrics.snapshot(), "stats": self.stats()}
 
     def forecast_network(self, step_us: float, prefill_us: float,
                          replicas: int = 1, batched_update: bool = False,

@@ -1,0 +1,30 @@
+"""Fixture for the obs lint: unit-suffix and ring-static violations."""
+
+import functools
+
+import jax
+
+
+class BadSchema:
+    parked: float = 0.0  # obs-units: time-like field without a unit
+    parked_us: float = 0.0  # clean: carries a time suffix
+    branch: int = 0  # clean: not a time-like stem
+
+
+@functools.partial(jax.jit, static_argnames=("n_requests",))
+def bad_ring(x, trace_cap: int = 0, n_requests: int = 0):
+    # obs-ring-static: trace_cap missing from static_argnames (flagged
+    # at the def line above)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("trace_cap",))
+def good_ring(x, trace_cap: int = 0):  # clean: trace_cap is static
+    return x
+
+
+def emit(metrics):
+    metrics.count("events")  # obs-units: metric name without suffix
+    metrics.count("events_count")  # clean: counter suffix
+    metrics.gauge("depth_count", 1.0)  # clean
+    metrics.observe("sojourn_us", 2.0)  # clean

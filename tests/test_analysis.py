@@ -177,6 +177,47 @@ class TestDocsPaths:
         assert "does_not_exist.py" in violations[0].message
 
 
+# --------------------------------------------------------------- obs lint
+
+class TestObsLint:
+    @pytest.fixture(scope="class")
+    def found(self):
+        violations, _ = run_checker("obs", FIXTURE_ROOT)
+        return violations
+
+    def fixture_path(self):
+        return FIXTURE_ROOT / "src" / "repro" / "obs" / "bad_obs.py"
+
+    def test_metric_name_without_suffix(self, found):
+        want = line_of(self.fixture_path(),
+                       "# obs-units: metric name without suffix")
+        assert any(v.rule == "obs-units" and v.line == want for v in found)
+
+    def test_time_like_schema_field(self, found):
+        want = line_of(self.fixture_path(),
+                       "# obs-units: time-like field without a unit")
+        assert any(v.rule == "obs-units" and v.line == want for v in found)
+
+    def test_nonstatic_trace_cap(self, found):
+        want = line_of(self.fixture_path(), "def bad_ring")
+        assert any(v.rule == "obs-ring-static" and v.line == want
+                   for v in found)
+
+    def test_clean_lines_stay_clean(self, found):
+        path = self.fixture_path()
+        text = path.read_text().splitlines()
+        clean = {i for i, line in enumerate(text, start=1)
+                 if "clean" in line}
+        clean.add(line_of(path, "def good_ring"))
+        hits = {v.line for v in found if v.path == path}
+        assert not (hits & clean), sorted(hits & clean)
+
+    def test_real_tree_is_clean(self):
+        violations, notes = run_checker("obs", REPO_ROOT)
+        assert violations == []
+        assert any("obs-lint" in n.text for n in notes)
+
+
 # ---------------------------------------------------------- twin contracts
 
 class TestTwinContracts:
@@ -253,7 +294,7 @@ class TestTwinContracts:
     def test_live_registry_is_clean(self):
         violations, notes = run_checker("contracts", REPO_ROOT)
         assert violations == []
-        assert any("15 registered pairs" in n.text for n in notes)
+        assert any("16 registered pairs" in n.text for n in notes)
 
 
 # ----------------------------------------------- acceptance: seeded drift

@@ -1,0 +1,511 @@
+"""Telemetry prong tests (repro.obs): trace twin contracts, ring-buffer
+semantics, Perfetto export, provenance stamping, and the metric registry.
+
+The load-bearing guarantees, in order:
+
+1. ``trace=0`` is bit-identical to not compiling tracing in at all, on
+   every backend (the observability layer must never perturb results).
+2. Tracing draws no RNG, so the traced run's summary statistics equal
+   the untraced run's bit-for-bit too.
+3. The in-kernel ring decodes to the exact per-request accounting the
+   kernel's own counters report (``branch_throughput`` ≡ per-branch
+   trace record counts) — the satellite bugfix sweep's reconciliation.
+4. The heapq oracles emit the identical schema, and their class mixes /
+   sojourns agree statistically with the jax kernels across the
+   (policy × loop-mode) grid — trace equality as a differential twin
+   contract (registered in ``tools/analysis/contracts.py``).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.policy_models import (clock_network, fifo_network,
+                                      lru_network)
+from repro.core.py_sim import simulate_py
+from repro.core.simulator import simulate_network
+from repro.hierarchy.model import hierarchy_network
+from repro.hierarchy.sim import simulate_hierarchy, simulate_hierarchy_py
+from repro.latency import lambda_max, observed_response
+from repro.obs.export import (read_perfetto, summarize_events, to_perfetto,
+                              write_perfetto)
+from repro.obs.metrics import (DistSketch, Metrics, check_metric_name,
+                               convoy_stats, station_utilization,
+                               trace_summary)
+from repro.obs.provenance import (config_hash, lineage_diff, stamp,
+                                  validate_payload)
+from repro.obs.provenance import main as provenance_main
+from repro.obs.trace import (CLS_DELAYED, CLS_HIT, CLS_MISS,
+                             PyTraceCollector, TraceRecords, make_records,
+                             trace_from_rings)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+N_REQ = 2_500
+WARMUP = N_REQ // 4  # simulate_network's warmup_frac=0.25 default
+
+
+# ---------------------------------------------------------------- fixtures
+
+
+@pytest.fixture(scope="module")
+def closed_traced():
+    """Closed loop, no coalescing: one (p, seed) lane, lossless ring."""
+    net = lru_network(disk_us=100.0)
+    res = simulate_network(net, [0.7], n_requests=N_REQ, seeds=(0,),
+                           trace=2 * N_REQ)
+    return net, res
+
+
+@pytest.fixture(scope="module")
+def coalesced_pair():
+    """Closed loop with MSHR coalescing: traced and untraced twins."""
+    net = lru_network(disk_us=100.0)
+    kw = dict(n_requests=N_REQ, seeds=(0, 1), coalesce_flows=4)
+    base = simulate_network(net, [0.5, 0.9], **kw)
+    traced = simulate_network(net, [0.5, 0.9], trace=128, **kw)
+    return net, base, traced
+
+
+@pytest.fixture(scope="module")
+def oracle_coalesced():
+    net = lru_network(disk_us=100.0)
+    out = simulate_py(net, 0.7, n_requests=N_REQ, seed=0, coalesce_flows=4,
+                      full=True, trace=2 * N_REQ)
+    return net, out
+
+
+# ------------------------------------------------- 1+2: tracing is inert
+
+
+class TestTracingIsInert:
+    def test_closed_coalesced_bit_identical(self, coalesced_pair):
+        _, base, traced = coalesced_pair
+        assert np.array_equal(base.throughput, traced.throughput)
+        assert np.array_equal(base.ci95, traced.ci95)
+        assert np.array_equal(base.delayed_frac, traced.delayed_frac)
+        assert np.array_equal(base.branch_throughput,
+                              traced.branch_throughput)
+        assert base.traces is None
+        assert len(traced.traces) == 2 and len(traced.traces[0]) == 2
+
+    def test_open_bit_identical(self):
+        net = lru_network(disk_us=100.0)
+        lam = 0.5 * float(lambda_max(net, 0.7, tail_mode="nominal"))
+        kw = dict(arrival_rate=lam, n_requests=N_REQ, seeds=(0,))
+        base = simulate_network(net, [0.7], **kw)
+        traced = simulate_network(net, [0.7], trace=256, **kw)
+        assert np.array_equal(base.throughput, traced.throughput)
+        assert np.array_equal(base.sojourn_mean, traced.sojourn_mean)
+        assert np.array_equal(base.sojourn_p99, traced.sojourn_p99)
+        assert np.array_equal(base.class_frac, traced.class_frac)
+        assert base.traces is None and traced.traces is not None
+
+    def test_pallas_backend_bit_identical(self):
+        from repro.kernels.event_sim import simulate_grid_pallas
+
+        net = lru_network(disk_us=100.0)
+        kw = dict(n_requests=1_500, seeds=(0,))
+        base = simulate_grid_pallas(net, [0.7], **kw)
+        traced = simulate_grid_pallas(net, [0.7], trace=128, **kw)
+        assert np.array_equal(base.throughput, traced.throughput)
+        assert np.array_equal(base.branch_throughput,
+                              traced.branch_throughput)
+        tr = traced.traces[0][0]
+        assert len(tr) == 128 and tr.n_dropped > 0
+        # the counter-RNG engine classifies by branch: no delayed hits
+        assert not (tr.cls == CLS_DELAYED).any()
+
+
+# ------------------------- 3: trace records reconcile with the counters
+
+
+class TestCounterReconciliation:
+    def test_ring_is_lossless_and_ordered(self, closed_traced):
+        _, res = closed_traced
+        tr = res.traces[0][0]
+        assert tr.n_emitted == N_REQ and tr.n_dropped == 0
+        assert np.array_equal(tr.req, np.arange(N_REQ))
+
+    def test_branch_throughput_matches_trace_counts(self, closed_traced):
+        """branch_throughput ≡ per-branch post-warmup record counts."""
+        net, res = closed_traced
+        tr = res.traces[0][0]
+        measured = tr.req >= WARMUP
+        counts = np.bincount(tr.branch[measured],
+                             minlength=len(net.branches))
+        want = res.branch_throughput[0] / res.throughput[0]
+        np.testing.assert_allclose(counts / counts.sum(), want, rtol=1e-6,
+                                   atol=1e-9)
+
+    def test_classes_follow_the_hit_knob(self, closed_traced):
+        _, res = closed_traced
+        tr = res.traces[0][0]
+        measured = tr.req >= WARMUP
+        frac_hit = (tr.cls[measured] == CLS_HIT).mean()
+        assert abs(frac_hit - 0.7) < 0.05
+        assert not (tr.cls == CLS_DELAYED).any()  # no coalescing
+
+    def test_timestamps_are_well_formed(self, closed_traced):
+        _, res = closed_traced
+        tr = res.traces[0][0]
+        assert (tr.nvis >= 1).all()
+        assert (tr.sojourn_us > 0).all()
+        cols = np.arange(tr.enter_us.shape[1])[None, :]
+        live = cols < tr.nvis[:, None]
+        assert np.isnan(tr.enter_us[~live]).all()
+        assert (tr.leave_us[live] >= tr.enter_us[live]).all()
+        assert (tr.station[live] >= 0).all()
+        assert (tr.station[~live] == -1).all()
+
+    def test_oracle_counters_reconcile_exactly(self, oracle_coalesced):
+        """The heapq oracle's measured counters are recomputable from
+        its own trace records — including the delayed-hit split."""
+        net, out = oracle_coalesced
+        tr = out["trace"]
+        assert tr.n_dropped == 0
+        measured = tr.req >= out["warm_done"]
+        counts = np.bincount(tr.branch[measured],
+                             minlength=len(net.branches))
+        assert np.array_equal(counts, np.asarray(out["branch_done"]))
+        delayed = measured & (tr.cls == CLS_DELAYED)
+        assert int(delayed.sum()) == int(out["delayed"])
+        dcounts = np.bincount(tr.branch[delayed],
+                              minlength=len(net.branches))
+        assert np.array_equal(dcounts, np.asarray(out["branch_delayed"]))
+        x = measured.sum() / out["t_measured"]
+        assert np.isclose(x, out["x"], rtol=1e-6)  # x is stored float32
+
+    def test_oracle_parked_iff_delayed(self, oracle_coalesced):
+        _, out = oracle_coalesced
+        tr = out["trace"]
+        assert (tr.parked_us[tr.cls != CLS_DELAYED] == 0).all()
+        assert (tr.parked_us[tr.cls == CLS_DELAYED] >= 0).all()
+        assert tr.parked_us[tr.cls == CLS_DELAYED].sum() > 0
+
+
+# ------------------------------ 4: jax vs oracle trace-level agreement
+
+
+def _class_fracs(tr: TraceRecords, warm: int) -> np.ndarray:
+    m = tr.req >= warm
+    return np.array([(tr.cls[m] == c).mean()
+                     for c in (CLS_MISS, CLS_HIT, CLS_DELAYED)])
+
+
+class TestTwinTraceAgreement:
+    @pytest.mark.parametrize("build", [lru_network, fifo_network,
+                                       clock_network])
+    def test_closed_coalesced(self, build):
+        net = build(disk_us=100.0)
+        jx = simulate_network(net, [0.7], n_requests=N_REQ, seeds=(0,),
+                              coalesce_flows=4, trace=2 * N_REQ)
+        py = simulate_py(net, 0.7, n_requests=N_REQ, seed=1,
+                         coalesce_flows=4, full=True, trace=2 * N_REQ)
+        tj, tp = jx.traces[0][0], py["trace"]
+        assert tj.n_emitted >= N_REQ and tp.n_emitted >= N_REQ
+        fj = _class_fracs(tj, WARMUP)
+        fp = _class_fracs(tp, py["warm_done"])
+        np.testing.assert_allclose(fj, fp, atol=0.06)
+        mj = tj.req >= WARMUP
+        mp = tp.req >= py["warm_done"]
+        sj = tj.sojourn_us[mj].mean()
+        sp = tp.sojourn_us[mp].mean()
+        assert abs(sj - sp) / sp < 0.25, (build.__name__, sj, sp)
+
+    def test_open(self):
+        net = lru_network(disk_us=100.0)
+        lam = 0.5 * float(lambda_max(net, 0.7, tail_mode="nominal"))
+        jx = simulate_network(net, [0.7], arrival_rate=lam,
+                              n_requests=N_REQ, seeds=(0,), trace=2 * N_REQ)
+        py = simulate_py(net, 0.7, n_requests=N_REQ, seed=1,
+                         arrival_rate=lam, trace=2 * N_REQ)
+        tj, tp = jx.traces[0][0], py["trace"]
+        fj = _class_fracs(tj, int(jx.n_requests * 0.25))
+        fp = _class_fracs(tp, py["warm_done"])
+        np.testing.assert_allclose(fj, fp, atol=0.06)
+        sj = tj.sojourn_us[tj.req >= int(jx.n_requests * 0.25)].mean()
+        sp = tp.sojourn_us[tp.req >= py["warm_done"]].mean()
+        assert abs(sj - sp) / sp < 0.25, (sj, sp)
+
+    def test_tiered_hierarchy(self):
+        model = hierarchy_network("lru", "lru", n_clients=2, n_shards=2,
+                                  mpl=16, disk_us=50.0)
+        jx = simulate_hierarchy(model, [0.6], n_requests=N_REQ, seeds=(0,),
+                                coalesce_flows=4, trace=2 * N_REQ)
+        py = simulate_hierarchy_py(model, 0.6, n_requests=N_REQ, seed=1,
+                                   coalesce_flows=4, trace=2 * N_REQ)
+        tj, tp = jx.traces[0][0], py.traces
+        level = np.asarray(model.branch_level)
+        for tr in (tj, tp):
+            assert len(tr) >= N_REQ
+            # every record's branch resolves to a serving level
+            assert set(np.unique(level[tr.branch])) <= {0, 1, 2}
+        # per-level completion mix agrees between the twins
+        lj = np.bincount(level[tj.branch], minlength=3) / len(tj)
+        lp = np.bincount(level[tp.branch], minlength=3) / len(tp)
+        np.testing.assert_allclose(lj, lp, atol=0.06)
+        # both engines saw cross-tier coalescing
+        assert (tj.cls == CLS_DELAYED).sum() > 0
+        assert (tp.cls == CLS_DELAYED).sum() > 0
+
+
+# ----------------------------------------------------- ring-buffer edges
+
+
+class TestRingOverflow:
+    def test_last_cap_records_survive(self):
+        net = lru_network(disk_us=100.0)
+        cap = 256
+        res = simulate_network(net, [0.7], n_requests=1_500, seeds=(0,),
+                               trace=cap)
+        tr = res.traces[0][0]
+        assert tr.n_emitted == 1_500
+        assert len(tr) == cap and tr.n_dropped == 1_500 - cap
+        assert np.array_equal(tr.req, np.arange(1_500 - cap, 1_500))
+
+    def test_oracle_capping_matches(self):
+        net = lru_network(disk_us=100.0)
+        out = simulate_py(net, 0.7, n_requests=1_500, seed=0, full=True,
+                          trace=256)
+        tr = out["trace"]
+        assert tr.n_emitted == 1_500 and len(tr) == 256
+        assert np.array_equal(tr.req, np.arange(1_500 - 256, 1_500))
+
+    def test_decode_drops_scrap_row(self):
+        cap = 4
+        req = np.array([4, 5, 2, 3, 99])  # last row is scrap
+        tr = trace_from_rings(
+            6, req, np.zeros(5, np.int32), np.zeros(5, np.int32),
+            np.ones(5, np.int32), np.zeros(5), np.zeros((5, 2)),
+            np.ones((5, 2)))
+        assert len(tr) == cap and tr.n_emitted == 6 and tr.n_dropped == 2
+        assert np.array_equal(tr.req, [2, 3, 4, 5])
+
+    def test_decode_drops_never_written(self):
+        req = np.array([0, -1, -1, -1, -1])
+        tr = trace_from_rings(
+            1, req, np.zeros(5, np.int32), np.zeros(5, np.int32),
+            np.ones(5, np.int32), np.zeros(5), np.zeros((5, 2)),
+            np.ones((5, 2)))
+        assert len(tr) == 1 and tr.n_dropped == 0
+
+
+class TestPyTraceCollector:
+    def test_collects_and_caps(self):
+        col = PyTraceCollector(cap=2, n_jobs=1, route_len=2)
+        for i in range(3):
+            col.start(0, 10.0 * i)
+            col.leave(0, 0, 10.0 * i + 1)
+            col.enter(0, 1, 10.0 * i + 1)
+            col.leave(0, 1, 10.0 * i + 5)
+            col.complete(0, branch=i, cls=CLS_HIT, nvis=2, parked_us=0.0)
+        tr = col.finish(visits=np.array([[0, 1], [0, 1], [0, 1]]))
+        assert tr.n_emitted == 3 and len(tr) == 2
+        assert np.array_equal(tr.req, [1, 2])
+        np.testing.assert_allclose(tr.sojourn_us, [5.0, 5.0])
+
+    def test_empty_finish(self):
+        col = PyTraceCollector(cap=8, n_jobs=1, route_len=2)
+        tr = col.finish()
+        assert len(tr) == 0 and tr.n_emitted == 0
+        assert tr.class_counts() == {"miss": 0, "hit": 0, "delayed": 0}
+
+
+# -------------------------------------------------------- Perfetto export
+
+
+class TestPerfettoExport:
+    def test_round_trip(self, closed_traced, tmp_path):
+        net, res = closed_traced
+        tr = res.traces[0][0]
+        path = tmp_path / "sample.trace.json"
+        names = [s.name for s in net.stations]
+        write_perfetto(path, tr, station_names=names)
+        summary = summarize_events(read_perfetto(path))
+        assert summary["requests_count"] == len(tr)
+        assert summary["by_cat_count"]["visit"] == int(tr.nvis.sum())
+        assert summary["by_cat_count"].get("mshr", 0) == int(
+            (tr.parked_us > 0).sum())
+        counts = tr.class_counts()
+        for name, n in summary["by_cls_count"].items():
+            assert counts[name] == n
+        assert summary["total_dur_us"] > 0
+
+    def test_slices_are_finite_and_named(self, closed_traced):
+        net, res = closed_traced
+        tr = res.traces[0][0]
+        obj = to_perfetto(tr, station_names=[s.name for s in net.stations])
+        slices = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+        names = {s.name for s in net.stations} | {"mshr_park"}
+        for e in slices:
+            assert np.isfinite(e["ts"]) and e["dur"] >= 0
+            assert e["name"] in names
+
+
+# ----------------------------------------------------------- provenance
+
+
+class TestProvenance:
+    def payload(self):
+        return stamp({"replay": {"x": 1.0}, "failures": {}},
+                     config={"n": 16_000}, seeds=(0, 1, 2))
+
+    def test_stamped_payload_validates(self):
+        assert validate_payload(self.payload()) == []
+
+    def test_config_hash_deterministic_and_sensitive(self):
+        a = config_hash({"n": 1, "p": [0.5, 0.9]})
+        b = config_hash({"p": [0.5, 0.9], "n": 1})  # key order irrelevant
+        c = config_hash({"n": 2, "p": [0.5, 0.9]})
+        assert a == b and a != c
+
+    def test_failures_must_be_tracebacks(self):
+        bad = self.payload()
+        bad["failures"] = ["fig3_lru"]
+        assert any("failures" in p for p in validate_payload(bad))
+        bad["failures"] = {"fig3_lru": ""}
+        assert any("traceback" in p for p in validate_payload(bad))
+
+    def test_missing_provenance_flagged(self):
+        assert any("provenance" in p
+                   for p in validate_payload({"replay": {}}))
+
+    def test_lineage_diff_finds_losses(self):
+        old = self.payload()
+        new = stamp({"failures": {}}, config={})
+        new["latency"] = {}
+        diff = lineage_diff(old, new)
+        assert diff["removed"] == ["replay"] and diff["added"] == ["latency"]
+
+    def test_cli_check_and_diff(self, tmp_path):
+        ok = tmp_path / "BENCH_a.json"
+        ok.write_text(json.dumps(self.payload()))
+        assert provenance_main(["check", str(ok)]) == 0
+        guard = tmp_path / "expected.json"
+        guard.write_text(json.dumps({"*": ["replay", "latency"]}))
+        assert provenance_main(
+            ["check", str(ok), "--expect", str(guard)]) == 1
+        lost = tmp_path / "BENCH_b.json"
+        lost.write_text(json.dumps(stamp({"failures": {}, "latency": {}})))
+        assert provenance_main(["diff", str(ok), str(lost)]) == 1
+        assert provenance_main(["diff", str(ok), str(ok)]) == 0
+
+    def test_repo_guard_file_loads(self):
+        guard = json.loads(
+            (REPO_ROOT / "benchmarks" / "expected_series.json").read_text())
+        assert "*" in guard and isinstance(guard["*"], list)
+
+
+# ------------------------------------------------------ metric registry
+
+
+class TestMetrics:
+    def test_unit_suffix_enforced(self):
+        m = Metrics()
+        with pytest.raises(ValueError, match="unit suffix"):
+            m.count("events")
+        with pytest.raises(ValueError):
+            m.gauge("depth", 1)
+        with pytest.raises(ValueError):
+            m.observe("sojourn", 1.0)
+
+    def test_snapshot_round_trip(self):
+        m = Metrics()
+        m.count("events_count")
+        m.count("events_count", 2)
+        m.gauge("depth_count", 7)
+        for v in (1.0, 10.0, 100.0):
+            m.observe("sojourn_us", v)
+        snap = m.snapshot()
+        assert snap["counters"]["events_count"] == 3
+        assert snap["gauges"]["depth_count"] == 7.0
+        d = snap["dists"]["sojourn_us"]
+        assert d["count"] == 3 and d["min"] == 1.0 and d["max"] == 100.0
+        assert d["mean"] == pytest.approx(37.0)
+
+    def test_sketch_quantiles_monotonic(self):
+        s = DistSketch()
+        rng = np.random.default_rng(0)
+        s.extend(rng.lognormal(3.0, 1.0, size=2_000))
+        qs = [s.quantile(q) for q in (0.0, 0.5, 0.9, 0.99, 1.0)]
+        assert qs == sorted(qs)
+        assert qs[0] == s.min_v and qs[-1] == s.max_v
+        # log-bucketed: p50 within a bucket's width of the true median
+        assert s.quantile(0.5) == pytest.approx(np.exp(3.0), rel=0.5)
+
+
+class TestTimelines:
+    def test_station_utilization(self, closed_traced):
+        net, res = closed_traced
+        tr = res.traces[0][0]
+        util = station_utilization(tr, len(net.stations))
+        assert util  # at least CPU + one cache/disk station observed
+        for st, row in util.items():
+            assert 0.0 < row["busy_frac"] <= 1.0
+            assert row["mean_occupancy_count"] <= net.mpl + 1e-6
+            assert row["span_us"] > 0
+
+    def test_convoy_stats(self, closed_traced):
+        net, res = closed_traced
+        tr = res.traces[0][0]
+        busiest = max(
+            station_utilization(tr, len(net.stations)).items(),
+            key=lambda kv: kv[1]["busy_frac"])[0]
+        stats = convoy_stats(tr, busiest)
+        assert stats["n_count"] >= 1
+        assert stats["total_us"] >= stats["max_us"] >= stats["mean_us"] > 0
+        assert convoy_stats(tr, 10_000)["n_count"] == 0
+
+    def test_trace_summary(self, closed_traced):
+        net, res = closed_traced
+        tr = res.traces[0][0]
+        s = trace_summary(tr, n_stations=len(net.stations))
+        assert s["records_count"] == len(tr)
+        assert s["dropped_count"] == 0
+        assert sum(s["classes_count"].values()) == len(tr)
+        assert s["sojourn_mean_us"] > 0 and s["stations"]
+
+    def test_observed_response(self, closed_traced):
+        _, res = closed_traced
+        tr = res.traces[0][0]
+        obs = observed_response(tr)
+        assert obs["n_count"] == len(tr)
+        pct = obs["percentiles_us"]
+        assert pct[0.5] <= pct[0.95] <= pct[0.99]
+        per_cls = obs["by_class"]
+        assert per_cls["hit"]["mean_us"] < per_cls["miss"]["mean_us"]
+        n = sum(c["n_count"] for c in per_cls.values())
+        assert n == len(tr)
+
+
+# ------------------------------------------------------- twin registry
+
+
+def test_trace_pair_registered():
+    sys.path.insert(0, str(REPO_ROOT))
+    try:
+        from tools.analysis.contracts import REGISTRY
+    finally:
+        sys.path.pop(0)
+    names = {p.name for p in REGISTRY}
+    assert "trace-records" in names
+    pair = next(p for p in REGISTRY if p.name == "trace-records")
+    assert pair.fast.endswith("trace_from_rings")
+    assert pair.oracle.endswith("make_records")
+
+
+def test_make_records_sorts_and_pads():
+    tr = make_records(
+        req=[2, 0, 1], branch=[0, 1, 0], cls=[CLS_HIT] * 3, nvis=[1, 2, 1],
+        parked_us=[0.0] * 3,
+        enter_us=[[5.0, 0.0], [0.0, 1.0], [3.0, 0.0]],
+        leave_us=[[6.0, 0.0], [1.0, 2.0], [4.0, 0.0]],
+        visits=np.array([[0, -1], [0, 1]]))
+    assert np.array_equal(tr.req, [0, 1, 2])
+    assert np.array_equal(tr.branch, [1, 0, 0])
+    assert np.isnan(tr.enter_us[1, 1]) and tr.station[1, 1] == -1
+    np.testing.assert_allclose(tr.sojourn_us, [2.0, 1.0, 1.0])

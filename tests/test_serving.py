@@ -286,3 +286,29 @@ def test_forecast_network_tiers(attn_model):
     assert {"l1:inflight", "l2:inflight"} <= cnames
     assert sum(b.probability(0.6) for b in cnet.branches) == pytest.approx(
         1.0, abs=1e-9)
+
+
+def test_engine_telemetry(attn_model):
+    """The per-tick metric registry reconciles with the engine's own
+    bookkeeping (PR 9's serving telemetry satellite)."""
+    cfg, params = attn_model
+    n_reqs = 6
+    reqs = zipf_request_stream(n_reqs, n_prefixes=2, prefix_len=16,
+                               vocab=cfg.vocab, seed=3, new_tokens=4)
+    eng = _serve(cfg, params, reqs)
+    assert not eng.tick()  # idle tick refreshes the start-of-tick gauges
+    tel = eng.telemetry()
+    counters = tel["metrics"]["counters"]
+    assert counters["admissions_count"] == n_reqs
+    assert counters["completions_count"] == n_reqs
+    assert counters["ticks_count"] == eng.ticks
+    assert counters["decode_steps_count"] == eng.decode_steps
+    assert counters["decode_tokens_count"] >= n_reqs
+    d = tel["metrics"]["dists"]["prefill_hit_frac"]
+    assert d["count"] == n_reqs and 0.0 <= d["min"] <= d["max"] <= 1.0
+    batch = tel["metrics"]["dists"]["decode_batch_count"]
+    assert batch["max"] <= eng.serve.max_seqs
+    gauges = tel["metrics"]["gauges"]
+    assert gauges["active_slots_count"] == 0  # drained
+    assert gauges["pages_free_count"] == eng.allocator.n_free
+    assert tel["stats"] == eng.stats()

@@ -10,12 +10,15 @@ Checkers (selectable via ``--only``):
 ``units``      ``_ns``/``_us``/``_rate`` suffix-mixing lint
 ``imports``    import-graph cycles, dead imports, dormant-wing report
 ``docs_paths`` README/docs path references must exist
+``obs``        telemetry conventions: metric-name unit suffixes,
+               shape-static trace rings under jit
 =============  =====================================================
 """
 
 from __future__ import annotations
 
-from . import contracts, docs_paths, import_graph, jit_lint, units_lint
+from . import (contracts, docs_paths, import_graph, jit_lint, obs_lint,
+               units_lint)
 
 CHECKERS = {
     "contracts": contracts.run,
@@ -23,6 +26,7 @@ CHECKERS = {
     "units": units_lint.run,
     "imports": import_graph.run,
     "docs_paths": docs_paths.run,
+    "obs": obs_lint.run,
 }
 
 RULES = {
@@ -33,6 +37,7 @@ RULES = {
     "units": ("units-mix", "units-assign"),
     "imports": ("imports-cycle", "imports-dead"),
     "docs_paths": ("docs-paths",),
+    "obs": ("obs-units", "obs-ring-static"),
     "_base": ("waiver-reason",),
 }
 

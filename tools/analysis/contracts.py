@@ -96,7 +96,9 @@ REGISTRY: Tuple[TwinPair, ...] = (
         name="cluster-simulator",
         fast="repro.cluster.sim:simulate_cluster",
         oracle="repro.cluster.sim:simulate_cluster_py",
-        fast_only=("p_hits", "seeds"),
+        # the key-routing oracle has no per-request ring buffers; shard
+        # attribution of traced requests rides the jax side's branch ids
+        fast_only=("p_hits", "seeds", "trace"),
         oracle_only=("key_probs", "assign", "p_hit", "seed"),
         default_exempt={
             "n_requests": "heapq oracle runs shorter traces (statistical "
@@ -132,6 +134,15 @@ REGISTRY: Tuple[TwinPair, ...] = (
         # tiered-MSHR extensions (and the backend switch that routes here).
         oracle_only=("coalesce_flows", "coalesce_theta", "arrival_rate",
                      "max_in_system", "burst", "backend", "tiers"),
+    ),
+    TwinPair(
+        name="trace-records",
+        fast="repro.obs.trace:trace_from_rings",
+        oracle="repro.obs.trace:make_records",
+        # the ring decoder additionally consumes the emitted-count scalar
+        # (n) to report drops; the oracle collector passes its own count.
+        fast_only=("n",),
+        oracle_only=("n_emitted",),
     ),
     TwinPair(
         name="mattson-sweep",
