@@ -46,6 +46,7 @@ BENCHES = [
     "fig_latency",  # beyond-paper: open-loop response time / SLO p*
     "fig_cluster",  # beyond-paper: sharded cluster, cluster-level p*
     "fig_hierarchy",  # beyond-paper: tiered L1 -> sharded L2 -> origin
+    "fig_drift",  # beyond-paper: streaming estimators / drift / residuals
     "table2_classify",  # Tables 1-2
     "bypass_mitigation",  # Sec. 5.2
     "serving_integration",  # beyond-paper: prefix-cache controller at pod scale
@@ -90,6 +91,7 @@ def main() -> None:
     # benches whose return value is recorded in the --json payload
     captured = {"replay_bench": "replay", "fig_latency": "latency",
                 "fig_cluster": "cluster", "fig_hierarchy": "hierarchy",
+                "fig_drift": "drift",
                 "kernel_bench": "kernels", "roofline": "roofline"}
     results = {}
     for name in BENCHES:
@@ -103,7 +105,17 @@ def main() -> None:
                 result = mod.main()
             bench_seconds[name] = time.time() - t0
             bench_timings[name] = mon.split
-            if name in captured and result is not None:
+            if name in captured:
+                # a registered bench that returns nothing would silently
+                # drop its series from the payload — and the provenance
+                # guard list would only catch it if someone remembered to
+                # register the series there too.  Fail loudly at the source.
+                if not result:
+                    raise RuntimeError(
+                        f"{name} is registered to emit the "
+                        f"{captured[name]!r} series but returned "
+                        f"{result!r} — benches in `captured` must return "
+                        f"a non-empty payload dict")
                 results[captured[name]] = result
             print(f"[{name}: ok in {bench_seconds[name]:.1f}s "
                   f"({mon.split['compile_s']:.1f}s compile)]", flush=True)

@@ -59,24 +59,32 @@ class ClusterSimResult:
     # [seed][p] per-request TraceRecords when trace=K was requested (the
     # record's branch id resolves to a shard via model.branch_shard).
     traces: list | None = None
+    # [seed][p] SketchEstimates when sketch_cap=K was requested (flow keys
+    # on the jax side; shard heat via SketchEstimates.shard_heat +
+    # model.branch_shard).
+    sketches: list | None = None
 
 
 def simulate_cluster(model: ClusterModel, p_hits, n_requests: int = 40_000,
                      seeds=(0, 1, 2), warmup_frac: float = 0.25,
                      coalesce_flows: int = 0, coalesce_theta: float = 0.0,
-                     trace: int = 0) -> ClusterSimResult:
+                     trace: int = 0, sketch_cap: int = 0,
+                     window_us: float = 0.0) -> ClusterSimResult:
     """Simulate the composed cluster over a grid of *global* hit ratios.
 
     ``coalesce_flows`` is the per-shard MSHR hot-flow count (each shard's
     disk owns its own flow group); ``trace=K`` keeps the last K
-    per-request trace records per lane (see :mod:`repro.obs.trace`).
-    Everything else matches
+    per-request trace records per lane (see :mod:`repro.obs.trace`);
+    ``sketch_cap=K`` threads the in-kernel streaming estimators
+    (:mod:`repro.obs.streaming`, windowed every ``window_us`` simulated
+    µs) onto ``sketches``.  Everything else matches
     :func:`repro.core.simulator.simulate_network`, which this wraps.
     """
     res = simulate_network(model.network, p_hits, n_requests=n_requests,
                            seeds=seeds, warmup_frac=warmup_frac,
                            coalesce_flows=coalesce_flows,
-                           coalesce_theta=coalesce_theta, trace=trace)
+                           coalesce_theta=coalesce_theta, trace=trace,
+                           sketch_cap=sketch_cap, window_us=window_us)
     shard = np.asarray(model.branch_shard)
     is_hit = ~np.asarray(model.branch_has_disk)
     N = model.n_shards
@@ -97,7 +105,7 @@ def simulate_cluster(model: ClusterModel, p_hits, n_requests: int = 40_000,
         p_hit=res.p_hit, throughput=res.throughput, ci95=res.ci95,
         shard_throughput=sx, shard_hit_ratio=shit, shard_delayed_frac=sdel,
         delayed_frac=res.delayed_frac, n_requests=n_requests,
-        traces=res.traces,
+        traces=res.traces, sketches=res.sketches,
     )
 
 
@@ -105,7 +113,9 @@ def simulate_cluster_py(model: ClusterModel, key_probs, assign,
                         p_hit: float, n_requests: int = 20_000,
                         seed: int = 0, warmup_frac: float = 0.25,
                         coalesce_flows: int = 0,
-                        coalesce_theta: float = 0.0) -> dict:
+                        coalesce_theta: float = 0.0,
+                        sketch_cap: int = 0,
+                        window_us: float = 0.0) -> dict:
     """Key-routing heapq oracle for :func:`simulate_cluster` at one
     global hit ratio.
 
@@ -119,6 +129,17 @@ def simulate_cluster_py(model: ClusterModel, key_probs, assign,
     Returns a dict with cluster ``x``, per-shard ``shard_x`` /
     ``shard_hit_ratio`` / ``shard_delayed_frac``, measured ``shard_share``
     (the emergent routing weights), and ``delayed_frac``.
+
+    ``sketch_cap > 0`` attaches the exact-counting estimator twin
+    (:class:`repro.obs.streaming.PyStreamSketch`): because this oracle is
+    the one engine that sees *true workload keys* (not coalescing flows),
+    its sketch counts the routed key stream itself — the decoded
+    estimates under ``"sketch"`` feed
+    :func:`repro.obs.streaming.observed_profile` /
+    ``observed_shard_profile`` directly.  Branch lanes in its windowed
+    per-branch counters are ``shard * B + base_branch`` (so
+    ``SketchEstimates.shard_heat`` recovers per-shard completion heat
+    with an ``assign`` of ``lane // B``).
     """
     rng = random.Random(seed)
     base = model.base
@@ -142,6 +163,13 @@ def simulate_cluster_py(model: ClusterModel, key_probs, assign,
                     & (visits[0] >= 0)).any(axis=1))
     sample_flow = (_flow_sampler(rng, coalesce_flows, coalesce_theta)
                    if coalesce_flows else None)
+    if sketch_cap:
+        from repro.obs.streaming import PyStreamSketch
+
+        sk = PyStreamSketch(sketch_cap, n_branches=N * B,
+                            window_us=window_us)
+    else:
+        sk = None
 
     def sample(sh: int, k: int) -> float:
         if dist[k] == 1:
@@ -152,6 +180,8 @@ def simulate_cluster_py(model: ClusterModel, key_probs, assign,
         key = int(np.searchsorted(key_cum, rng.random()))
         sh = int(assign[key])
         b = int(np.searchsorted(cum[sh], rng.random()))
+        if sk is not None:  # the true routed key, pre-hash
+            sk.key(key)
         return sh, b
 
     M = model.network.mpl
@@ -176,6 +206,9 @@ def simulate_cluster_py(model: ClusterModel, key_probs, assign,
     def complete(j: int, now: float, was_delayed: bool = False) -> None:
         nonlocal done, delayed, warm
         sh, b = job_shard[j], job_branch[j]
+        if sk is not None:  # delayed hits count as misses (miss branches)
+            sk.done(now, sh * B + b, is_hit=bool(hit_branch[b]),
+                    delayed=was_delayed)
         done += 1
         sh_done[sh] += 1
         if hit_branch[b]:
@@ -255,4 +288,5 @@ def simulate_cluster_py(model: ClusterModel, key_probs, assign,
         "shard_hit_ratio": hit_ratio,
         "shard_delayed_frac": del_frac,
         "delayed_frac": (delayed - w_del) / n_meas,
+        "sketch": sk.estimates() if sk is not None else None,
     }

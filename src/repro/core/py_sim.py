@@ -32,6 +32,7 @@ from repro.core.simulator import (
     CLS_MISS,
     compile_network,
 )
+from repro.obs.streaming import PyStreamSketch
 from repro.obs.trace import PyTraceCollector
 
 
@@ -59,6 +60,8 @@ def simulate_py(
     burst=None,
     tiers=None,
     trace: int = 0,
+    sketch_cap: int = 0,
+    window_us: float = 0.0,
 ):
     """Simulate and return throughput in requests/µs.
 
@@ -102,6 +105,14 @@ def simulate_py(
     :class:`~repro.obs.trace.TraceRecords` — the oracle side of the
     trace twin contract.  Closed/tiered modes require ``full=True``
     (the bare-float return has nowhere to put the trace).
+
+    ``sketch_cap > 0`` runs the exact-counting streaming-estimator twin
+    (:class:`repro.obs.streaming.PyStreamSketch`, windowed every
+    ``window_us`` simulated µs) over the same event stream the JAX
+    kernels feed their in-kernel sketches, returning its decoded
+    :class:`~repro.obs.streaming.SketchEstimates` under ``"sketch"`` —
+    the oracle side of the sketch twin contract.  Same ``full=True``
+    requirement as tracing in closed/tiered modes.
     """
     rng = random.Random(seed)
     spec = compile_network(net, p_hit)
@@ -135,6 +146,13 @@ def simulate_py(
     if trace and arrival_rate is None and not full:
         raise ValueError("trace > 0 requires full=True in closed/tiered "
                          "modes (the bare-float return drops the records)")
+    if sketch_cap:
+        if window_us <= 0.0:
+            raise ValueError("sketch_cap > 0 requires window_us > 0")
+        if arrival_rate is None and not full:
+            raise ValueError("sketch_cap > 0 requires full=True in "
+                             "closed/tiered modes (the bare-float return "
+                             "drops the estimates)")
     if tiers is not None and coalesce_flows:
         if arrival_rate is not None or burst is not None:
             raise ValueError("tiered MSHR coalescing runs the closed loop "
@@ -145,14 +163,14 @@ def simulate_py(
         return _simulate_py_tiered(
             rng, is_q, visits, servers, sample, new_branch, sample_flow,
             tiers, coalesce_flows, net.mpl, n_requests, warmup_frac, full,
-            branch_is_miss, trace,
+            branch_is_miss, trace, sketch_cap, window_us,
         )
     if arrival_rate is not None:
         return _simulate_py_open(
             rng, is_q, svc, dist, cum, visits, servers, disk_rank, sample,
             new_branch, sample_flow, n_requests, warmup_frac,
             coalesce_flows, float(arrival_rate), max_in_system, burst,
-            trace,
+            trace, sketch_cap, window_us,
         )
     if burst is not None:
         raise ValueError("burst arrivals require arrival_rate "
@@ -160,6 +178,8 @@ def simulate_py(
 
     N = net.mpl
     tr = PyTraceCollector(trace, N, visits.shape[1]) if trace else None
+    sk = (PyStreamSketch(sketch_cap, n_branches=B, window_us=window_us)
+          if sketch_cap else None)
     heap: list = []
     queues = {k: [] for k in range(K) if is_q[k]}
     # busy count per queue station: jobs in service, <= servers[k] (matches
@@ -207,6 +227,10 @@ def simulate_py(
                          else CLS_HIT)
             tr.complete(j, job_branch[j], cls_j, job_pos[j] + 1, parked_us)
             tr.start(j, now)  # the fresh request enters its think station
+        if sk is not None:  # delayed hits count as misses (miss branches)
+            sk.done(now, job_branch[j],
+                    is_hit=not branch_has_disk[job_branch[j]],
+                    delayed=was_delayed)
         done += 1
         if warm_c is None and done >= warm_target:
             warm_c, warm_t, warm_d = done, now, delayed
@@ -252,6 +276,8 @@ def simulate_py(
             # flows are local to the disk (shard) the miss arrives at
             f = int(disk_rank[k2]) * F + sample_flow()
             job_flow[j] = f
+            if sk is not None:  # every disk arrival, park or lead
+                sk.key(f)
             if f in leader:  # fetch already in flight: park, no new I/O
                 parked.setdefault(f, []).append(j)
                 continue
@@ -276,13 +302,15 @@ def simulate_py(
         "t_measured": t - warm_t,
         "warm_done": warm_c,
         "trace": tr.finish(visits) if tr is not None else None,
+        "sketch": sk.estimates() if sk is not None else None,
     }
 
 
 def _simulate_py_tiered(
     rng, is_q, visits, servers, sample, new_branch, sample_flow,
     tiers, coalesce_flows, mpl, n_requests, warmup_frac, full,
-    branch_is_miss=None, trace: int = 0,
+    branch_is_miss=None, trace: int = 0, sketch_cap: int = 0,
+    window_us: float = 0.0,
 ):
     """Closed-loop heapq twin of simulator._simulate_tiered: cross-tier
     MSHR acquire/park/release driven by the MshrSpec annotation arrays,
@@ -307,6 +335,8 @@ def _simulate_py_tiered(
     job_branch = [0] * N
     job_pos = [0] * N
     tr = PyTraceCollector(trace, N, visits.shape[1]) if trace else None
+    sk = (PyStreamSketch(sketch_cap, n_branches=B, window_us=window_us)
+          if sketch_cap else None)
     for j in range(N):
         b = new_branch()
         job_branch[j] = b
@@ -344,6 +374,10 @@ def _simulate_py_tiered(
                          else CLS_HIT)
             tr.complete(j, job_branch[j], cls_j, job_pos[j] + 1, parked_us)
             tr.start(j, now)
+        if sk is not None:  # delayed hits count as misses (miss branches)
+            sk.done(now, job_branch[j],
+                    is_hit=not branch_is_miss[job_branch[j]],
+                    delayed=was_delayed)
         done += 1
         if warm_c is None and done >= warm_target:
             warm_c, warm_t, warm_d = done, now, delayed
@@ -405,6 +439,8 @@ def _simulate_py_tiered(
         if g >= 0:
             if job_flow[j] < 0:
                 job_flow[j] = sample_flow()
+                if sk is not None:  # first (shallowest) acquire only
+                    sk.key(job_flow[j])
             slot = g * F + job_flow[j]
             if slot in leader:  # fetch in flight: park across the tier
                 parked.setdefault(slot, []).append(
@@ -434,6 +470,7 @@ def _simulate_py_tiered(
         "t_measured": t - warm_t,
         "warm_done": warm_c,
         "trace": tr.finish(visits) if tr is not None else None,
+        "sketch": sk.estimates() if sk is not None else None,
     }
 
 
@@ -441,6 +478,7 @@ def _simulate_py_open(
     rng, is_q, svc, dist, cum, visits, servers, disk_rank, sample,
     new_branch, sample_flow, n_requests, warmup_frac, coalesce_flows,
     arrival_rate, max_in_system, burst=None, trace: int = 0,
+    sketch_cap: int = 0, window_us: float = 0.0,
 ):
     """Open-loop heapq twin of simulator._simulate_open (same semantics:
     Poisson — or ON-OFF burst — arrivals into a bounded slot pool,
@@ -473,6 +511,8 @@ def _simulate_py_open(
     arrive_t = [0.0] * N
     free = list(range(N))
     tr = PyTraceCollector(trace, N, visits.shape[1]) if trace else None
+    sk = (PyStreamSketch(sketch_cap, n_branches=len(cum),
+                         window_us=window_us) if sketch_cap else None)
 
     records: list = []  # (sojourn, class) in completion order
     done = 0
@@ -490,6 +530,9 @@ def _simulate_py_open(
             else:
                 parked_us = 0.0
             tr.complete(j, job_branch[j], c, job_pos[j] + 1, parked_us)
+        if sk is not None:  # delayed hits count as misses (miss branches)
+            sk.done(now, job_branch[j], is_hit=(c == CLS_HIT),
+                    delayed=(c == CLS_DELAYED))
         done += 1
         records.append((now - arrive_t[j], c))
         free.append(j)
@@ -528,6 +571,8 @@ def _simulate_py_open(
             else:
                 heapq.heappush(heap, (t + rng.expovariate(arrival_rate),
                                       -1, -1))
+            if sk is not None:  # every offered arrival, admitted or not
+                sk.arrival(t)
             if not free:
                 dropped += 1
                 continue
@@ -573,6 +618,8 @@ def _simulate_py_open(
         if coalesce_flows and disk_rank[k2] >= 0:
             f = int(disk_rank[k2]) * F + sample_flow()
             job_flow[j] = f
+            if sk is not None:  # every disk arrival, park or lead
+                sk.key(f)
             if f in leader:
                 parked.setdefault(f, []).append(j)
                 continue
@@ -604,4 +651,5 @@ def _simulate_py_open(
         "drop_frac": dropped / max(done + dropped, 1),
         "warm_done": warm_c,
         "trace": tr.finish(visits) if tr is not None else None,
+        "sketch": sk.estimates() if sk is not None else None,
     }

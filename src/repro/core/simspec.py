@@ -231,3 +231,6 @@ class SimResult:
     # TraceRecords); None unless the run requested in-kernel tracing
     # (simulate_network(trace=K) / simulate_grid_pallas(trace=K)).
     traces: list | None = None
+    # decoded per-lane streaming estimators ([seed][p] repro.obs.streaming
+    # SketchEstimates); None unless simulate_network(sketch_cap=K).
+    sketches: list | None = None

@@ -68,6 +68,9 @@ import numpy as np
 from repro.core.queueing import ClosedNetwork
 from repro.core.simspec import (BIG_SEQ, INF_NS, SimResult, SimSpec,
                                 compile_network, stack_specs)
+from repro.obs.streaming import (decode_sketch_grid, sketch_init,
+                                 stream_arrival, stream_done,
+                                 stream_done_many, stream_key, stream_tick)
 from repro.obs.trace import (TraceScratch, decode_trace_grid, init_trace,
                              ring_write_many, ring_write_one)
 
@@ -154,17 +157,19 @@ class _SimState(NamedTuple):
 
 @partial(jax.jit,
          static_argnames=("n_requests", "warmup", "mpl", "max_events",
-                          "n_flows", "flow_theta", "n_disks", "trace_cap"))
+                          "n_flows", "flow_theta", "n_disks", "trace_cap",
+                          "sketch_cap", "window_us"))
 def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
               max_events: int, n_flows: int = 0,
               flow_theta: float = 0.0, n_disks: int = 1,
-              trace_cap: int = 0) -> tuple:
+              trace_cap: int = 0, sketch_cap: int = 0,
+              window_us: float = 0.0) -> tuple:
     N = mpl
     F = max(n_flows, 1)  # leader-table shape must be static even when unused
     L = spec.visits.shape[1]
     B = spec.branch_cum.shape[0]
     key = jax.random.PRNGKey(seed)
-    if trace_cap:
+    if trace_cap or sketch_cap:
         # sojourn class of a completed branch: any disk visit => miss route
         vis_rank = spec.disk_rank[jnp.maximum(spec.visits, 0)]
         branch_has_disk = ((vis_rank >= 0) & (spec.visits >= 0)).any(axis=1)
@@ -205,13 +210,14 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         warm_branch_delayed=jnp.zeros((B,), jnp.int32),
     )
     tr0 = init_trace(trace_cap, N, L)
+    sk0 = sketch_init(sketch_cap, B)
 
     def cond(carry):
-        state, events, _tr = carry
+        state, events, _tr, _sk = carry
         return (state.completed < n_requests) & (events < max_events)
 
     def body(carry):
-        state, events, tr = carry
+        state, events, tr, sk = carry
         if trace_cap:
             rings, scr = tr
         if n_flows:
@@ -225,6 +231,8 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
         finite = state.ready_ns < INF_NS
         ready = jnp.where(finite, state.ready_ns - t, INF_NS)
         elapsed_us = state.elapsed_us + t.astype(jnp.float32) * 1e-3
+        if sketch_cap:
+            sk, w_slot = stream_tick(sk, elapsed_us, window_us)
 
         k_cur = state.station[j]
         busy_count = state.busy_count
@@ -260,6 +268,8 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             wcount = woken.astype(jnp.int32)
             branch_done = branch_done.at[branch].add(wcount)
             branch_delayed = branch_delayed.at[branch].add(wcount)
+            if sketch_cap:
+                sk = stream_done_many(sk, w_slot, branch, woken)
             if trace_cap:
                 # the woken requests' park visit ends now; they completed
                 # their whole parked interval at the visit they parked at.
@@ -318,6 +328,10 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
 
         new_branch = sample_branch(k_branch)
         branch_done = branch_done.at[branch[j]].add(done.astype(jnp.int32))
+        if sketch_cap:
+            sk = stream_done(sk, w_slot, branch[j],
+                             ~branch_has_disk[branch[j]], jnp.bool_(False),
+                             done)
         branch_j = jnp.where(done, new_branch, branch[j])
         pos_j = jnp.where(done, 0, nxt_pos)
         k_next = jnp.where(done, spec.visits[new_branch, 0], route_next)
@@ -350,6 +364,10 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             at_disk = rank_next >= 0
             f_new = (jnp.maximum(rank_next, 0) * F
                      + _sample_flow(k_flow, n_flows, flow_theta))
+            if sketch_cap:
+                # every miss arrival at the store observes its flow key
+                # (leader or parked alike) — the popularity stream.
+                sk = stream_key(sk, f_new, at_disk)
             parks = at_disk & (leader[f_new] >= 0)
             starts_now = ((~is_q) | has_slot) & ~parks
             waits = is_q & ~has_slot & ~parks
@@ -396,10 +414,11 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
             warm_branch_done=warm_branch_done,
             warm_branch_delayed=warm_branch_delayed,
         )
-        return new_state, events + 1, ((rings, scr) if trace_cap else tr)
+        return (new_state, events + 1,
+                ((rings, scr) if trace_cap else tr), sk)
 
-    state, events, tr = jax.lax.while_loop(
-        cond, body, (state, jnp.int32(0), tr0)
+    state, events, tr, sk = jax.lax.while_loop(
+        cond, body, (state, jnp.int32(0), tr0, sk0)
     )
 
     n_measured = state.completed - state.warm_completed
@@ -415,6 +434,8 @@ def _simulate(spec: SimSpec, seed, n_requests: int, warmup: int, mpl: int,
            jnp.maximum(t_measured, 1e-6))
     if trace_cap:
         out = out + (tr[0],)
+    if sketch_cap:
+        out = out + (sk,)
     return out
 
 
@@ -458,12 +479,13 @@ class _TieredState(NamedTuple):
 @partial(jax.jit,
          static_argnames=("n_requests", "warmup", "mpl", "max_events",
                           "n_flows", "flow_theta", "n_groups", "max_held",
-                          "trace_cap"))
+                          "trace_cap", "sketch_cap", "window_us"))
 def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
                      n_requests: int, warmup: int, mpl: int,
                      max_events: int, n_flows: int,
                      flow_theta: float = 0.0, n_groups: int = 1,
-                     max_held: int = 1, trace_cap: int = 0) -> tuple:
+                     max_held: int = 1, trace_cap: int = 0,
+                     sketch_cap: int = 0, window_us: float = 0.0) -> tuple:
     """Tiered (hierarchy) twin of :func:`_simulate`.
 
     The ``disk_rank`` convention is replaced by explicit
@@ -486,7 +508,7 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
     L = spec.visits.shape[1]
     B = spec.branch_cum.shape[0]
     key = jax.random.PRNGKey(seed)
-    if trace_cap:
+    if trace_cap or sketch_cap:
         # a branch is a miss route if it ever acquires an MSHR entry or
         # visits a disk-ranked station (the tiered networks use acq_*).
         vis_rank = spec.disk_rank[jnp.maximum(spec.visits, 0)]
@@ -531,13 +553,14 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
         warm_branch_delayed=jnp.zeros((B,), jnp.int32),
     )
     tr0 = init_trace(trace_cap, N, L)
+    sk0 = sketch_init(sketch_cap, B)
 
     def cond(carry):
-        state, events, _tr = carry
+        state, events, _tr, _sk = carry
         return (state.completed < n_requests) & (events < max_events)
 
     def body(carry):
-        state, events, tr = carry
+        state, events, tr, sk = carry
         if trace_cap:
             rings, scr = tr
         (key, k_svc1, k_svc2, k_branch, k_flow, k_wake_b,
@@ -548,6 +571,8 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
         finite = state.ready_ns < INF_NS
         ready = jnp.where(finite, state.ready_ns - t, INF_NS)
         elapsed_us = state.elapsed_us + t.astype(jnp.float32) * 1e-3
+        if sketch_cap:
+            sk, w_slot = stream_tick(sk, elapsed_us, window_us)
 
         k_cur = state.station[j]
         busy_count = state.busy_count
@@ -598,6 +623,8 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
         wcount = woken.astype(jnp.int32)
         branch_done = branch_done.at[branch].add(wcount)
         branch_delayed = branch_delayed.at[branch].add(wcount)
+        if sketch_cap:
+            sk = stream_done_many(sk, w_slot, branch, woken)
         delayed_lvl = delayed_lvl.at[
             jnp.where(woken, jnp.maximum(parked_lvl, 0), max_held)
         ].add(wcount)
@@ -658,6 +685,10 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
 
         new_branch = sample_branch(k_branch)
         branch_done = branch_done.at[branch[j]].add(done.astype(jnp.int32))
+        if sketch_cap:
+            sk = stream_done(sk, w_slot, branch[j],
+                             ~branch_is_miss[branch[j]], jnp.bool_(False),
+                             done)
         branch_j = jnp.where(done, new_branch, branch[j])
         pos_j = jnp.where(done, 0, nxt_pos)
         k_next = jnp.where(done, spec.visits[new_branch, 0], route_next)
@@ -682,6 +713,11 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
         at_acq = acq_g >= 0
         f_req = jnp.where(flow_f[j] >= 0, flow_f[j],
                           _sample_flow(k_flow, n_flows, flow_theta))
+        if sketch_cap:
+            # the request's key enters the popularity stream once, at its
+            # first (shallowest) MSHR acquire — the same flow is reused at
+            # every deeper acquire.
+            sk = stream_key(sk, f_req, at_acq & (flow_f[j] < 0))
         slot_new = jnp.maximum(acq_g, 0) * F + f_req
         parks = at_acq & (leader[slot_new] >= 0)
         leads = at_acq & ~parks
@@ -746,10 +782,11 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
             warm_branch_done=warm_branch_done,
             warm_branch_delayed=warm_branch_delayed,
         )
-        return new_state, events + 1, ((rings, scr) if trace_cap else tr)
+        return (new_state, events + 1,
+                ((rings, scr) if trace_cap else tr), sk)
 
-    state, events, tr = jax.lax.while_loop(
-        cond, body, (state, jnp.int32(0), tr0)
+    state, events, tr, sk = jax.lax.while_loop(
+        cond, body, (state, jnp.int32(0), tr0, sk0)
     )
 
     n_measured = state.completed - state.warm_completed
@@ -771,6 +808,8 @@ def _simulate_tiered(spec: SimSpec, acq_group, acq_slot, rel_slot, seed,
            tier_delayed)
     if trace_cap:
         out = out + (tr[0],)
+    if sketch_cap:
+        out = out + (sk,)
     return out
 
 
@@ -803,11 +842,12 @@ class _OpenState(NamedTuple):
 @partial(jax.jit,
          static_argnames=("n_requests", "warmup", "max_in_system",
                           "max_events", "n_flows", "flow_theta", "n_disks",
-                          "burst", "trace_cap"))
+                          "burst", "trace_cap", "sketch_cap", "window_us"))
 def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                    warmup: int, max_in_system: int, max_events: int,
                    n_flows: int = 0, flow_theta: float = 0.0,
-                   n_disks: int = 1, burst=None, trace_cap: int = 0) -> tuple:
+                   n_disks: int = 1, burst=None, trace_cap: int = 0,
+                   sketch_cap: int = 0, window_us: float = 0.0) -> tuple:
     """Arrival-driven (open-loop) twin of :func:`_simulate`.
 
     One extra event type — a Poisson arrival — competes with service
@@ -892,13 +932,14 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
         phase_to_ns=phase_to0,
     )
     tr0 = init_trace(trace_cap, N, L)
+    sk0 = sketch_init(sketch_cap, spec.visits.shape[0])
 
     def cond(carry):
-        state, events, _tr = carry
+        state, events, _tr, _sk = carry
         return (state.completed < n_requests) & (events < max_events)
 
     def body(carry):
-        state, events, tr = carry
+        state, events, tr, sk = carry
         n_keys = 7 if n_flows else 6
         if burst is not None:
             n_keys += 2
@@ -928,6 +969,8 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
         ready = jnp.where(finite, state.ready_ns - t, INF_NS)
         dt_us = t.astype(jnp.float32) * 1e-3
         elapsed_us = state.elapsed_us + dt_us
+        if sketch_cap:
+            sk, w_slot = stream_tick(sk, elapsed_us, window_us)
         state = state._replace(
             key=key, ready_ns=ready,
             next_arrival_ns=next_arrival,
@@ -940,7 +983,7 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
 
         def toggle(args):
             # ON -> OFF: arrivals pause; OFF -> ON: fresh arrival clock.
-            s, tr = args
+            s, tr, sk = args
             going_on = ~s.phase_on
             return s._replace(
                 phase_on=going_on,
@@ -948,10 +991,14 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                                           jnp.int32(INF_NS)),
                 phase_to_ns=jnp.where(going_on, exp_ns(k_tog_p, mean_on_ns),
                                       exp_ns(k_tog_p, mean_off_ns)),
-            ), tr
+            ), tr, sk
 
         def arrive(args):
-            s, tr = args
+            s, tr, sk = args
+            if sketch_cap:
+                # every offered arrival counts, admitted or dropped — the
+                # windowed arrival rate estimates the *offered* load.
+                sk = stream_arrival(sk, w_slot, jnp.bool_(True))
             free = s.station < 0
             admit = free.any()
             slot = jnp.argmax(free).astype(jnp.int32)
@@ -978,10 +1025,10 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                                  s.age_us),
                 dropped=s.dropped + (~admit).astype(jnp.int32),
                 next_arrival_ns=interarrival(k_ia),
-            ), tr
+            ), tr, sk
 
         def depart(args):
-            s, tr = args
+            s, tr, sk = args
             if trace_cap:
                 rings, scr = tr
             ready, station, branch = s.ready_ns, s.station, s.branch
@@ -1017,6 +1064,8 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                 n_woken = woken.sum().astype(jnp.int32)
                 completed = completed + n_woken
                 delayed = delayed + n_woken
+                if sketch_cap:
+                    sk = stream_done_many(sk, w_slot, branch, woken)
                 ready = jnp.where(woken, INF_NS, ready)
                 station = jnp.where(woken, -1, station)
                 leader = jnp.where(
@@ -1060,6 +1109,10 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                 jnp.where(branch_has_disk[branch[j]], CLS_MISS,
                           CLS_HIT).astype(jnp.int8)
             )
+            if sketch_cap:
+                sk = stream_done(sk, w_slot, branch[j],
+                                 ~branch_has_disk[branch[j]],
+                                 jnp.bool_(False), done)
             if trace_cap:
                 leave_m = scr.leave_us.at[j, pos[j]].set(s.elapsed_us)
                 cls_j = jnp.where(branch_has_disk[branch[j]], CLS_MISS,
@@ -1087,6 +1140,8 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                 at_disk = (rank_next >= 0) & (route_next >= 0) & ~done
                 f_new = (jnp.maximum(rank_next, 0) * F
                          + _sample_flow(k_flow, n_flows, flow_theta))
+                if sketch_cap:
+                    sk = stream_key(sk, f_new, at_disk)
                 parks = at_disk & (leader[f_new] >= 0)
                 starts_now = ((~is_q) | has_slot) & ~parks & ~done
                 waits = is_q & ~has_slot & ~parks
@@ -1119,21 +1174,21 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
                 flow=flow, leader=leader, delayed=delayed,
                 warm_delayed=jnp.where(warm_now, delayed, s.warm_delayed),
                 soj_us=soj_us, cls=cls,
-            ), ((rings, scr) if trace_cap else tr)
+            ), ((rings, scr) if trace_cap else tr), sk
 
         if burst is not None:
-            new_state, tr = jax.lax.cond(
+            new_state, tr, sk = jax.lax.cond(
                 is_arrival, arrive,
                 lambda a: jax.lax.cond(is_toggle, toggle, depart, a),
-                (state, tr),
+                (state, tr, sk),
             )
         else:
-            new_state, tr = jax.lax.cond(is_arrival, arrive, depart,
-                                         (state, tr))
-        return new_state, events + 1, tr
+            new_state, tr, sk = jax.lax.cond(is_arrival, arrive, depart,
+                                             (state, tr, sk))
+        return new_state, events + 1, tr, sk
 
-    state, events, tr = jax.lax.while_loop(
-        cond, body, (state, jnp.int32(0), tr0)
+    state, events, tr, sk = jax.lax.while_loop(
+        cond, body, (state, jnp.int32(0), tr0, sk0)
     )
 
     n_measured = state.completed - state.warm_completed
@@ -1147,6 +1202,8 @@ def _simulate_open(spec: SimSpec, seed, arrival_mean_ns, n_requests: int,
            state.soj_us, state.cls)
     if trace_cap:
         out = out + (tr[0],)
+    if sketch_cap:
+        out = out + (sk,)
     return out
 
 
@@ -1181,6 +1238,9 @@ class OpenSimResult:
     # decoded per-lane trace records ([seed][p] TraceRecords), None unless
     # simulate_network(trace=K) requested in-kernel trace rings.
     traces: list | None = None
+    # decoded per-lane streaming estimators ([seed][p] SketchEstimates),
+    # None unless simulate_network(sketch_cap=K) requested them.
+    sketches: list | None = None
 
 
 def simulate_network(
@@ -1197,6 +1257,8 @@ def simulate_network(
     backend: str = "jax",
     tiers=None,
     trace: int = 0,
+    sketch_cap: int = 0,
+    window_us: float = 0.0,
 ):
     """Simulate ``net`` over a grid of hit ratios.
 
@@ -1254,6 +1316,16 @@ def simulate_network(
     at all and is bit-identical to the untraced simulator; tracing draws
     no RNG, so enabling it does not perturb the simulated system either.
 
+    ``sketch_cap > 0`` threads the in-kernel streaming estimators
+    (:mod:`repro.obs.streaming`) through every lane: tumbling-window
+    hit/arrival/σ counters, EWMA smoothers, and a count-min + SpaceSaving
+    key-popularity sketch sized for ``sketch_cap`` tracked keys, sampled
+    every ``window_us`` µs of simulated time (required > 0).  The decoded
+    ``[seed][p]`` :class:`~repro.obs.streaming.SketchEstimates` land on the
+    result's ``sketches`` field.  Like tracing, ``sketch_cap=0`` (default)
+    compiles no estimator state at all and is bit-identical to current
+    behaviour, and the estimators draw no RNG.
+
     ``backend="pallas"`` routes the closed-loop grid to the accelerator
     event-sim kernel (:func:`repro.kernels.event_sim.simulate_grid_pallas`)
     — the whole (p_hit x seed) grid as one pallas dispatch with per-lane
@@ -1265,6 +1337,9 @@ def simulate_network(
     if backend not in ("jax", "pallas"):
         raise ValueError(f"unknown backend {backend!r} (want 'jax' or "
                          "'pallas')")
+    if sketch_cap and window_us <= 0.0:
+        raise ValueError("sketch_cap > 0 requires window_us > 0 (the "
+                         "tumbling-window width in simulated µs)")
     if backend == "pallas":
         if (coalesce_flows or arrival_rate is not None or burst is not None
                 or tiers is not None):
@@ -1272,6 +1347,10 @@ def simulate_network(
                 "backend='pallas' runs the plain closed loop only — "
                 "coalescing, tiered MSHR tables, open-loop arrivals and "
                 "bursts need backend='jax'")
+        if sketch_cap:
+            raise ValueError(
+                "backend='pallas' does not thread the streaming sketch "
+                "estimators — use backend='jax' for sketch_cap > 0")
         from repro.kernels.event_sim import simulate_grid_pallas  # lazy
 
         return simulate_grid_pallas(net, p_hits, n_requests=n_requests,
@@ -1317,6 +1396,7 @@ def simulate_network(
                     n_groups=int(tiers.n_groups),
                     max_held=int(tiers.max_held),
                     trace_cap=trace,
+                    sketch_cap=sketch_cap, window_us=float(window_us),
                 ),
                 in_axes=(0, 0),
             )
@@ -1328,6 +1408,7 @@ def simulate_network(
                     warmup=warmup, mpl=net.mpl, max_events=max_events,
                     n_flows=coalesce_flows, flow_theta=coalesce_theta,
                     n_disks=n_disks, trace_cap=trace,
+                    sketch_cap=sketch_cap, window_us=float(window_us),
                 ),
                 in_axes=(0, 0),
             )
@@ -1340,9 +1421,12 @@ def simulate_network(
         bd = np.asarray(out[5]).reshape(S, P, -1) / t_meas
         tier_dl = (np.asarray(out[7]).reshape(S, P, -1).mean(axis=0)
                    if tiered else None)
-        traces = (decode_trace_grid(out[8 if tiered else 7],
-                                     specs[0].visits, S, P)
+        base = 8 if tiered else 7
+        traces = (decode_trace_grid(out[base], specs[0].visits, S, P)
                   if trace else None)
+        sketches = (decode_sketch_grid(out[base + (1 if trace else 0)],
+                                       S, P, float(window_us))
+                    if sketch_cap else None)
         mean = xs.mean(axis=0)
         ci = 1.96 * xs.std(axis=0, ddof=1) / math.sqrt(len(seeds)) if len(seeds) > 1 else np.zeros_like(mean)
         return SimResult(p_hit=p_hits, throughput=mean, ci95=ci,
@@ -1350,7 +1434,8 @@ def simulate_network(
                          branch_throughput=bx.mean(axis=0),
                          branch_delayed=bd.mean(axis=0),
                          delayed_tier_frac=tier_dl,
-                         traces=traces)
+                         traces=traces,
+                         sketches=sketches)
 
     if tiers is not None:
         raise ValueError("tiered MSHR coalescing runs the closed loop only "
@@ -1373,6 +1458,7 @@ def simulate_network(
             flow_theta=coalesce_theta, n_disks=n_disks,
             burst=tuple(burst) if burst is not None else None,
             trace_cap=trace,
+            sketch_cap=sketch_cap, window_us=float(window_us),
         ),
         in_axes=(0, 0, 0),
     )
@@ -1380,6 +1466,9 @@ def simulate_network(
     x, completed, _events, delayed, dropped, soj, cls = out[:7]
     traces = (decode_trace_grid(out[7], specs[0].visits, S, P)
               if trace else None)
+    sketches = (decode_sketch_grid(out[7 + (1 if trace else 0)],
+                                   S, P, float(window_us))
+                if sketch_cap else None)
     xs = np.asarray(x).reshape(S, P)
     comp = np.asarray(completed).reshape(S, P)
     dl = np.asarray(delayed).reshape(S, P)
@@ -1439,4 +1528,5 @@ def simulate_network(
         truncated=truncated,
         n_requests=n_requests,
         traces=traces,
+        sketches=sketches,
     )

@@ -51,10 +51,14 @@ class HierarchySimResult:
     # (``trace=K``): [seed][p] TraceRecords from the jax engine, a single
     # TraceRecords from the heapq oracle.  None otherwise.
     traces: object = None
+    # streaming-estimator decodes when the run asked for sketches
+    # (``sketch_cap=K``): [seed][p] SketchEstimates from the jax engine,
+    # a single SketchEstimates from the heapq oracle.  None otherwise.
+    sketches: object = None
 
 
 def _fold(model: HierarchyModel, p_hit, x, ci, bx, delayed, tier_dl,
-          n_requests: int, traces=None) -> HierarchySimResult:
+          n_requests: int, traces=None, sketches=None) -> HierarchySimResult:
     level = np.asarray(model.branch_level)
     shard = np.asarray(model.branch_shard)
     P = len(p_hit)
@@ -71,7 +75,7 @@ def _fold(model: HierarchyModel, p_hit, x, ci, bx, delayed, tier_dl,
         ci95=np.asarray(ci), level_throughput=lvl_x, shard_throughput=sh_x,
         delayed_frac=np.asarray(delayed),
         delayed_l1_frac=tier_dl[:, 0], delayed_l2_frac=tier_dl[:, 1],
-        n_requests=n_requests, traces=traces,
+        n_requests=n_requests, traces=traces, sketches=sketches,
     )
 
 
@@ -80,7 +84,9 @@ def simulate_hierarchy(model: HierarchyModel, p_hits,
                        warmup_frac: float = 0.25,
                        coalesce_flows: int = 0,
                        coalesce_theta: float = 0.0,
-                       trace: int = 0) -> HierarchySimResult:
+                       trace: int = 0,
+                       sketch_cap: int = 0,
+                       window_us: float = 0.0) -> HierarchySimResult:
     """Simulate the composed hierarchy over a grid of global hit ratios.
 
     ``coalesce_flows`` sizes every MSHR table's hot-flow group (per
@@ -89,7 +95,10 @@ def simulate_hierarchy(model: HierarchyModel, p_hits,
     per-request trace records per (seed, p) lane (see
     :mod:`repro.obs.trace`) on the result's ``traces`` field — the
     branch id in each record resolves a request to its client / shard /
-    serving level through ``model.branch_client`` & friends.  Wraps
+    serving level through ``model.branch_client`` & friends.
+    ``sketch_cap=K`` threads the in-kernel streaming estimators
+    (:mod:`repro.obs.streaming`, sampled every ``window_us`` simulated
+    µs) and decodes them onto ``sketches``.  Wraps
     :func:`repro.core.simulator.simulate_network`.
     """
     res = simulate_network(
@@ -97,11 +106,12 @@ def simulate_hierarchy(model: HierarchyModel, p_hits,
         warmup_frac=warmup_frac, coalesce_flows=coalesce_flows,
         coalesce_theta=coalesce_theta,
         tiers=model.mshr if coalesce_flows else None,
-        trace=trace,
+        trace=trace, sketch_cap=sketch_cap, window_us=window_us,
     )
     return _fold(model, res.p_hit, res.throughput, res.ci95,
                  res.branch_throughput, res.delayed_frac,
-                 res.delayed_tier_frac, n_requests, traces=res.traces)
+                 res.delayed_tier_frac, n_requests, traces=res.traces,
+                 sketches=res.sketches)
 
 
 def simulate_hierarchy_py(model: HierarchyModel, p_hit: float,
@@ -109,14 +119,16 @@ def simulate_hierarchy_py(model: HierarchyModel, p_hit: float,
                           warmup_frac: float = 0.25,
                           coalesce_flows: int = 0,
                           coalesce_theta: float = 0.0,
-                          trace: int = 0) -> HierarchySimResult:
+                          trace: int = 0,
+                          sketch_cap: int = 0,
+                          window_us: float = 0.0) -> HierarchySimResult:
     """Heapq-oracle twin of :func:`simulate_hierarchy` at one global p."""
     out = simulate_py(
         model.network, float(p_hit), n_requests=n_requests, seed=seed,
         warmup_frac=warmup_frac, coalesce_flows=coalesce_flows,
         coalesce_theta=coalesce_theta, full=True,
         tiers=model.mshr if coalesce_flows else None,
-        trace=trace,
+        trace=trace, sketch_cap=sketch_cap, window_us=window_us,
     )
     bx = (np.asarray(out["branch_done"], np.float64)
           / out["t_measured"])[None, :]
@@ -126,4 +138,4 @@ def simulate_hierarchy_py(model: HierarchyModel, p_hit: float,
     return _fold(model, np.array([float(p_hit)]),
                  np.array([out["x"]]), np.array([0.0]), bx,
                  np.array([out["delayed_frac"]]), tier_dl, n_requests,
-                 traces=out.get("trace"))
+                 traces=out.get("trace"), sketches=out.get("sketch"))

@@ -77,21 +77,39 @@ class LatencyForecast:
     p_star_throughput: float
     p_star_latency: float
     p_star_slo: float
+    # capacity (keys / pages) achieving each grid hit ratio, mapped
+    # through the online ObservedProfile that drove the sweep; None for
+    # plain (profile-free) forecasts.
+    cap_grid: np.ndarray | None = None
 
 
 def slo_forecast(net: ClosedNetwork, arrival_rate: float, slo_us: float,
                  percentile: float = 0.99, p_grid=None,
-                 tail_mode: str = "nominal") -> LatencyForecast:
+                 tail_mode: str = "nominal",
+                 profile=None) -> LatencyForecast:
     """Sweep the hit ratio and report throughput-, latency- and
     SLO-capacity-optimal operating points for ``net``.
 
     ``p_star_latency`` follows the ``p_star`` convention (largest p still
     achieving the optimum — here the minimum mean response at
     ``arrival_rate``); NaN when the offered rate is unstable at every p.
+
+    ``profile`` accepts an online measured profile (anything with the
+    :class:`repro.obs.profile.ObservedProfile` surface — ``p_range()``
+    and ``cap_of_p``): when ``p_grid`` is None the sweep is restricted
+    to the profile's *achievable* hit-ratio range, and every grid point
+    is annotated with the cache capacity achieving it on the result's
+    ``cap_grid`` — turning the three p* answers into sizing answers.
     """
     if p_grid is None:
-        p_grid = np.linspace(0.0, 1.0, 201)
+        if profile is not None:
+            lo, hi = profile.p_range()
+            p_grid = np.linspace(lo, min(hi, 1.0), 201)
+        else:
+            p_grid = np.linspace(0.0, 1.0, 201)
     p_grid = np.asarray(p_grid, dtype=np.float64)
+    cap_grid = (np.array([profile.cap_of_p(float(p)) for p in p_grid])
+                if profile is not None else None)
 
     lmax = lambda_max(net, p_grid, tail_mode="zero")
     # one open solve per grid point yields the mean AND the tail (the
@@ -136,4 +154,5 @@ def slo_forecast(net: ClosedNetwork, arrival_rate: float, slo_us: float,
         p_star_throughput=largest_at_max(np.atleast_1d(lmax), True),
         p_star_latency=largest_at_max(np.atleast_1d(r_mean), False),
         p_star_slo=largest_at_max(slo_lam, True),
+        cap_grid=cap_grid,
     )

@@ -1,0 +1,585 @@
+"""Streaming observability: fixed-shape, scan-friendly estimators that
+run *inside* the request loop.
+
+Every measured profile in the repo before this module was an offline
+artifact — a full Mattson sweep or a completed trace decode.  This
+module is the online instrument: estimators whose state is a small,
+shape-static pytree (:class:`SketchState`) updated once per simulator
+event, so they ride inside the jitted ``lax.while_loop`` kernels (and
+the heapq oracles) behind a ``sketch_cap=0`` flag that is bit-identical
+off (state is ``()`` — a pytree with no leaves — so the compiled HLO is
+unchanged).
+
+Three estimator families share the state:
+
+* **Windowed + EWMA rates** — a tumbling ring of ``N_WINDOWS`` windows
+  of ``window_us`` each (completion / hit / delayed-hit / arrival
+  counts, per-branch completion counts for shard heat), plus
+  exponentially-weighted hit/delayed fractions with an explicit debias
+  norm (``(1 - alpha)^n``).  Ring rows store their absolute window id,
+  so stale rows are zeroed lazily on first touch — no per-window flush.
+* **Key-popularity sketch** — a count-min sketch (``CM_DEPTH`` rows of
+  deterministic integer hashes; overestimate-only by construction) and
+  a SpaceSaving top-k table (``sketch_cap`` slots; every count is an
+  upper bound and ``count - err`` a lower bound).  Recovered top-k
+  masses plus a fitted Zipf tail feed the Che approximation to produce
+  an **online measured profile** with no Mattson sweep — that recovery
+  layer lives in :mod:`repro.obs.profile` (it imports the cluster /
+  hierarchy model types, which this kernel-side module must not).
+* **Per-shard heat gauges** — per-branch windowed completion rates fold
+  to per-shard heat / imbalance via the model's branch → shard map.
+
+Both masked-update tricks mirror :mod:`repro.obs.trace`: every array
+carries one scrap row (index ``-1``) that masked lane-updates are
+steered into, so updates are branch-free under ``vmap``.
+
+The exact-counting Python twin is :class:`PyStreamSketch` (dict
+counters, float32 EWMA in the same operation order); the differential
+pair ``stream-sketch`` (:func:`sketch_trace` vs :func:`sketch_trace_py`)
+is registered in ``tools/analysis/contracts.py``.  Sketch error bounds
+documented here and asserted by tests: count-min never underestimates;
+SpaceSaving ``count - err <= true <= count``; top-k recall >= 0.9 at the
+default widths on Zipf streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CM_DEPTH", "N_WINDOWS", "EWMA_ALPHA",
+    "SketchState", "SketchEstimates", "PyStreamSketch",
+    "sketch_init", "stream_tick", "stream_arrival", "stream_key",
+    "stream_done", "stream_done_many",
+    "decode_sketch", "decode_sketch_grid",
+    "sketch_trace", "sketch_trace_py",
+]
+
+#: Tumbling windows kept in the ring (plus one scrap row).
+N_WINDOWS = 64
+#: Count-min hash rows.
+CM_DEPTH = 4
+#: Per-completion EWMA decay for the hit/delayed fraction estimators.
+EWMA_ALPHA = 0.01
+
+# Distinct odd 32-bit salts, one per count-min row (splitmix/murmur
+# finalizer constants — any fixed odd constants work).
+_CM_SALTS = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F)
+_CM_MULT = 0x9E3779B1
+
+
+def cm_width(sketch_cap: int) -> int:
+    """Count-min columns for a given SpaceSaving capacity: 8x the top-k
+    width (error ~ 2/width of the stream length per row) with a floor."""
+    return max(64, 8 * int(sketch_cap))
+
+
+class SketchState(NamedTuple):
+    """In-kernel streaming estimator state (one lane's pytree).
+
+    All integer counters are int32; EWMA scalars are float32.  Shapes
+    are static functions of ``(sketch_cap, n_branches, n_windows)``:
+    ring arrays carry ``n_windows + 1`` rows and the SpaceSaving table
+    ``sketch_cap + 1`` rows — the extra row is write-only scrap for
+    masked updates.  ``win_id`` holds the absolute tumbling-window index
+    occupying each ring row (-1 = never used)."""
+
+    win_id: jnp.ndarray  # (W+1,) i32 absolute window index, -1 empty
+    win_done_count: jnp.ndarray  # (W+1,) i32 completions
+    win_hit_count: jnp.ndarray  # (W+1,) i32 hit-branch completions
+    win_delayed_count: jnp.ndarray  # (W+1,) i32 delayed-hit completions
+    win_arrival_count: jnp.ndarray  # (W+1,) i32 arrivals (open loop)
+    win_branch_count: jnp.ndarray  # (W+1, B) i32 per-branch completions
+    ewma_hit_frac: jnp.ndarray  # f32 scalar, debias with ewma_norm_frac
+    ewma_delayed_frac: jnp.ndarray  # f32 scalar
+    ewma_norm_frac: jnp.ndarray  # f32 scalar (1-alpha)^n debias norm
+    cm_count: jnp.ndarray  # (CM_DEPTH, width+1) i32, last col scrap
+    ss_key: jnp.ndarray  # (K+1,) i32 SpaceSaving keys, -1 empty
+    ss_count: jnp.ndarray  # (K+1,) i32 upper-bound counts
+    ss_err_count: jnp.ndarray  # (K+1,) i32 overestimation bounds
+    key_count: jnp.ndarray  # i32 total key observations
+
+
+def sketch_init(sketch_cap: int, n_branches: int,
+                n_windows: int = N_WINDOWS):
+    """Fresh :class:`SketchState`, or ``()`` when ``sketch_cap == 0`` —
+    a pytree with no leaves, so carrying it through ``lax.while_loop``
+    leaves the compiled program bit-identical to the sketch-free one."""
+    if sketch_cap <= 0:
+        return ()
+    W, K = int(n_windows), int(sketch_cap)
+    width = cm_width(K)
+    z = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
+    return SketchState(
+        win_id=jnp.full((W + 1,), -1, jnp.int32),
+        win_done_count=z(W + 1), win_hit_count=z(W + 1),
+        win_delayed_count=z(W + 1), win_arrival_count=z(W + 1),
+        win_branch_count=z(W + 1, int(n_branches)),
+        ewma_hit_frac=jnp.float32(0.0),
+        ewma_delayed_frac=jnp.float32(0.0),
+        ewma_norm_frac=jnp.float32(1.0),
+        cm_count=z(CM_DEPTH, width + 1),
+        ss_key=jnp.full((K + 1,), -1, jnp.int32),
+        ss_count=z(K + 1), ss_err_count=z(K + 1),
+        key_count=jnp.int32(0),
+    )
+
+
+def stream_tick(sk: SketchState, elapsed_us, window_us: float):
+    """Advance the tumbling-window ring to the window containing
+    ``elapsed_us``; returns ``(state, slot)`` where ``slot`` is the ring
+    row subsequent adds for this event should target.  A row whose
+    stored absolute window id differs is stale (its window scrolled out
+    ``n_windows`` windows ago) and is zeroed before reuse."""
+    W = sk.win_id.shape[0] - 1
+    wid = jnp.floor(elapsed_us / jnp.float32(window_us)).astype(jnp.int32)
+    wid = jnp.maximum(wid, 0)
+    slot = jnp.remainder(wid, W)
+    fresh = sk.win_id[slot] == wid
+
+    def keep(a):
+        row = jnp.where(fresh, a[slot], jnp.zeros_like(a[slot]))
+        return a.at[slot].set(row)
+
+    sk = sk._replace(
+        win_id=sk.win_id.at[slot].set(wid),
+        win_done_count=keep(sk.win_done_count),
+        win_hit_count=keep(sk.win_hit_count),
+        win_delayed_count=keep(sk.win_delayed_count),
+        win_arrival_count=keep(sk.win_arrival_count),
+        win_branch_count=keep(sk.win_branch_count),
+    )
+    return sk, slot
+
+
+def stream_arrival(sk: SketchState, slot, mask) -> SketchState:
+    """Count one (masked) arrival into the current window."""
+    W = sk.win_id.shape[0] - 1
+    s = jnp.where(mask, slot, W)
+    return sk._replace(win_arrival_count=sk.win_arrival_count.at[s].add(1))
+
+
+def stream_done(sk: SketchState, slot, branch_j, is_hit, delayed,
+                mask) -> SketchState:
+    """Record one (masked) request completion: window counters plus one
+    EWMA step (``x = is_hit`` for the hit estimator, ``x = delayed`` for
+    the delayed-hit estimator, norm decays by ``1 - alpha``)."""
+    W = sk.win_id.shape[0] - 1
+    s = jnp.where(mask, slot, W)
+    a = jnp.float32(EWMA_ALPHA)
+    decay = jnp.where(mask, jnp.float32(1.0) - a, jnp.float32(1.0))
+    return sk._replace(
+        win_done_count=sk.win_done_count.at[s].add(1),
+        win_hit_count=sk.win_hit_count.at[s].add(
+            jnp.where(is_hit, 1, 0)),
+        win_delayed_count=sk.win_delayed_count.at[s].add(
+            jnp.where(delayed, 1, 0)),
+        win_branch_count=sk.win_branch_count.at[s, branch_j].add(1),
+        ewma_hit_frac=sk.ewma_hit_frac * decay
+        + jnp.where(mask & is_hit, a, jnp.float32(0.0)),
+        ewma_delayed_frac=sk.ewma_delayed_frac * decay
+        + jnp.where(mask & delayed, a, jnp.float32(0.0)),
+        ewma_norm_frac=sk.ewma_norm_frac * decay,
+    )
+
+
+def stream_done_many(sk: SketchState, slot, branch_vec,
+                     mask_vec) -> SketchState:
+    """Record a batch of delayed-hit completions (an MSHR fill waking
+    every parked request at once): window scatter-adds per branch, and
+    the closed-form batch EWMA step for ``n`` identical ``x = 1``
+    delayed observations (``s' = s * d^n + (1 - d^n)``)."""
+    W = sk.win_id.shape[0] - 1
+    s = jnp.where(mask_vec, slot, W)
+    n = jnp.sum(mask_vec.astype(jnp.int32))
+    decay_n = jnp.power(jnp.float32(1.0) - jnp.float32(EWMA_ALPHA),
+                        n.astype(jnp.float32))
+    return sk._replace(
+        win_done_count=sk.win_done_count.at[s].add(1),
+        win_delayed_count=sk.win_delayed_count.at[s].add(1),
+        win_branch_count=sk.win_branch_count.at[s, branch_vec].add(1),
+        ewma_hit_frac=sk.ewma_hit_frac * decay_n,
+        ewma_delayed_frac=sk.ewma_delayed_frac * decay_n
+        + (jnp.float32(1.0) - decay_n),
+        ewma_norm_frac=sk.ewma_norm_frac * decay_n,
+    )
+
+
+def _mix32(x):
+    """splitmix32 finalizer over uint32 (wrapping) — deterministic, no
+    RNG draws, identical in jnp and np.uint32 arithmetic."""
+    x = (x ^ (x >> 16)) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * np.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def _cm_cols(key_u32, width: int):
+    """Per-row count-min columns for one key (tuple of CM_DEPTH i32)."""
+    cols = []
+    for salt in _CM_SALTS[:CM_DEPTH]:
+        h = _mix32(key_u32 * np.uint32(_CM_MULT) + np.uint32(salt))
+        cols.append((h % np.uint32(width)).astype(jnp.int32)
+                    if isinstance(h, jnp.ndarray) else int(h % width))
+    return cols
+
+
+def stream_key(sk: SketchState, key, mask) -> SketchState:
+    """Feed one (masked) key observation to the popularity sketches.
+
+    Count-min: +1 in one hashed column per row (so the per-key minimum
+    over rows never underestimates).  SpaceSaving: increment the key's
+    slot if present, else evict the minimum-count slot, inheriting its
+    count as the new key's overestimation bound ``err``."""
+    K = sk.ss_key.shape[0] - 1
+    width = sk.cm_count.shape[1] - 1
+    ku = key.astype(jnp.uint32)
+    col = jnp.stack(_cm_cols(ku, width))
+    col = jnp.where(mask, col, width)
+    cm = sk.cm_count.at[jnp.arange(CM_DEPTH), col].add(1)
+
+    match = (sk.ss_key[:K] == key) & mask
+    has = match.any()
+    j = jnp.where(has, jnp.argmax(match), jnp.argmin(sk.ss_count[:K]))
+    s = jnp.where(mask, j, K)
+    err_new = jnp.where(has, sk.ss_err_count[j], sk.ss_count[j])
+    return sk._replace(
+        cm_count=cm,
+        ss_key=sk.ss_key.at[s].set(key.astype(jnp.int32)),
+        ss_count=sk.ss_count.at[s].set(sk.ss_count[j] + 1),
+        ss_err_count=sk.ss_err_count.at[s].set(err_new),
+        key_count=sk.key_count + jnp.where(mask, 1, 0),
+    )
+
+
+# --------------------------------------------------------------- host side
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchEstimates:
+    """Decoded, host-side view of one lane's :class:`SketchState`.
+
+    Window arrays are sorted by ascending absolute window id with empty
+    and scrap rows dropped; rates are per µs over ``window_us``.  EWMA
+    fractions are debiased (divided by ``1 - (1 - alpha)^n``; NaN before
+    the first completion).  ``exact=True`` marks estimates produced by
+    the exact-counting twin, which additionally carries the full
+    ``exact_key``/``exact_count`` tables (its ``topk_err_count`` is 0
+    and ``cm_depth_count`` is None)."""
+
+    window_us: float
+    window_id: np.ndarray  # (w,) ascending absolute window ids
+    win_done_count: np.ndarray  # (w,)
+    win_hit_frac: np.ndarray  # (w,) NaN where no completions
+    win_delayed_frac: np.ndarray  # (w,)
+    win_done_rate: np.ndarray  # (w,) completions / µs
+    win_arrival_rate: np.ndarray  # (w,) arrivals / µs
+    win_branch_rate: np.ndarray  # (w, B) completions / µs per branch
+    ewma_hit_frac: float
+    ewma_delayed_frac: float
+    topk_key: np.ndarray  # (k,) by descending count upper bound
+    topk_count: np.ndarray  # (k,) upper bounds
+    topk_err_count: np.ndarray  # (k,) overestimation bounds
+    key_count: int
+    exact: bool = False
+    cm_depth_count: np.ndarray | None = None  # (CM_DEPTH, width)
+    exact_key: np.ndarray | None = None
+    exact_count: np.ndarray | None = None
+
+    def cm_estimate(self, keys) -> np.ndarray:
+        """Count-min frequency estimates (never below the true count).
+        On the exact twin, returns the true counts."""
+        keys = np.asarray(keys, np.int64)
+        if self.exact:
+            lut = dict(zip(self.exact_key.tolist(),
+                           self.exact_count.tolist()))
+            return np.array([lut.get(int(k), 0) for k in keys], np.int64)
+        width = self.cm_depth_count.shape[1]
+        ku = keys.astype(np.uint32)
+        est = np.full(len(keys), np.iinfo(np.int64).max)
+        for r, salt in enumerate(_CM_SALTS[:CM_DEPTH]):
+            h = _mix32(ku * np.uint32(_CM_MULT) + np.uint32(salt))
+            est = np.minimum(est, self.cm_depth_count[r, h % width])
+        return est.astype(np.int64)
+
+    def topk(self, k: int | None = None):
+        """``(keys, count_upper, err)`` for the heaviest ``k`` keys."""
+        k = len(self.topk_key) if k is None else min(k, len(self.topk_key))
+        return (self.topk_key[:k], self.topk_count[:k],
+                self.topk_err_count[:k])
+
+    def saturation_frac(self) -> float:
+        """SpaceSaving pressure: the minimum slot count (the bound on
+        how much any stored count may overestimate) over the stream
+        length.  ~0 while the table comfortably holds the head of the
+        popularity distribution; -> 1 as it thrashes."""
+        if self.exact or len(self.topk_count) == 0 or self.key_count == 0:
+            return 0.0
+        return float(self.topk_count.min()) / float(self.key_count)
+
+    def shard_heat(self, branch_shard, n_shards: int) -> np.ndarray:
+        """Per-window, per-shard completion rates (w, n_shards) folded
+        from the per-branch windowed counters."""
+        shard = np.asarray(branch_shard)
+        out = np.zeros((len(self.window_id), n_shards))
+        for k in range(n_shards):
+            out[:, k] = self.win_branch_rate[:, shard == k].sum(axis=1)
+        return out
+
+    def heat_imbalance(self, branch_shard, n_shards: int) -> float:
+        """max/mean of the per-shard mean completion rates (1.0 =
+        perfectly balanced; NaN with no completions)."""
+        heat = self.shard_heat(branch_shard, n_shards).mean(axis=0)
+        mean = heat.mean()
+        return float(heat.max() / mean) if mean > 0 else float("nan")
+
+
+def _debias(s: float, norm: float) -> float:
+    denom = 1.0 - norm
+    return float(s / denom) if denom > 0 else float("nan")
+
+
+def decode_sketch(sk, window_us: float) -> SketchEstimates:
+    """Decode one lane's :class:`SketchState` (jnp or np leaves)."""
+    win_id = np.asarray(sk.win_id)[:-1]
+    keep = np.flatnonzero(win_id >= 0)
+    keep = keep[np.argsort(win_id[keep], kind="stable")]
+    done = np.asarray(sk.win_done_count)[keep]
+    hit = np.asarray(sk.win_hit_count)[keep]
+    dly = np.asarray(sk.win_delayed_count)[keep]
+    arr = np.asarray(sk.win_arrival_count)[keep]
+    br = np.asarray(sk.win_branch_count)[keep]
+    with np.errstate(invalid="ignore", divide="ignore"):
+        hit_frac = np.where(done > 0, hit / np.maximum(done, 1), np.nan)
+        dly_frac = np.where(done > 0, dly / np.maximum(done, 1), np.nan)
+
+    ss_key = np.asarray(sk.ss_key)[:-1]
+    ss_count = np.asarray(sk.ss_count)[:-1]
+    ss_err = np.asarray(sk.ss_err_count)[:-1]
+    filled = np.flatnonzero(ss_key >= 0)
+    order = filled[np.lexsort((ss_key[filled], -ss_count[filled]))]
+    return SketchEstimates(
+        window_us=float(window_us),
+        window_id=win_id[keep],
+        win_done_count=done,
+        win_hit_frac=hit_frac,
+        win_delayed_frac=dly_frac,
+        win_done_rate=done / window_us,
+        win_arrival_rate=arr / window_us,
+        win_branch_rate=br / window_us,
+        ewma_hit_frac=_debias(float(np.asarray(sk.ewma_hit_frac)),
+                              float(np.asarray(sk.ewma_norm_frac))),
+        ewma_delayed_frac=_debias(float(np.asarray(sk.ewma_delayed_frac)),
+                                  float(np.asarray(sk.ewma_norm_frac))),
+        topk_key=ss_key[order],
+        topk_count=ss_count[order].astype(np.int64),
+        topk_err_count=ss_err[order].astype(np.int64),
+        key_count=int(np.asarray(sk.key_count)),
+        cm_depth_count=np.asarray(sk.cm_count)[:, :-1],
+    )
+
+
+def decode_sketch_grid(sk, n_seeds: int, n_p: int,
+                       window_us: float) -> list:
+    """Decode a vmapped (seed x p) grid of sketch states into
+    ``[seed][p]`` :class:`SketchEstimates` (lane order matches
+    :func:`repro.obs.trace.decode_trace_grid`: ``lane = s * n_p + p``)."""
+    leaves = [np.asarray(leaf) for leaf in sk]
+    out = []
+    for s in range(n_seeds):
+        row = []
+        for p in range(n_p):
+            lane = SketchState(*(leaf[s * n_p + p] for leaf in leaves))
+            row.append(decode_sketch(lane, window_us))
+        out.append(row)
+    return out
+
+
+# ------------------------------------------------------ trace-stream twins
+
+
+@partial(jax.jit, static_argnames=("sketch_cap", "window_us", "n_windows"))
+def _sketch_trace(keys, t_us, hits, sketch_cap, window_us,
+                  n_windows=N_WINDOWS):
+    sk0 = sketch_init(sketch_cap, 1, n_windows)
+
+    def step(sk, inp):
+        key, t, h = inp
+        sk, slot = stream_tick(sk, t, window_us)
+        sk = stream_arrival(sk, slot, jnp.bool_(True))
+        sk = stream_key(sk, key, jnp.bool_(True))
+        sk = stream_done(sk, slot, jnp.int32(0), h > 0, jnp.bool_(False),
+                         jnp.bool_(True))
+        return sk, ()
+
+    sk, _ = jax.lax.scan(step, sk0, (keys, t_us, hits))
+    return sk
+
+
+def sketch_trace(keys, t_us=None, hits=None, sketch_cap: int = 64,
+                 window_us: float = 1000.0,
+                 n_windows: int = N_WINDOWS) -> SketchEstimates:
+    """Run the in-kernel streaming estimators over a key trace via one
+    jitted ``lax.scan`` — the standalone path for replayed traces (and
+    the fast half of the ``stream-sketch`` differential pair).
+
+    ``t_us`` defaults to one event per µs; ``hits`` (0/1 per event)
+    feeds the hit-ratio estimators when given.
+    """
+    if sketch_cap <= 0:
+        raise ValueError("sketch_trace needs sketch_cap > 0")
+    if window_us <= 0:
+        raise ValueError("sketch_trace needs window_us > 0")
+    keys = jnp.asarray(keys, jnp.int32)
+    n = keys.shape[0]
+    t = (jnp.arange(n, dtype=jnp.float32) if t_us is None
+         else jnp.asarray(t_us, jnp.float32))
+    h = (jnp.zeros(n, jnp.int32) if hits is None
+         else jnp.asarray(hits, jnp.int32))
+    sk = _sketch_trace(keys, t, h, sketch_cap, float(window_us), n_windows)
+    est = decode_sketch(sk, float(window_us))
+    if hits is None:
+        est = dataclasses.replace(est, ewma_hit_frac=float("nan"),
+                                  win_hit_frac=np.full_like(
+                                      est.win_hit_frac, np.nan))
+    return est
+
+
+def sketch_trace_py(keys, t_us=None, hits=None, sketch_cap: int = 64,
+                    window_us: float = 1000.0,
+                    n_windows: int = N_WINDOWS) -> SketchEstimates:
+    """Exact-counting oracle twin of :func:`sketch_trace` (dict
+    counters, same float32 EWMA order, same ring retention)."""
+    if sketch_cap <= 0:
+        raise ValueError("sketch_trace_py needs sketch_cap > 0")
+    if window_us <= 0:
+        raise ValueError("sketch_trace_py needs window_us > 0")
+    keys = np.asarray(keys, np.int64)
+    n = len(keys)
+    t = (np.arange(n, dtype=np.float32) if t_us is None
+         else np.asarray(t_us, np.float32))
+    h = (np.zeros(n, np.int64) if hits is None
+         else np.asarray(hits, np.int64))
+    py = PyStreamSketch(sketch_cap, n_branches=1, window_us=window_us,
+                        n_windows=n_windows)
+    for i in range(n):
+        py.arrival(float(t[i]))
+        py.key(int(keys[i]))
+        py.done(float(t[i]), 0, is_hit=bool(h[i]))
+    est = py.estimates()
+    if hits is None:
+        est = dataclasses.replace(est, ewma_hit_frac=float("nan"),
+                                  win_hit_frac=np.full_like(
+                                      est.win_hit_frac, np.nan))
+    return est
+
+
+class PyStreamSketch:
+    """Exact-counting Python twin of the in-kernel estimators.
+
+    Keys are counted exactly (a dict), windows keep exact per-window
+    counters, and the EWMA scalars apply the identical float32
+    operations in the identical per-event order as the kernels, so the
+    decoded :class:`SketchEstimates` agree with the jitted side within
+    documented bounds (exactly, for every integer counter on the same
+    event stream; to float32 round-off for the EWMAs; count-min/
+    SpaceSaving replaced by the truth).  ``estimates`` emulates the ring
+    retention: per ring row only the most recent window survives."""
+
+    def __init__(self, sketch_cap: int, n_branches: int = 1,
+                 window_us: float = 1000.0, n_windows: int = N_WINDOWS):
+        if sketch_cap <= 0:
+            raise ValueError("PyStreamSketch needs sketch_cap > 0")
+        if window_us <= 0:
+            raise ValueError("PyStreamSketch needs window_us > 0")
+        self.sketch_cap = int(sketch_cap)
+        self.n_branches = int(n_branches)
+        self.window_us = float(window_us)
+        self.n_windows = int(n_windows)
+        self.key_freq: dict = {}
+        self.key_count = 0
+        # wid -> [done, hit, delayed, arrivals, per-branch np array]
+        self.windows: dict = {}
+        self.ewma_hit = np.float32(0.0)
+        self.ewma_delayed = np.float32(0.0)
+        self.ewma_norm = np.float32(1.0)
+
+    def _win(self, t_us: float):
+        wid = max(int(np.float32(t_us) / np.float32(self.window_us)), 0)
+        w = self.windows.get(wid)
+        if w is None:
+            w = [0, 0, 0, 0, np.zeros(self.n_branches, np.int64)]
+            self.windows[wid] = w
+        return w
+
+    def key(self, key: int) -> None:
+        self.key_freq[key] = self.key_freq.get(key, 0) + 1
+        self.key_count += 1
+
+    def arrival(self, t_us: float) -> None:
+        self._win(t_us)[3] += 1
+
+    def done(self, t_us: float, branch: int = 0, is_hit: bool = False,
+             delayed: bool = False) -> None:
+        w = self._win(t_us)
+        w[0] += 1
+        w[1] += 1 if is_hit else 0
+        w[2] += 1 if delayed else 0
+        w[4][branch] += 1
+        a = np.float32(EWMA_ALPHA)
+        decay = np.float32(1.0) - a
+        self.ewma_hit = self.ewma_hit * decay + (a if is_hit
+                                                 else np.float32(0.0))
+        self.ewma_delayed = self.ewma_delayed * decay + (
+            a if delayed else np.float32(0.0))
+        self.ewma_norm = self.ewma_norm * decay
+
+    def estimates(self) -> SketchEstimates:
+        W = self.n_windows
+        survivors: dict = {}
+        for wid in self.windows:
+            r = wid % W
+            if r not in survivors or wid > survivors[r]:
+                survivors[r] = wid
+        wids = sorted(survivors.values())
+        done = np.array([self.windows[w][0] for w in wids], np.int64)
+        hit = np.array([self.windows[w][1] for w in wids], np.int64)
+        dly = np.array([self.windows[w][2] for w in wids], np.int64)
+        arr = np.array([self.windows[w][3] for w in wids], np.int64)
+        br = (np.stack([self.windows[w][4] for w in wids])
+              if wids else np.zeros((0, self.n_branches), np.int64))
+        with np.errstate(invalid="ignore", divide="ignore"):
+            hit_frac = np.where(done > 0, hit / np.maximum(done, 1), np.nan)
+            dly_frac = np.where(done > 0, dly / np.maximum(done, 1), np.nan)
+        items = sorted(self.key_freq.items(),
+                       key=lambda kv: (-kv[1], kv[0]))
+        keys = np.array([k for k, _ in items], np.int64)
+        counts = np.array([c for _, c in items], np.int64)
+        k = min(self.sketch_cap, len(items))
+        return SketchEstimates(
+            window_us=self.window_us,
+            window_id=np.asarray(wids, np.int64),
+            win_done_count=done,
+            win_hit_frac=hit_frac,
+            win_delayed_frac=dly_frac,
+            win_done_rate=done / self.window_us,
+            win_arrival_rate=arr / self.window_us,
+            win_branch_rate=br / self.window_us,
+            ewma_hit_frac=_debias(float(self.ewma_hit),
+                                  float(self.ewma_norm)),
+            ewma_delayed_frac=_debias(float(self.ewma_delayed),
+                                      float(self.ewma_norm)),
+            topk_key=keys[:k],
+            topk_count=counts[:k],
+            topk_err_count=np.zeros(k, np.int64),
+            key_count=self.key_count,
+            exact=True,
+            exact_key=keys,
+            exact_count=counts,
+        )

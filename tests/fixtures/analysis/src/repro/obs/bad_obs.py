@@ -9,6 +9,11 @@ class BadSchema:
     parked: float = 0.0  # obs-units: time-like field without a unit
     parked_us: float = 0.0  # clean: carries a time suffix
     branch: int = 0  # clean: not a time-like stem
+    win_hits: int = 0  # obs-units: estimator field without a unit
+    ewma_hit: float = 0.0  # obs-units: EWMA field without a unit
+    win_hit_count: int = 0  # clean: counter suffix
+    window_id: int = 0  # clean: identity suffix
+    ewma_hit_frac: float = 0.0  # clean: fraction suffix
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
@@ -20,6 +25,19 @@ def bad_ring(x, trace_cap: int = 0, n_requests: int = 0):
 
 @functools.partial(jax.jit, static_argnames=("trace_cap",))
 def good_ring(x, trace_cap: int = 0):  # clean: trace_cap is static
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("sketch_cap",))
+def bad_sketch(x, sketch_cap: int = 0, window_us: float = 0.0):
+    # obs-ring-static: window_us missing from static_argnames (flagged
+    # at the def line above)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("sketch_cap", "window_us"))
+def good_sketch(x, sketch_cap: int = 0, window_us: float = 0.0):
+    # clean: both sketch knobs are static
     return x
 
 

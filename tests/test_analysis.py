@@ -203,12 +203,27 @@ class TestObsLint:
         assert any(v.rule == "obs-ring-static" and v.line == want
                    for v in found)
 
+    def test_estimator_field_without_unit(self, found):
+        path = self.fixture_path()
+        for marker in ("# obs-units: estimator field without a unit",
+                       "# obs-units: EWMA field without a unit"):
+            want = line_of(path, marker)
+            assert any(v.rule == "obs-units" and v.line == want
+                       for v in found), marker
+
+    def test_nonstatic_sketch_window(self, found):
+        want = line_of(self.fixture_path(), "def bad_sketch")
+        hits = [v for v in found
+                if v.rule == "obs-ring-static" and v.line == want]
+        assert len(hits) == 1 and "window_us" in hits[0].message
+
     def test_clean_lines_stay_clean(self, found):
         path = self.fixture_path()
         text = path.read_text().splitlines()
         clean = {i for i, line in enumerate(text, start=1)
                  if "clean" in line}
         clean.add(line_of(path, "def good_ring"))
+        clean.add(line_of(path, "def good_sketch"))
         hits = {v.line for v in found if v.path == path}
         assert not (hits & clean), sorted(hits & clean)
 
@@ -294,7 +309,7 @@ class TestTwinContracts:
     def test_live_registry_is_clean(self):
         violations, notes = run_checker("contracts", REPO_ROOT)
         assert violations == []
-        assert any("16 registered pairs" in n.text for n in notes)
+        assert any("19 registered pairs" in n.text for n in notes)
 
 
 # ----------------------------------------------- acceptance: seeded drift

@@ -329,3 +329,119 @@ _register(
          l2_cap=st.floats(2.0, 64.0),
          seed=st.integers(0, 2**16 - 1)) if HAS_HYP else None,
 )
+
+
+# ---------------------------------------------------------------------------
+# 8. Streaming sketch: count-min / SpaceSaving vs exact counters.
+# ---------------------------------------------------------------------------
+
+SKETCH_LEN = 600  # static stream length (one compile per sketch_cap)
+SKETCH_CAPS = (16, 32)
+
+
+def _check_sketch_bounds(theta, sketch_cap, seed):
+    from repro.obs.streaming import sketch_trace, sketch_trace_py
+
+    trace = zipf_trace(SKETCH_LEN, KEY_SPACE, theta=theta, seed=seed)
+    fast = sketch_trace(trace, sketch_cap=sketch_cap, window_us=50.0)
+    exact = sketch_trace_py(trace, sketch_cap=sketch_cap, window_us=50.0)
+
+    # windowed integer counters are a bit-identity contract
+    assert np.array_equal(fast.window_id, exact.window_id)
+    assert np.array_equal(fast.win_done_count, exact.win_done_count)
+    assert fast.key_count == exact.key_count == SKETCH_LEN
+
+    # count-min never underestimates any key's true frequency
+    probe = np.arange(KEY_SPACE)
+    truth = exact.cm_estimate(probe)
+    assert np.all(fast.cm_estimate(probe) >= truth)
+
+    # SpaceSaving stored counts bracket the truth for every tracked key
+    keys, upper, err = fast.topk()
+    t = exact.cm_estimate(keys)
+    assert np.all(upper >= t)
+    assert np.all(upper - err <= t)
+
+    # classic SpaceSaving guarantee: any key with true count above
+    # n / sketch_cap is in the table
+    heavy = probe[truth > SKETCH_LEN / sketch_cap]
+    assert set(heavy.tolist()) <= set(keys.tolist())
+
+
+_register(
+    "sketch_bounds", _check_sketch_bounds,
+    "theta,sketch_cap,seed",
+    [(0.0, 16, 0), (0.9, 32, 1), (1.3, 16, 2)],
+    dict(theta=st.floats(0.0, 1.3),
+         sketch_cap=st.sampled_from(SKETCH_CAPS),
+         seed=st.integers(0, 2**16 - 1)) if HAS_HYP else None,
+)
+
+
+# ---------------------------------------------------------------------------
+# 9. Streaming sketch: sketch_cap=0 identity / sketch-on transparency.
+# ---------------------------------------------------------------------------
+
+
+def _check_sketch_transparency(policy, mpl, p, seed):
+    from repro.core.policy_models import build
+    from repro.core.simulator import simulate_network
+
+    net = build(policy, mpl=mpl)
+    base = simulate_network(net, [p], n_requests=3_000, seeds=(seed,))
+    on = simulate_network(net, [p], n_requests=3_000, seeds=(seed,),
+                          sketch_cap=8, window_us=500.0)
+    # the estimators read the event stream but never steer it: every
+    # statistic is bit-identical with the sketch compiled in or out
+    assert np.array_equal(base.throughput, on.throughput)
+    assert np.array_equal(base.delayed_frac, on.delayed_frac)
+    assert np.array_equal(base.branch_throughput, on.branch_throughput)
+    assert base.sketches is None and on.sketches is not None
+    est = on.sketches[0][0]
+    # the ring keeps the most recent N_WINDOWS windows, so the retained
+    # completions are a (possibly partial) suffix of the run
+    assert 0 < est.win_done_count.sum() <= 3_000
+    assert np.all(np.diff(est.window_id) >= 1)
+
+
+_register(
+    "sketch_transparency", _check_sketch_transparency,
+    "policy,mpl,p,seed",
+    [("lru", 4, 0.3, 0), ("fifo", 12, 0.8, 1), ("lru", 12, 0.95, 2)],
+    dict(policy=st.sampled_from(["lru", "fifo"]),
+         mpl=st.sampled_from(MPLS),
+         p=st.floats(0.05, 0.95),
+         seed=st.sampled_from([0, 1, 2])) if HAS_HYP else None,
+)
+
+
+def _check_sketch_transparency_composed(kind, p, flows, seed):
+    if kind == "cluster":
+        from repro.cluster import cluster_network, simulate_cluster as sim
+
+        model = cluster_network("lru", n_shards=2, mpl=16)
+    else:
+        from repro.hierarchy import hierarchy_network
+        from repro.hierarchy.sim import simulate_hierarchy as sim
+
+        model = _tiered_model()
+    base = sim(model, [p], n_requests=3_000, seeds=(seed,),
+               coalesce_flows=flows)
+    on = sim(model, [p], n_requests=3_000, seeds=(seed,),
+             coalesce_flows=flows, sketch_cap=8, window_us=500.0)
+    assert np.array_equal(base.throughput, on.throughput)
+    assert np.array_equal(base.delayed_frac, on.delayed_frac)
+    assert np.array_equal(base.shard_throughput, on.shard_throughput)
+    assert base.sketches is None and on.sketches is not None
+
+
+_register(
+    "sketch_transparency_composed", _check_sketch_transparency_composed,
+    "kind,p,flows,seed",
+    [("cluster", 0.4, 0, 0), ("cluster", 0.8, 4, 1),
+     ("hierarchy", 0.3, 2, 0), ("hierarchy", 0.7, 4, 1)],
+    dict(kind=st.sampled_from(["cluster", "hierarchy"]),
+         p=st.floats(0.1, 0.9),
+         flows=st.sampled_from([0, 2, 4]),
+         seed=st.sampled_from([0, 1])) if HAS_HYP else None,
+)

@@ -1,0 +1,408 @@
+"""Streaming observability: in-kernel sketch estimators, drift detection,
+online profile recovery, and the model-vs-measured residual monitor.
+
+Covers the four layers the streaming stack spans:
+
+* the :mod:`repro.obs.streaming` twin pair (jitted scan vs exact-counting
+  Python oracle) and its accuracy contracts;
+* ``sketch_cap=0`` bit-identity and sketch-on statistical transparency
+  across the closed / open / cluster / hierarchy simulators;
+* the :mod:`repro.obs.drift` detectors and the
+  :mod:`repro.obs.residuals` monitor;
+* the :mod:`repro.obs.profile` recovery layer and its integration with
+  ``slo_forecast`` and the serving :class:`~repro.serving.Engine`.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cache.replay import lru_sweep
+from repro.core import build
+from repro.core.harness import zipf_trace
+from repro.core.simulator import simulate_network
+from repro.latency import slo_forecast
+from repro.obs.drift import Cusum, PageHinkley, cusum_scan, page_hinkley_scan
+from repro.obs.profile import observed_profile
+from repro.obs.residuals import ResidualMonitor
+from repro.obs.streaming import PyStreamSketch, sketch_trace, sketch_trace_py
+
+KEY_SPACE = 256
+THETA = 0.9
+
+
+@pytest.fixture(scope="module")
+def zipf_stream():
+    trace = zipf_trace(6_000, KEY_SPACE, THETA, seed=0)
+    hits, _ = lru_sweep(trace, [32])
+    return trace, np.asarray(hits[0], np.int64)
+
+
+@pytest.fixture(scope="module")
+def twin_estimates(zipf_stream):
+    trace, hits = zipf_stream
+    fast = sketch_trace(trace, hits=hits, sketch_cap=64, window_us=500.0)
+    oracle = sketch_trace_py(trace, hits=hits, sketch_cap=64,
+                             window_us=500.0)
+    return fast, oracle
+
+
+class TestSketchTwins:
+    def test_windowed_counters_bit_equal(self, twin_estimates):
+        fast, oracle = twin_estimates
+        assert np.array_equal(fast.window_id, oracle.window_id)
+        assert np.array_equal(fast.win_done_count, oracle.win_done_count)
+        assert np.array_equal(fast.win_arrival_rate,
+                              oracle.win_arrival_rate)
+        assert np.allclose(fast.win_hit_frac, oracle.win_hit_frac,
+                           equal_nan=True)
+        assert np.allclose(fast.win_done_rate, oracle.win_done_rate)
+        assert fast.key_count == oracle.key_count
+
+    def test_ewma_matches_to_float32(self, twin_estimates):
+        fast, oracle = twin_estimates
+        assert fast.ewma_hit_frac == pytest.approx(oracle.ewma_hit_frac,
+                                                   abs=1e-5)
+
+    def test_count_min_never_underestimates(self, twin_estimates):
+        fast, oracle = twin_estimates
+        probe = np.arange(KEY_SPACE)
+        assert np.all(fast.cm_estimate(probe) >= oracle.cm_estimate(probe))
+
+    def test_spacesaving_topk_recall(self, twin_estimates):
+        fast, oracle = twin_estimates
+        probe = np.arange(KEY_SPACE)
+        truth = oracle.cm_estimate(probe)
+        true_top = set(probe[np.argsort(truth)[::-1][:16]].tolist())
+        got = set(fast.topk(16)[0].tolist())
+        assert len(true_top & got) / 16 >= 0.9
+
+    def test_topk_bounds_bracket_truth(self, twin_estimates):
+        fast, oracle = twin_estimates
+        keys, upper, err = fast.topk()
+        truth = oracle.cm_estimate(keys)
+        assert np.all(upper >= truth)          # stored count: upper bound
+        assert np.all(upper - err <= truth)    # count - err: lower bound
+
+    def test_hits_none_gives_nan_hit_fields(self, zipf_stream):
+        trace, _ = zipf_stream
+        est = sketch_trace(trace[:1_000], sketch_cap=16, window_us=100.0)
+        assert np.isnan(est.ewma_hit_frac)
+        assert np.all(np.isnan(est.win_hit_frac))
+        assert est.win_done_count.sum() == 1_000
+
+    def test_rejects_degenerate_parameters(self):
+        with pytest.raises(ValueError, match="sketch_cap"):
+            sketch_trace(np.arange(4), sketch_cap=0)
+        with pytest.raises(ValueError, match="window_us"):
+            sketch_trace_py(np.arange(4), sketch_cap=4, window_us=0.0)
+
+    def test_delayed_hits_count_as_misses(self):
+        # the sim hooks' convention: a delayed hit rides the miss branch,
+        # so its completion reports is_hit=False, delayed=True
+        sk = PyStreamSketch(8, window_us=100.0)
+        for i in range(10):
+            delayed = i % 2 == 1
+            sk.arrival(float(i))
+            sk.key(i % 2)
+            sk.done(float(i), 0, is_hit=not delayed, delayed=delayed)
+        est = sk.estimates()
+        assert est.win_hit_frac[0] == pytest.approx(0.5)
+        assert est.win_delayed_frac[0] == pytest.approx(0.5)
+
+
+class TestSimulatorIdentity:
+    """sketch_cap=0 compiles nothing; sketch_cap>0 changes no statistic."""
+
+    def test_closed_loop_transparent(self):
+        net = build("lru", disk_us=100.0)
+        base = simulate_network(net, [0.4, 0.8], n_requests=4_000,
+                                seeds=(0,))
+        on = simulate_network(net, [0.4, 0.8], n_requests=4_000, seeds=(0,),
+                              sketch_cap=8, window_us=500.0)
+        assert np.array_equal(base.throughput, on.throughput)
+        assert np.array_equal(base.delayed_frac, on.delayed_frac)
+        assert base.sketches is None and on.sketches is not None
+
+    def test_closed_loop_sketch_consistency(self):
+        net = build("lru", disk_us=100.0)
+        res = simulate_network(net, [0.7], n_requests=6_000, seeds=(0,),
+                               sketch_cap=8, window_us=1_000.0)
+        est = res.sketches[0][0]
+        # every completion lands in exactly one window
+        assert est.win_done_count.sum() == 6_000
+        # full windows see the configured hit ratio
+        full = est.win_done_count > 0.5 * est.win_done_count.max()
+        assert abs(np.nanmean(est.win_hit_frac[full]) - 0.7) < 0.05
+
+    def test_open_loop_transparent(self):
+        net = build("lru", disk_us=100.0)
+        kw = dict(n_requests=3_000, seeds=(0,), arrival_rate=0.02,
+                  max_in_system=256)
+        base = simulate_network(net, [0.6], **kw)
+        on = simulate_network(net, [0.6], sketch_cap=8, window_us=2_000.0,
+                              **kw)
+        assert np.array_equal(base.sojourn_mean, on.sojourn_mean)
+        assert np.array_equal(base.sojourn_p99, on.sojourn_p99)
+        est = on.sketches[0][0]
+        # windowed arrival rate averages to the offered Poisson rate
+        full = est.win_done_count > 0
+        assert est.win_arrival_rate[full].mean() == pytest.approx(
+            0.02, rel=0.25)
+
+    def test_cluster_transparent(self):
+        from repro.cluster import cluster_network, simulate_cluster
+
+        model = cluster_network("lru", n_shards=2, mpl=16)
+        base = simulate_cluster(model, [0.6], n_requests=4_000, seeds=(0,))
+        on = simulate_cluster(model, [0.6], n_requests=4_000, seeds=(0,),
+                              sketch_cap=8, window_us=1_000.0)
+        assert np.array_equal(base.throughput, on.throughput)
+        assert np.array_equal(base.shard_throughput, on.shard_throughput)
+        est = on.sketches[0][0]
+        heat = est.shard_heat(model.branch_shard, model.n_shards)
+        assert heat.shape[1] == model.n_shards
+        assert heat.sum() > 0
+
+    def test_hierarchy_transparent(self):
+        from repro.hierarchy import hierarchy_network
+        from repro.hierarchy.sim import simulate_hierarchy
+
+        model = hierarchy_network("lru", "lru", n_clients=2, n_shards=2,
+                                  mpl=16, disk_us=50.0)
+        base = simulate_hierarchy(model, [0.5], n_requests=4_000,
+                                  seeds=(0,), coalesce_flows=2)
+        on = simulate_hierarchy(model, [0.5], n_requests=4_000, seeds=(0,),
+                                coalesce_flows=2, sketch_cap=8,
+                                window_us=1_000.0)
+        assert np.array_equal(base.throughput, on.throughput)
+        assert np.array_equal(base.delayed_l1_frac, on.delayed_l1_frac)
+        assert on.sketches[0][0].win_done_count.sum() == 4_000
+
+
+class TestDriftDetectors:
+    STEP = np.concatenate([np.full(30, 0.5), np.full(30, 0.3)])
+
+    def test_step_detected_with_bounded_lag(self):
+        for scan in (cusum_scan, page_hinkley_scan):
+            alarms = scan(self.STEP)
+            assert len(alarms) >= 1
+            assert 30 <= alarms[0] <= 38, (scan.__name__, alarms)
+
+    def test_stationary_series_is_silent(self):
+        # slack above the noise scale: deviations must not accumulate
+        rng = np.random.default_rng(0)
+        xs = 0.5 + 0.01 * rng.standard_normal(200)
+        assert len(cusum_scan(xs, k_slack=0.02, h_threshold=0.2)) == 0
+        assert len(page_hinkley_scan(xs, delta_slack=0.02,
+                                     lam_threshold=0.2)) == 0
+
+    def test_incremental_matches_scan(self):
+        det = Cusum()
+        inc = [i for i, x in enumerate(self.STEP) if det.update(float(x))]
+        assert np.array_equal(inc, cusum_scan(self.STEP))
+        det = PageHinkley()
+        inc = [i for i, x in enumerate(self.STEP) if det.update(float(x))]
+        assert np.array_equal(inc, page_hinkley_scan(self.STEP))
+
+    def test_nan_is_ignored(self):
+        det = PageHinkley()
+        xs = self.STEP.copy().astype(float)
+        xs[10] = np.nan
+        assert any(det.update(float(x)) for x in xs)
+        assert det.n_alarms >= 1
+
+    def test_upward_drift_also_fires(self):
+        xs = np.concatenate([np.full(30, 0.3), np.full(30, 0.6)])
+        assert len(cusum_scan(xs)) >= 1
+        assert len(page_hinkley_scan(xs)) >= 1
+
+
+class TestResidualMonitor:
+    def _series(self, net, p, n=30, bias=0.9):
+        x = np.array([net.mva_throughput(p) * bias] * n)
+        return np.full(n, p), x
+
+    def test_constant_model_bias_is_absorbed(self):
+        net = build("lru", disk_us=100.0)
+        p_hats, xs = self._series(net, 0.6, bias=0.85)
+        mon = ResidualMonitor(net, mode="closed")
+        alarms = mon.run(np.arange(len(xs)), p_hats, xs)
+        assert not [a for a in alarms if a.kind == "model-drift"]
+
+    def test_stale_profile_raises_model_drift(self):
+        net = build("lru", disk_us=100.0)
+        # the system moves 0.55 -> 0.85 but the model keeps p=0.55
+        x1 = np.full(20, net.mva_throughput(0.55))
+        x2 = np.full(20, net.mva_throughput(0.85))
+        p_hats = np.full(40, 0.55)
+        mon = ResidualMonitor(net, mode="closed")
+        alarms = mon.run(np.arange(40), p_hats, np.concatenate([x1, x2]))
+        drift = [a for a in alarms if a.kind == "model-drift"]
+        assert drift and 20 <= drift[0].window_id <= 32
+
+    def test_live_profile_stays_quiet_through_shift(self):
+        net = build("lru", disk_us=100.0)
+        p_hats = np.concatenate([np.full(20, 0.55), np.full(20, 0.85)])
+        xs = np.array([net.mva_throughput(p) for p in p_hats])
+        mon = ResidualMonitor(net, mode="closed")
+        alarms = mon.run(np.arange(40), p_hats, xs)
+        assert not [a for a in alarms if a.kind == "model-drift"]
+        # the hit-ratio series itself still flags the phase change
+        assert [a for a in alarms if a.kind == "phase-change"]
+
+    def test_saturation_alarm_latches(self):
+        net = build("lru", disk_us=100.0)
+        mon = ResidualMonitor(net, mode="closed")
+        a1 = mon.observe(0, 0.6, net.mva_throughput(0.6),
+                         saturation_frac=0.2)
+        a2 = mon.observe(1, 0.6, net.mva_throughput(0.6),
+                         saturation_frac=0.2)
+        kinds1 = [a.kind for a in a1]
+        kinds2 = [a.kind for a in a2]
+        assert "sketch-saturation" in kinds1
+        assert "sketch-saturation" not in kinds2  # latched until it clears
+
+    def test_alarm_as_dict_roundtrips(self):
+        net = build("lru", disk_us=100.0)
+        mon = ResidualMonitor(net, mode="closed")
+        alarms = mon.observe(0, 0.6, 0.0, saturation_frac=0.5)
+        d = alarms[0].as_dict()
+        assert d["kind"] == "sketch-saturation" and d["window_id"] == 0
+
+
+class TestObservedProfile:
+    def test_exact_twin_recovers_zipf_masses(self, zipf_stream):
+        trace, _ = zipf_stream
+        oracle = sketch_trace_py(trace, sketch_cap=64, window_us=500.0)
+        prof = observed_profile(oracle, key_space=KEY_SPACE)
+        assert prof.masses.sum() == pytest.approx(1.0)
+        # exact counts -> empirical frequencies of the actual stream
+        counts = np.bincount(trace, minlength=KEY_SPACE)
+        emp = counts / counts.sum()
+        order = np.argsort(emp)[::-1][:16]
+        assert np.allclose(prof.masses[order], emp[order], atol=0.01)
+
+    def test_hit_curve_monotone_and_invertible(self, zipf_stream):
+        trace, _ = zipf_stream
+        est = sketch_trace(trace, sketch_cap=128, window_us=500.0)
+        prof = observed_profile(est, key_space=KEY_SPACE)
+        assert np.all(np.diff(prof.hit_curve) >= -1e-9)
+        lo, hi = prof.p_range()
+        for p in (lo + 0.1 * (hi - lo), 0.5 * (lo + hi)):
+            assert prof.p_of_cap(prof.cap_of_p(p)) == pytest.approx(
+                p, abs=0.02)
+
+    def test_online_curve_tracks_mattson_resweep(self, zipf_stream):
+        trace, _ = zipf_stream
+        est = sketch_trace(trace, sketch_cap=128, window_us=500.0)
+        prof = observed_profile(est, key_space=KEY_SPACE)
+        caps = np.array([32, 64, 128])
+        hits, _ = lru_sweep(trace, caps)
+        warm = len(trace) // 4
+        for i, c in enumerate(caps):
+            true_p = float(np.asarray(hits[i][warm:]).mean())
+            assert abs(prof.p_of_cap(int(c)) - true_p) <= 0.06, (c, true_p)
+
+    def test_forecast_from_estimated_vs_exact_profile(self, zipf_stream):
+        """slo_forecast regression: sizing answers from the sketch-
+        recovered profile agree with the exact-count profile."""
+        trace, _ = zipf_stream
+        fast = sketch_trace(trace, sketch_cap=128, window_us=500.0)
+        oracle = sketch_trace_py(trace, sketch_cap=128, window_us=500.0)
+        p_est = observed_profile(fast, key_space=KEY_SPACE)
+        p_ex = observed_profile(oracle, key_space=KEY_SPACE)
+        net = build("lru", disk_us=100.0)
+        fc_est = slo_forecast(net, arrival_rate=0.05, slo_us=400.0,
+                              profile=p_est)
+        fc_ex = slo_forecast(net, arrival_rate=0.05, slo_us=400.0,
+                             profile=p_ex)
+        assert fc_est.cap_grid is not None and fc_ex.cap_grid is not None
+        assert abs(fc_est.p_star_slo - fc_ex.p_star_slo) <= 0.05
+        # the capacity answer at the SLO optimum agrees within 15%
+        c_est = p_est.cap_of_p(fc_est.p_star_slo)
+        c_ex = p_ex.cap_of_p(fc_ex.p_star_slo)
+        assert abs(c_est - c_ex) / max(c_ex, 1.0) <= 0.15
+
+    def test_profile_restricts_forecast_grid(self, zipf_stream):
+        trace, _ = zipf_stream
+        est = sketch_trace(trace, sketch_cap=128, window_us=500.0)
+        prof = observed_profile(est, key_space=KEY_SPACE)
+        net = build("lru", disk_us=100.0)
+        fc = slo_forecast(net, arrival_rate=0.05, slo_us=400.0,
+                          profile=prof)
+        lo, hi = prof.p_range()
+        assert fc.p_grid[0] == pytest.approx(lo)
+        assert fc.p_grid[-1] <= min(hi, 1.0) + 1e-12
+        assert len(fc.cap_grid) == len(fc.p_grid)
+
+    def test_shard_and_tiered_lift(self, zipf_stream):
+        trace, _ = zipf_stream
+        oracle = sketch_trace_py(trace, sketch_cap=64, window_us=500.0)
+        prof = observed_profile(oracle, key_space=KEY_SPACE)
+        assign = np.arange(KEY_SPACE) % 4
+        sp = prof.shard_profile(assign, n_shards=4)
+        assert sp.n_shards == 4
+        assert np.allclose(np.asarray(sp.weights).sum(), 1.0, atol=1e-6)
+        tp = prof.tiered([8, 16, 32], 64.0, assign, n_shards=4)
+        assert np.all(np.diff(np.asarray(tp.l1_hit)) >= -1e-9)
+
+
+class TestEngineStreaming:
+    @pytest.fixture(scope="class")
+    def served(self):
+        import jax
+
+        from repro.configs.registry import get_config
+        from repro.models import transformer
+        from repro.models.layers import param_values
+        from repro.serving import Engine, ServeConfig
+        from repro.training.data import zipf_request_stream
+
+        cfg = get_config("internlm2-1.8b", reduced=True)
+        params = param_values(
+            transformer.init_params(cfg, jax.random.PRNGKey(0)))
+        eng = Engine(cfg, params, ServeConfig(
+            max_seqs=3, max_seq_len=128, page_size=8, n_pages=32,
+            prefix_capacity=24, max_new_tokens=5, sketch_cap=16,
+            sketch_window_ticks=8))
+        for _, toks in zipf_request_stream(10, n_prefixes=3, prefix_len=16,
+                                           vocab=cfg.vocab, seed=1,
+                                           new_tokens=4):
+            eng.submit(toks)
+        eng.run()
+        return eng
+
+    def test_telemetry_has_streaming_block(self, served):
+        tel = served.telemetry()
+        st = tel["streaming"]
+        assert st["key_count"] > 0
+        assert 0.0 <= st["ewma_hit_frac"] <= 1.0
+        assert len(st["topk_key"]) == len(st["topk_count"])
+        assert isinstance(tel["alarms"], list)
+
+    def test_observed_profile_available(self, served):
+        prof = served.observed_profile()
+        assert prof.masses.sum() == pytest.approx(1.0)
+        assert np.all(np.diff(prof.hit_curve) >= -1e-9)
+
+    def test_forecast_auto_uses_online_profile(self, served):
+        fc = served.forecast_slo(step_us=50.0, prefill_us=200.0,
+                                 arrival_rate=0.01, slo_us=5_000.0)
+        assert fc.cap_grid is not None
+
+    def test_observed_profile_requires_sketch(self):
+        import jax
+
+        from repro.configs.registry import get_config
+        from repro.models import transformer
+        from repro.models.layers import param_values
+        from repro.serving import Engine, ServeConfig
+
+        cfg = get_config("internlm2-1.8b", reduced=True)
+        params = param_values(
+            transformer.init_params(cfg, jax.random.PRNGKey(0)))
+        eng = Engine(cfg, params, ServeConfig(
+            max_seqs=2, max_seq_len=64, page_size=8, n_pages=16,
+            prefix_capacity=8))
+        with pytest.raises(ValueError, match="sketch_cap"):
+            eng.observed_profile()

@@ -131,9 +131,11 @@ REGISTRY: Tuple[TwinPair, ...] = (
         oracle="repro.core.simulator:simulate_network",
         fast_only=("interpret",),
         # the scan simulator keeps the coalescing / open-loop / burst /
-        # tiered-MSHR extensions (and the backend switch that routes here).
+        # tiered-MSHR / streaming-estimator extensions (and the backend
+        # switch that routes here).
         oracle_only=("coalesce_flows", "coalesce_theta", "arrival_rate",
-                     "max_in_system", "burst", "backend", "tiers"),
+                     "max_in_system", "burst", "backend", "tiers",
+                     "sketch_cap", "window_us"),
     ),
     TwinPair(
         name="trace-records",
@@ -143,6 +145,26 @@ REGISTRY: Tuple[TwinPair, ...] = (
         # (n) to report drops; the oracle collector passes its own count.
         fast_only=("n",),
         oracle_only=("n_emitted",),
+    ),
+    TwinPair(
+        name="stream-sketch",
+        fast="repro.obs.streaming:sketch_trace",
+        oracle="repro.obs.streaming:sketch_trace_py",
+        # identical surfaces by design: one jitted lax.scan over the
+        # in-kernel estimators vs the exact-counting PyStreamSketch.
+    ),
+    TwinPair(
+        name="drift-cusum",
+        fast="repro.obs.drift:cusum_scan",
+        oracle="repro.obs.drift:Cusum.__init__",
+        # the scan form additionally takes the series it sweeps
+        fast_only=("xs",),
+    ),
+    TwinPair(
+        name="drift-page-hinkley",
+        fast="repro.obs.drift:page_hinkley_scan",
+        oracle="repro.obs.drift:PageHinkley.__init__",
+        fast_only=("xs",),
     ),
     TwinPair(
         name="mattson-sweep",

@@ -14,12 +14,20 @@ Two rules over ``src/repro``:
     a trace schema whose timestamps don't say their unit is how µs/ns
     bugs get in.
 
+``obs-units`` additionally covers estimator state: fields of
+``repro.obs`` schema classes whose stem marks them as windowed or EWMA
+estimator state (``win``/``window``/``ewma``) must say what they hold —
+a unit suffix, or an ``_id``/``_index``/``_key`` identity suffix.
+
 ``obs-ring-static``
-    Every trace ring buffer must be shape-static under jit: a
-    ``jax.jit``-decorated function that takes a ``trace_cap`` parameter
-    must list it in ``static_argnames`` — a traced ``trace_cap`` would
-    make the ring shapes dynamic (and the ``if trace_cap:`` gating
-    silently truthy on the tracer).
+    Every in-kernel observability buffer must be shape-static under
+    jit: a ``jax.jit``-decorated function that takes any of the
+    :data:`_STATIC_OBS_PARAMS` (``trace_cap``, ``sketch_cap``,
+    ``window_us``) must list it in ``static_argnames`` — a traced
+    capacity would make the ring/sketch shapes dynamic (and ``if
+    trace_cap:`` gating silently truthy on the tracer); a traced
+    ``window_us`` would retrace the tumbling-window arithmetic per
+    value anyway.
 """
 
 from __future__ import annotations
@@ -39,6 +47,13 @@ _REGISTRY_METHODS = {"count", "gauge", "observe"}
 _TIME_STEMS = ("enter", "leave", "parked", "sojourn", "elapsed", "latency",
                "duration", "start", "end", "wall", "compile")
 _TIME_SUFFIXES = ("_ns", "_us", "_ms", "_s")
+# Estimator-state stems: windowed / EWMA fields must say what they hold —
+# a unit suffix, or an identity suffix for ids and sketch keys.
+_ESTIMATOR_STEMS = ("win", "window", "ewma")
+_IDENTITY_SUFFIXES = ("_id", "_index", "_key")
+# In-kernel observability knobs that size compiled buffers (or, for
+# window_us, parameterize shape-adjacent arithmetic): must be static.
+_STATIC_OBS_PARAMS = ("trace_cap", "sketch_cap", "window_us")
 
 
 def _has_unit_suffix(name: str) -> bool:
@@ -103,6 +118,15 @@ def _check_schema_fields(src: SourceFile) -> List[Violation]:
                     f"time-like schema field '{cls.name}.{name}' lacks a "
                     f"time-unit suffix ({', '.join(_TIME_SUFFIXES)})",
                 ))
+            elif stem in _ESTIMATOR_STEMS and not (
+                    _has_unit_suffix(name)
+                    or any(name.endswith(s) for s in _IDENTITY_SUFFIXES)):
+                out.append(Violation(
+                    "obs-units", src.path, stmt.lineno,
+                    f"estimator state field '{cls.name}.{name}' lacks a "
+                    f"unit suffix ({', '.join(UNIT_SUFFIXES)}) or identity "
+                    f"suffix ({', '.join(_IDENTITY_SUFFIXES)})",
+                ))
     return out
 
 
@@ -149,19 +173,22 @@ def _check_ring_static(src: SourceFile) -> List[Violation]:
             continue
         params = {a.arg for a in (node.args.posonlyargs + node.args.args
                                   + node.args.kwonlyargs)}
-        if "trace_cap" not in params:
+        obs_params = [p for p in _STATIC_OBS_PARAMS if p in params]
+        if not obs_params:
             continue
         for dec in node.decorator_list:
             statics = _jit_static_argnames(dec)
             if statics is None:
                 continue
-            if "trace_cap" not in statics:
-                out.append(Violation(
-                    "obs-ring-static", src.path, node.lineno,
-                    f"jit-decorated '{node.name}' takes trace_cap but "
-                    f"does not list it in static_argnames — the trace "
-                    f"ring's shape must be compile-time static",
-                ))
+            for p in obs_params:
+                if p not in statics:
+                    out.append(Violation(
+                        "obs-ring-static", src.path, node.lineno,
+                        f"jit-decorated '{node.name}' takes {p} but does "
+                        f"not list it in static_argnames — in-kernel "
+                        f"observability buffers must be compile-time "
+                        f"static",
+                    ))
     return out
 
 
